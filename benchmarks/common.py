@@ -1,0 +1,38 @@
+"""Shared benchmark utilities."""
+import os
+import subprocess
+import sys
+import time
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+sys.path.insert(0, SRC)
+
+
+def timeit(fn, *args, n: int = 5, warmup: int = 2):
+    """Median wall time of fn(*args) over n runs (after warmup)."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def run_subprocess(code: str, devices: int = 4, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        timeout=timeout,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"subprocess failed:\n{out.stdout}\n{out.stderr}")
+    return out.stdout
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)

@@ -1,0 +1,56 @@
+"""§Perf (manycore cell): paper-faithful queue engine vs the kernel-fused
+register engine — the Table-I "faster backend behind the same interface"
+move applied to the paper's own million-core experiment.
+
+Both engines implement identical latency-insensitive semantics (results are
+bit-identical and K-invariant); the register engine runs each granule's
+K-cycle epoch as one fused kernel with depth-1 elastic-register channels.
+"""
+import time
+
+import jax
+import numpy as np
+
+from .common import emit
+from repro.core.distributed import GridEngine
+from repro.core.fastgrid import RegisterGridEngine
+from repro.hw.systolic import SystolicCell, make_cell_params
+
+
+def bench():
+    rng = np.random.RandomState(0)
+    M, R, C, K = 32, 16, 16, 16
+    A = rng.randn(M, R).astype(np.float32)
+    B = rng.randn(R, C).astype(np.float32)
+    mesh = jax.make_mesh((1, 1), ("gr", "gc"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    qeng = GridEngine(SystolicCell(m_stream=M), R, C, mesh, K=K, capacity=62)
+    qs = qeng.init(jax.random.key(0), make_cell_params(A, B))
+    qs = qeng.run_epochs(qs, 2)
+    t0 = time.perf_counter()
+    qs = jax.block_until_ready(qeng.run_epochs(qs, 8))
+    tq = time.perf_counter() - t0
+
+    reng = RegisterGridEngine(R, C, mesh, K=K, m_stream=M)
+    ep = jax.jit(reng.epoch_fn())
+    rs = ep(ep(reng.init(A, B)))
+    t0 = time.perf_counter()
+    for _ in range(8):
+        rs = ep(rs)
+    jax.block_until_ready(rs.cycle)
+    tr = time.perf_counter() - t0
+
+    # correctness: the fast engine still computes A@B exactly
+    done = reng.run_until_done(reng.init(A, B), 100_000)
+    np.testing.assert_allclose(reng.result(done), A @ B, rtol=1e-5)
+
+    cyc = K * 8 * R * C
+    emit("engine_queue", tq / (K * 8) * 1e6, f"{cyc/tq:.3e} core-cycles/s")
+    emit("engine_register_kernel", tr / (K * 8) * 1e6,
+         f"{cyc/tr:.3e} core-cycles/s, {tq/tr:.0f}x speedup "
+         f"(paper Table I: same interface, faster backend)")
+
+
+if __name__ == "__main__":
+    bench()

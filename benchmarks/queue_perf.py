@@ -1,0 +1,51 @@
+"""Paper §III-B: queue throughput and round-trip latency.
+
+The paper measured 27M packets/s and 213ns RTT for one shm queue on a
+2.8GHz i7.  Our queues are *batched*: one fused XLA op updates N queues, so
+the figure of merit is aggregate packets/s at various batch widths, plus
+the single-queue RTT (push+pop round trip through a jitted cycle).
+"""
+import jax
+import jax.numpy as jnp
+
+from .common import emit, timeit
+from repro.core import queue as qmod
+
+
+def bench():
+    for n in (1, 64, 4096):
+        q = qmod.make_queues(n, 2, 62)
+        pay = jnp.ones((n, 2))
+        pv = jnp.ones((n,), bool)
+        pr = jnp.ones((n,), bool)
+
+        @jax.jit
+        def cycle100(q):
+            def body(q, _):
+                q, _, _ = qmod.cycle(q, pay, pv, pr)
+                return q, None
+            return jax.lax.scan(body, q, None, length=100)[0]
+
+        t = timeit(lambda: jax.block_until_ready(cycle100(q)))
+        pkts = n * 100 / t  # each cycle: one push + one pop per queue
+        emit(f"queue_cycle_n{n}", t / 100 * 1e6,
+             f"{pkts:.3e} pkts/s ({pkts/27e6:.2f}x paper's 27M/s single-queue)")
+
+    # RTT: host push -> drain+fill hop -> host pop (one packet)
+    q1 = qmod.make_queues(1, 2, 62)
+    q2 = qmod.make_queues(1, 2, 62)
+
+    @jax.jit
+    def rtt(q1, q2):
+        q1, _, _ = qmod.cycle(q1, jnp.ones((1, 2)), jnp.ones(1, bool), jnp.zeros(1, bool))
+        q1, slab, cnt = qmod.drain(q1, 1)
+        q2 = qmod.fill(q2, slab, cnt)
+        q2, _, popped = qmod.cycle(q2, jnp.zeros((1, 2)), jnp.zeros(1, bool), jnp.ones(1, bool))
+        return q2, popped
+
+    t = timeit(lambda: jax.block_until_ready(rtt(q1, q2)))
+    emit("queue_rtt", t * 1e6, f"{t*1e9:.0f} ns vs paper 213 ns shm")
+
+
+if __name__ == "__main__":
+    bench()

@@ -1,0 +1,60 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see DESIGN.md §6 for the
+paper-artifact mapping):
+
+    queue_perf         §III-B  queue throughput / RTT
+    backend_speedup    Table I compiled vs interpreted backend
+    engine_speedup     §Perf   queue engine vs kernel-fused register engine
+    task_latency       Table II high-level task duration
+    timing_breakdown   Table IV build/setup/run split
+    build_time         Fig. 13 monolithic vs modular build scaling
+    sim_throughput     Fig. 14 throughput vs design size
+    accuracy_vs_rate   Fig. 15 measurement error vs sync rate (K)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only name]
+"""
+import argparse
+import sys
+import traceback
+
+from . import (
+    accuracy_vs_rate, backend_speedup, build_time, engine_speedup,
+    queue_perf, sim_throughput, task_latency, timing_breakdown,
+)
+
+SUITES = [
+    ("queue_perf", queue_perf.bench),
+    ("backend_speedup", backend_speedup.bench),
+    ("engine_speedup", engine_speedup.bench),
+    ("task_latency", task_latency.bench),
+    ("timing_breakdown", timing_breakdown.bench),
+    ("build_time", build_time.bench),
+    ("sim_throughput", sim_throughput.bench),
+    ("accuracy_vs_rate", accuracy_vs_rate.bench),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in SUITES:
+        if args.only and args.only != name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper Table II: high-level task duration.
+
+The paper's interactive tasks (boot Linux: 1m51s emulated vs 11d projected
+RTL-sim).  Our analogue: the full distributed matrix multiply on the
+compiled modular engine vs the *projected* time on the interpreted
+single-block simulator (projection = cycles x measured interpreted
+cycle time, exactly how the paper projects 11 days).
+"""
+import time
+
+import jax
+import numpy as np
+
+from .common import emit
+from repro.core.distributed import GridEngine
+from repro.hw.systolic import SystolicCell, make_cell_params
+from .backend_speedup import python_reference_sim
+
+
+def bench():
+    rng = np.random.RandomState(0)
+    M, K, N = 32, 16, 16
+    A = rng.randn(M, K).astype(np.float32)
+    B = rng.randn(K, N).astype(np.float32)
+    mesh = jax.make_mesh((1, 1), ("gr", "gc"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    eng = GridEngine(SystolicCell(m_stream=M), K, N, mesh, K=16, capacity=62)
+
+    def done(c):
+        return ((~c.is_south) | (c.y_idx >= M)).all()
+
+    state = eng.init(jax.random.key(0), make_cell_params(A, B))
+    state = eng.run_until(state, done, max_epochs=100_000)  # warmup+compile
+    state = eng.init(jax.random.key(0), make_cell_params(A, B))
+    t0 = time.perf_counter()
+    state = jax.block_until_ready(eng.run_until(state, done, max_epochs=100_000))
+    t_task = time.perf_counter() - t0
+    cycles = int(np.asarray(state.cycle)[0, 0])
+    np.testing.assert_allclose(
+        eng.gather_cells(state).y_buf[K - 1].T, A @ B, rtol=1e-4
+    )
+
+    # projected interpreted time: measure a short interpreted run, extrapolate
+    t0 = time.perf_counter()
+    python_reference_sim(A[:4], B, 40)
+    t_interp_per_cycle = (time.perf_counter() - t0) / 40
+    projected = t_interp_per_cycle * cycles
+
+    emit("task_matmul_compiled", t_task * 1e6,
+         f"{cycles} cycles in {t_task:.2f}s")
+    emit("task_matmul_projected_interpreted", projected * 1e6,
+         f"projected {projected:.1f}s interpreted = {projected/t_task:.0f}x slower "
+         f"(paper Table II: 1m51s vs 11d projected)")
+
+
+if __name__ == "__main__":
+    bench()

@@ -1,0 +1,51 @@
+"""Paper Table IV: timing breakdown of the distributed run.
+
+The paper splits the million-core run into launch (2m30s) / boot (1m20s) /
+simulate (7m04s).  Our analogue for the distributed engine: build (trace +
+compile) / setup (state init + placement) / run, on a 4-device grid.
+"""
+import time
+
+from .common import emit, run_subprocess
+
+CODE = """
+import time, numpy as np, jax
+from repro.core.distributed import GridEngine
+from repro.hw.systolic import SystolicCell, make_cell_params
+rng = np.random.RandomState(0)
+M, Kd, N = 32, 16, 16
+A = rng.randn(M, Kd).astype(np.float32)
+B = rng.randn(Kd, N).astype(np.float32)
+mesh = jax.make_mesh((2, 2), ('gr','gc'),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+eng = GridEngine(SystolicCell(m_stream=M), Kd, N, mesh, K=16, capacity=62)
+t0 = time.perf_counter()
+st = eng.place(eng.init(jax.random.key(0), make_cell_params(A, B)))
+jax.block_until_ready(st.cell.b)
+t_setup = time.perf_counter() - t0
+t0 = time.perf_counter()
+st2 = jax.block_until_ready(eng.run_epochs(st, 1))   # includes compile
+t_build = time.perf_counter() - t0
+t0 = time.perf_counter()
+st3 = jax.block_until_ready(eng.run_epochs(st2, 8))
+t_run = time.perf_counter() - t0
+print(f'BREAKDOWN {t_build:.3f} {t_setup:.3f} {t_run:.3f}')
+"""
+
+
+def bench():
+    out = run_subprocess(CODE, devices=4)
+    for line in out.splitlines():
+        if line.startswith("BREAKDOWN"):
+            _, build, setup, run = line.split()
+            total = float(build) + float(setup) + float(run)
+            emit("breakdown_build", float(build) * 1e6,
+                 f"{float(build)/total*100:.0f}% (paper launch: 23%)")
+            emit("breakdown_setup", float(setup) * 1e6,
+                 f"{float(setup)/total*100:.0f}% (paper boot: 12%)")
+            emit("breakdown_run", float(run) * 1e6,
+                 f"{float(run)/total*100:.0f}% (paper simulate: 65%)")
+
+
+if __name__ == "__main__":
+    bench()

@@ -1,0 +1,66 @@
+"""Million-core experiment, scaled (paper §IV-B).
+
+Simulates a grid of systolic MAC cores computing Y = A @ B through
+latency-insensitive queues — the paper's wafer-scale proof-of-concept —
+using the distributed epoch-batched engine, and demonstrates:
+
+  1. functional exactness vs numpy,
+  2. the paper's accuracy/rate trade-off: measured completion cycles vs
+     epoch length K (the Fig. 15 phenomenon),
+  3. throughput of the engine (cores x cycles / second).
+
+    PYTHONPATH=src python examples/systolic_matmul.py [--rows 16 --cols 16]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core.distributed import GridEngine
+from repro.hw.systolic import SystolicCell, make_cell_params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=16)
+    ap.add_argument("--cols", type=int, default=16)
+    ap.add_argument("--m", type=int, default=32)
+    args = ap.parse_args()
+
+    R, C, M = args.rows, args.cols, args.m
+    rng = np.random.RandomState(0)
+    A = rng.randn(M, R).astype(np.float32)
+    B = rng.randn(R, C).astype(np.float32)
+
+    mesh = jax.make_mesh((1, 1), ("gr", "gc"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    print(f"grid {R}x{C} = {R*C} cores, streaming {M} rows of A")
+
+    def done(cells):
+        return ((~cells.is_south) | (cells.y_idx >= M)).all()
+
+    print(f"{'K':>4} {'epochs':>7} {'cycles':>7} {'err':>10} {'wall_s':>7} {'core-cyc/s':>11}")
+    for K in (1, 4, 16, 62):
+        eng = GridEngine(SystolicCell(m_stream=M), R, C, mesh, K=K)
+        state = eng.init(jax.random.key(0), make_cell_params(A, B))
+        t0 = time.time()
+        state = eng.run_until(state, done, max_epochs=1_000_000)
+        wall = time.time() - t0
+        cells = eng.gather_cells(state)
+        Y = cells.y_buf[R - 1, :, :].T
+        err = np.abs(Y - A @ B).max()
+        cycles = int(np.asarray(state.cycle)[0, 0])
+        rate = R * C * cycles / wall
+        print(f"{K:4d} {int(np.asarray(state.epoch)[0,0]):7d} {cycles:7d} "
+              f"{err:10.2e} {wall:7.2f} {rate:11.3e}")
+    print("\nResults exact for every K; measured cycles grow with K —")
+    print("the paper's Fig. 15 accuracy/rate trade-off, deterministically.")
+
+
+if __name__ == "__main__":
+    main()

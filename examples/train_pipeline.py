@@ -1,0 +1,56 @@
+"""End-to-end training driver: a ~100M-parameter LM for a few hundred steps
+on the full substrate stack (synthetic pipeline -> model -> AdamW ->
+watchdog -> periodic checkpoints), with a mid-run injected crash to
+demonstrate restore-and-continue.
+
+    PYTHONPATH=src python examples/train_pipeline.py [--steps 300]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+from repro.launch.train import train
+from repro.models.config import ModelConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_pipeline")
+    args = ap.parse_args()
+
+    # ~100M-parameter llama-family config (d=512, 8 layers, 32k vocab).
+    import repro.configs.llama3_2_1b as base
+    cfg100m = dataclasses.replace(
+        base.CONFIG,
+        name="llama-100m", n_layers=8, d_model=512, n_heads=8, n_kv_heads=4,
+        head_dim=64, d_ff=2048, vocab=32768, dtype="float32",
+        use_kernels=False,
+    )
+    n = cfg100m.param_count() / 1e6
+    print(f"training {cfg100m.name}: {n:.0f}M params, {args.steps} steps, "
+          f"crash injected at step {args.steps//2}")
+
+    # monkey-patch the registry lookup for this run
+    import repro.launch.train as T
+    T.get_config = lambda a, smoke=True: cfg100m
+
+    out = train(
+        arch="llama-100m", smoke=False, steps=args.steps, batch=args.batch,
+        seq=args.seq, lr=1e-3, ckpt_dir=args.ckpt_dir, ckpt_every=50,
+        fail_at=(args.steps // 2,), log_every=20,
+    )
+    print(f"\nfinal loss {out['final_loss']:.4f} (first {out['losses'][0]:.4f}), "
+          f"restarts={out['restarts']}, steps_run={out['steps_run']}")
+    assert out["final_loss"] < out["losses"][0]
+    print("train_pipeline OK — loss decreased through a crash/restore cycle")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .registry import (
+    ARCH_IDS, ALIASES, SHAPES, SUBQUADRATIC, ENCODER_ONLY,
+    get_config, skip_reason, lm_cells, ShapeSpec,
+)

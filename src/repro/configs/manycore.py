@@ -1,0 +1,24 @@
+"""manycore — the paper's own application (§IV-B).
+
+A 1024x1024 grid of systolic MAC cores (the PicoRV32 array's dataflow)
+computing Y = A @ B for M=1024 streamed rows, distributed over the
+production mesh with the epoch-batched queue engine.  This config is
+exercised by launch/dryrun.py --arch manycore and by the benchmarks;
+it is not part of the 40 LM cells.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ManycoreConfig:
+    grid_rows: int = 1024
+    grid_cols: int = 1024
+    m_stream: int = 1024
+    k_epoch: int = 16          # cycles per epoch (Fig. 15 knob)
+    queue_capacity: int = 62   # paper §III-B
+    payload_words: int = 2
+
+
+CONFIG = ManycoreConfig()
+SMOKE = ManycoreConfig(grid_rows=8, grid_cols=8, m_stream=8, k_epoch=4,
+                       queue_capacity=8)

@@ -1,0 +1,23 @@
+"""repro.core — the paper's primary contribution in JAX.
+
+Switchboard's modular-simulation model (blocks + latency-insensitive
+channels + SPSC queues + unsynchronized scale-out + rate-controlled
+performance measurement), adapted to the TPU execution model.  See
+DESIGN.md §2 for the mechanism-by-mechanism mapping.
+
+  packet      SB packet layout (§III-A)
+  queue       SPSC ring buffers, single-cycle + epoch bulk ops (§III-B)
+  block       ready/valid Block protocol + bridge semantics (§II-A)
+  network     SbNetwork analogue; single-netlist simulator (§III-F)
+  distributed epoch-batched shard_map grid engine (§II, §IV-B)
+  perfmodel   rate control + N_meas error model (§II-C)
+  fastgrid    kernel-fused register-channel engine (§Perf optimized backend)
+  pipeline    LM pipeline parallelism on the same channel semantics
+"""
+from .block import Block
+from .network import Network, NetworkSim, NetworkState
+from .queue import QueueArray, make_queues, DEFAULT_CAPACITY
+from .distributed import GridEngine, GridState
+from .fastgrid import RegisterGridEngine
+from .pipeline import Pipeline
+from . import packet, perfmodel

@@ -1,0 +1,75 @@
+"""Hardware-block protocol (paper §II, Fig. 1).
+
+A *block* is a cycle-stepped state machine whose only connection to the rest
+of the system is a set of latency-insensitive ports carrying ready/valid
+handshakes.  Mirroring the paper's bridge semantics (§II-A):
+
+  * On each cycle the RX bridge presents the front packet of the inbound
+    queue as ``(payload, valid)`` (from the pre-cycle queue snapshot);
+    the block answers with ``ready``; ``valid & ready`` pops the queue.
+  * The TX bridge presents ``ready = ~full`` (pre-cycle snapshot); the block
+    answers with ``(payload, valid)``; ``valid & ready`` pushes.
+
+Because queue snapshots are taken before any block steps, every block in the
+network steps from a consistent view and the whole-network cycle is one pure
+function — this is the "single-netlist" composition.  Bridges therefore add
+exactly one cycle of latency each (N_TX = N_RX = 1), matching the paper's
+observation that bridge latency "cannot generally be better than one cycle".
+
+Blocks declare ``in_ports`` / ``out_ports`` (names) and implement
+``init_state`` and ``step``.  ``step`` must be vmappable: a network
+instantiates a block type many times and steps all instances with one
+compiled body (the paper's "prebuilt simulator per unique block").
+
+Heterogeneous model types (paper Fig. 3 — RTL / FPGA / SW / analog) are all
+just Blocks with different ``step`` implementations; see ``repro.hw``.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Sequence
+
+import jax
+
+PyTree = Any
+
+
+class Block:
+    """Base class for hardware blocks.
+
+    Subclasses define:
+      in_ports:  sequence of input-port names
+      out_ports: sequence of output-port names
+      payload_words / payload_dtype: packet payload signature
+      init_state(key, **inst_params) -> state pytree
+      step(state, rx, tx_ready) -> (state, rx_ready, tx)
+        rx:       {port: (payload (W,), valid ())} — pre-cycle queue fronts
+        tx_ready: {port: ready ()}                — pre-cycle queue fullness
+        rx_ready: {port: ready ()}                — pop enables
+        tx:       {port: (payload (W,), valid ())} — push requests
+    ``clock_divider``: this block's simulated clock runs 1/divider as fast
+    as the network base clock (rate control, §II-C) — the block is only
+    stepped on cycles where ``cycle % divider == 0``.
+    """
+
+    in_ports: Sequence[str] = ()
+    out_ports: Sequence[str] = ()
+    payload_words: int = 1
+    payload_dtype: Any = None  # default float32, set in network
+    clock_divider: int = 1
+
+    # -- required overrides -------------------------------------------------
+    def init_state(self, key: jax.Array) -> PyTree:
+        raise NotImplementedError
+
+    def step(
+        self,
+        state: PyTree,
+        rx: Mapping[str, tuple[jax.Array, jax.Array]],
+        tx_ready: Mapping[str, jax.Array],
+    ) -> tuple[PyTree, Mapping[str, jax.Array], Mapping[str, tuple[jax.Array, jax.Array]]]:
+        raise NotImplementedError
+
+    # -- identity -----------------------------------------------------------
+    @property
+    def type_name(self) -> str:
+        return type(self).__name__

@@ -1,0 +1,317 @@
+"""Network construction — the ``SbNetwork`` analogue (paper §III-F).
+
+Usage mirrors the paper's Listing 5::
+
+    net = Network(payload_words=2)
+    a = net.instantiate(MyBlock(), name="a")
+    b = net.instantiate(MyBlock(), name="b")
+    net.connect(a["out"], b["in"])          # internal channel
+    host_in = net.external_in(a["in"])      # host -> network
+    host_out = net.external_out(b["out"])   # network -> host
+    sim = net.build()                       # "single-netlist" simulator
+    state = sim.init(jax.random.key(0))
+    state = sim.run(state, 1000)            # jitted lax.scan over cycles
+
+Key properties carried over from the paper:
+
+  * **One compiled step per unique block type.**  Instances of the same
+    ``Block`` object are stacked and stepped with a single ``vmap``-ed body;
+    build (trace+compile) cost is O(#unique block types), not O(#instances).
+  * **Channels are SPSC queues** with the §III-B ring semantics; bridges add
+    one cycle each (N_TX = N_RX = 1).
+  * **Rate control** (§II-C): each block type has a ``clock_divider``; a
+    block steps only on cycles divisible by its divider, so simulated-clock
+    ratios are matched *exactly* (deterministic analogue of the paper's
+    sleep-based controller).
+
+``build()`` returns a single-netlist simulator (paper §III-F-2) — the whole
+network as one pure ``step`` function, suitable for ``lax.scan`` and used as
+the cycle-accurate ground truth for accuracy studies (Fig. 15).  The
+distributed epoch-batched engine lives in ``repro.core.distributed``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import queue as qmod
+from .block import Block
+from .struct import pytree_dataclass, static_field
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PortRef:
+    inst_id: int
+    port: str
+    is_output: bool
+
+
+@dataclasses.dataclass
+class Instance:
+    inst_id: int
+    block: Block
+    name: str
+    params: PyTree  # per-instance parameters (un-stacked pytree) or None
+
+    def __getitem__(self, port: str) -> PortRef:
+        if port in self.block.out_ports:
+            return PortRef(self.inst_id, port, True)
+        if port in self.block.in_ports:
+            return PortRef(self.inst_id, port, False)
+        raise KeyError(f"{self.block.type_name} has no port {port!r}")
+
+
+@pytree_dataclass
+class NetworkState:
+    queues: qmod.QueueArray
+    block_states: tuple[PyTree, ...]  # stacked per block group
+    cycle: jax.Array  # () int32
+    push_count: jax.Array  # (n_channels,) int32 — handshakes, for perf stats
+    pop_count: jax.Array  # (n_channels,) int32
+
+
+class Network:
+    """Builder: instantiate blocks, wire channels, produce a simulator."""
+
+    def __init__(
+        self,
+        payload_words: int = 2,
+        dtype: Any = jnp.float32,
+        capacity: int = qmod.DEFAULT_CAPACITY,
+    ):
+        self.payload_words = payload_words
+        self.dtype = dtype
+        self.capacity = capacity
+        self._instances: list[Instance] = []
+        self._connections: list[tuple[PortRef, PortRef]] = []
+        self._external_in: dict[str, PortRef] = {}
+        self._external_out: dict[str, PortRef] = {}
+
+    # -- construction API ---------------------------------------------------
+    def instantiate(self, block: Block, name: str | None = None, params: PyTree = None) -> Instance:
+        inst = Instance(len(self._instances), block, name or f"i{len(self._instances)}", params)
+        self._instances.append(inst)
+        return inst
+
+    def connect(self, tx: PortRef, rx: PortRef) -> None:
+        if not tx.is_output or rx.is_output:
+            raise ValueError("connect(tx, rx) needs an output then an input port")
+        self._connections.append((tx, rx))
+
+    def external_in(self, rx: PortRef, name: str | None = None) -> str:
+        """Expose an input port to the host; returns the external-port name."""
+        name = name or f"ext_in{len(self._external_in)}"
+        self._external_in[name] = rx
+        return name
+
+    def external_out(self, tx: PortRef, name: str | None = None) -> str:
+        name = name or f"ext_out{len(self._external_out)}"
+        self._external_out[name] = tx
+        return name
+
+    # -- build ---------------------------------------------------------------
+    def build(self) -> "NetworkSim":
+        return NetworkSim(self)
+
+
+class NetworkSim:
+    """Single-netlist simulator for a built Network.
+
+    The step function is pure; ``run`` wraps it in ``jax.jit(lax.scan)``.
+    """
+
+    def __init__(self, net: Network):
+        self.net = net
+        insts = net._instances
+
+        # Group instances by block object identity (one group per unique
+        # "prebuilt simulator").
+        groups: dict[int, list[Instance]] = {}
+        order: list[int] = []
+        for inst in insts:
+            key = id(inst.block)
+            if key not in groups:
+                groups[key] = []
+                order.append(key)
+            groups[key].append(inst)
+        self.groups: list[list[Instance]] = [groups[k] for k in order]
+        self.group_blocks: list[Block] = [g[0].block for g in self.groups]
+
+        # Channel table. Two sentinel channels:
+        #   0: NULL_RX — never written, reads always invalid.
+        #   1: NULL_TX — auto-drained every cycle, writes always ready.
+        self.NULL_RX, self.NULL_TX = 0, 1
+        n_channels = 2
+        chan_of_tx: dict[tuple[int, str], int] = {}
+        chan_of_rx: dict[tuple[int, str], int] = {}
+        for tx, rx in net._connections:
+            cid = n_channels
+            n_channels += 1
+            if (tx.inst_id, tx.port) in chan_of_tx:
+                raise ValueError(f"output port {tx} connected twice (SPSC)")
+            if (rx.inst_id, rx.port) in chan_of_rx:
+                raise ValueError(f"input port {rx} connected twice (SPSC)")
+            chan_of_tx[(tx.inst_id, tx.port)] = cid
+            chan_of_rx[(rx.inst_id, rx.port)] = cid
+        self.ext_in_chan: dict[str, int] = {}
+        for name, rx in net._external_in.items():
+            cid = n_channels
+            n_channels += 1
+            chan_of_rx[(rx.inst_id, rx.port)] = cid
+            self.ext_in_chan[name] = cid
+        self.ext_out_chan: dict[str, int] = {}
+        for name, tx in net._external_out.items():
+            cid = n_channels
+            n_channels += 1
+            chan_of_tx[(tx.inst_id, tx.port)] = cid
+            self.ext_out_chan[name] = cid
+        self.n_channels = n_channels
+
+        # Per-group port->channel index arrays.
+        self.rx_idx: list[np.ndarray] = []  # (n_inst, n_in)
+        self.tx_idx: list[np.ndarray] = []  # (n_inst, n_out)
+        for g in self.groups:
+            blk = g[0].block
+            rxm = np.full((len(g), len(blk.in_ports)), self.NULL_RX, np.int32)
+            txm = np.full((len(g), len(blk.out_ports)), self.NULL_TX, np.int32)
+            for i, inst in enumerate(g):
+                for p, port in enumerate(blk.in_ports):
+                    rxm[i, p] = chan_of_rx.get((inst.inst_id, port), self.NULL_RX)
+                for p, port in enumerate(blk.out_ports):
+                    txm[i, p] = chan_of_tx.get((inst.inst_id, port), self.NULL_TX)
+            self.rx_idx.append(rxm)
+            self.tx_idx.append(txm)
+
+    # -- state ---------------------------------------------------------------
+    def init(self, key: jax.Array) -> NetworkState:
+        states = []
+        for g, blk in zip(self.groups, self.group_blocks):
+            keys = jax.random.split(jax.random.fold_in(key, id(blk) % (2**31)), len(g))
+            if any(inst.params is not None for inst in g):
+                params = jax.tree.map(lambda *xs: jnp.stack(xs), *[inst.params for inst in g])
+                st = jax.vmap(blk.init_state)(keys, params)
+            else:
+                st = jax.vmap(blk.init_state)(keys)
+            states.append(st)
+        queues = qmod.make_queues(
+            self.n_channels, self.net.payload_words, self.net.capacity, self.net.dtype
+        )
+        zero = jnp.zeros((self.n_channels,), jnp.int32)
+        return NetworkState(
+            queues=queues,
+            block_states=tuple(states),
+            cycle=jnp.zeros((), jnp.int32),
+            push_count=zero,
+            pop_count=zero,
+        )
+
+    # -- one network cycle ----------------------------------------------------
+    def step(self, state: NetworkState) -> NetworkState:
+        q = state.queues
+        fronts, valids = qmod.peek(q)  # (N,W), (N,)
+        readies = ~qmod.full(q)  # (N,)
+        # Sentinels: NULL_RX never valid; NULL_TX always ready.
+        valids = valids.at[self.NULL_RX].set(False)
+        readies = readies.at[self.NULL_TX].set(True)
+
+        push_payload = jnp.zeros((self.n_channels, self.net.payload_words), self.net.dtype)
+        push_valid = jnp.zeros((self.n_channels,), bool)
+        pop_ready = jnp.zeros((self.n_channels,), bool)
+
+        new_states = []
+        for gi, (g, blk) in enumerate(zip(self.groups, self.group_blocks)):
+            rxm, txm = self.rx_idx[gi], self.tx_idx[gi]
+            rx = {
+                port: (fronts[rxm[:, p]], valids[rxm[:, p]])
+                for p, port in enumerate(blk.in_ports)
+            }
+            tx_ready = {port: readies[txm[:, p]] for p, port in enumerate(blk.out_ports)}
+            st = state.block_states[gi]
+            new_st, rx_ready, tx = jax.vmap(blk.step)(st, rx, tx_ready)
+
+            if blk.clock_divider > 1:
+                en = (state.cycle % blk.clock_divider) == 0
+                new_st = jax.tree.map(lambda n, o: jnp.where(en, n, o), new_st, st)
+                rx_ready = {k: v & en for k, v in rx_ready.items()}
+                tx = {k: (p, v & en) for k, (p, v) in tx.items()}
+            new_states.append(new_st)
+
+            for p, port in enumerate(blk.in_ports):
+                pop_ready = pop_ready.at[rxm[:, p]].max(rx_ready[port])
+            for p, port in enumerate(blk.out_ports):
+                pay, val = tx[port]
+                push_payload = push_payload.at[txm[:, p]].set(
+                    pay.astype(self.net.dtype), mode="drop"
+                )
+                push_valid = push_valid.at[txm[:, p]].max(val)
+
+        # Sentinel writes are dropped: never push to NULL_TX's storage, and
+        # NULL_RX is never popped.
+        push_valid = push_valid.at[self.NULL_TX].set(False)
+        pop_ready = pop_ready.at[self.NULL_RX].set(False)
+
+        q2, did_push, did_pop = qmod.cycle(q, push_payload, push_valid, pop_ready)
+        return NetworkState(
+            queues=q2,
+            block_states=tuple(new_states),
+            cycle=state.cycle + 1,
+            push_count=state.push_count + did_push.astype(jnp.int32),
+            pop_count=state.pop_count + did_pop.astype(jnp.int32),
+        )
+
+    def run(self, state: NetworkState, n_cycles: int) -> NetworkState:
+        """Advance ``n_cycles`` with a jitted scan."""
+        return _run_scan(self, state, n_cycles)
+
+    # -- host-side external port access (PySbTx / PySbRx analogue) -----------
+    def push_external(self, state: NetworkState, name: str, payload) -> tuple[NetworkState, jax.Array]:
+        cid = self.ext_in_chan[name]
+        q = state.queues
+        pp = jnp.zeros((self.n_channels, self.net.payload_words), self.net.dtype)
+        pp = pp.at[cid].set(jnp.asarray(payload, self.net.dtype))
+        pv = jnp.zeros((self.n_channels,), bool).at[cid].set(True)
+        pr = jnp.zeros((self.n_channels,), bool)
+        q2, did_push, _ = qmod.cycle(q, pp, pv, pr)
+        return state.replace(queues=q2), did_push[cid]
+
+    def pop_external(self, state: NetworkState, name: str):
+        cid = self.ext_out_chan[name]
+        q = state.queues
+        fronts, valids = qmod.peek(q)
+        pr = jnp.zeros((self.n_channels,), bool).at[cid].set(True)
+        pp = jnp.zeros((self.n_channels, self.net.payload_words), self.net.dtype)
+        pv = jnp.zeros((self.n_channels,), bool)
+        q2, _, did_pop = qmod.cycle(q, pp, pv, pr)
+        return state.replace(queues=q2), fronts[cid], did_pop[cid]
+
+    def group_state(self, state: NetworkState, inst: Instance):
+        """Extract one instance's (unstacked) state from the network state."""
+        for gi, g in enumerate(self.groups):
+            for i, cand in enumerate(g):
+                if cand.inst_id == inst.inst_id:
+                    return jax.tree.map(lambda x: x[i], state.block_states[gi])
+        raise KeyError(inst.name)
+
+
+def _run_scan_impl(sim: NetworkSim, state: NetworkState, n_cycles: int) -> NetworkState:
+    def body(st, _):
+        return sim.step(st), None
+
+    out, _ = jax.lax.scan(body, state, None, length=n_cycles)
+    return out
+
+
+_jitted_cache: dict[tuple[int, int], Callable] = {}
+
+
+def _run_scan(sim: NetworkSim, state: NetworkState, n_cycles: int) -> NetworkState:
+    key = (id(sim), n_cycles)
+    if key not in _jitted_cache:
+        _jitted_cache[key] = jax.jit(lambda st: _run_scan_impl(sim, st, n_cycles))
+    return _jitted_cache[key](state)

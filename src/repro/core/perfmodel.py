@@ -1,0 +1,84 @@
+"""Performance-measurement model (paper §II-C) and rate control.
+
+The paper measures performance *approximately* in an unsynchronized modular
+simulation by (a) matching wall-clock rate ratios to simulated-clock rate
+ratios, and (b) keeping wall rates low enough that inter-simulator latency
+T_comm is negligible:
+
+    N_meas = N * (F_A_wall / F_B_wall)
+           + 2 * T_comm * F_A_wall
+           + (N_RX + N_TX) * (1 + F_A_wall / F_B_wall)
+
+In our bulk-synchronous adaptation, rate control is **deterministic**: block
+i is stepped on cycles divisible by ``divider_i``, so
+``F_i_sim = F_base / divider_i`` holds *exactly* (the paper's sleep-based
+controller only achieves this in expectation).  The T_comm nonideality maps
+to the epoch length K: a packet crossing a granule boundary waits up to K
+cycles, so for a round trip ``T_comm ≈ K / F_wall`` and the error term
+``2*T_comm*F_A_wall`` becomes ``≈ 2*K`` cycles per boundary crossing — a
+*bound*, not a distribution.  ``benchmarks/accuracy_vs_rate.py`` sweeps K to
+reproduce Fig. 15.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+
+def n_meas_ideal(n_cycles: float, f_a_sim: float, f_b_sim: float) -> float:
+    """Ideal measured processing delay (cycles of A's clock)."""
+    return n_cycles * f_a_sim / f_b_sim
+
+
+def n_meas_actual(
+    n_cycles: float,
+    f_a_wall: float,
+    f_b_wall: float,
+    t_comm: float,
+    n_rx: int = 1,
+    n_tx: int = 1,
+) -> float:
+    """Paper §II-C equation for the *observed* processing delay."""
+    ratio = f_a_wall / f_b_wall
+    return n_cycles * ratio + 2.0 * t_comm * f_a_wall + (n_rx + n_tx) * (1.0 + ratio)
+
+
+def max_wall_rate(n_meas_ideal_cycles: float, t_comm: float, rel_err: float = 0.05) -> float:
+    """Largest F_A_wall for which the T_comm term stays under ``rel_err``.
+
+    From F_A_wall << N_ideal / (2*T_comm): we return the rate at which the
+    communication term equals ``rel_err * N_ideal``.
+    """
+    return rel_err * n_meas_ideal_cycles / (2.0 * t_comm)
+
+
+def bsp_error_bound(k_epoch: int, boundary_crossings: int, n_ideal_cycles: float) -> float:
+    """Deterministic relative-error bound for epoch-batched simulation.
+
+    Each granule-boundary crossing on the measured path adds at most
+    ``k_epoch`` cycles of waiting (the packet arrives just after an
+    exchange); backpressure can reflect it once more, hence the factor 2
+    (the paper's 2*T_comm term).
+    """
+    return 2.0 * k_epoch * boundary_crossings / max(n_ideal_cycles, 1.0)
+
+
+def dividers_for_rates(f_sims: Sequence[float]) -> list[int]:
+    """Clock dividers that realize simulated-frequency ratios exactly.
+
+    Given per-block simulated frequencies, returns integer dividers
+    ``d_i`` with ``F_i = F_base / d_i`` where ``F_base = lcm-normalized``.
+    Frequencies must be rationally related; we scale to integers first.
+    """
+    if not f_sims:
+        return []
+    # Scale to integers (handle floats like 2.5 GHz by rationalizing).
+    scaled = [int(round(f * 1_000_000)) for f in f_sims]
+    g = 0
+    for s in scaled:
+        g = math.gcd(g, s)
+    units = [s // g for s in scaled]
+    l = 1
+    for u in units:
+        l = l * u // math.gcd(l, u)
+    return [l // u for u in units]

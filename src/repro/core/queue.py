@@ -1,0 +1,189 @@
+"""SPSC queues as functional ring buffers (paper §III-B).
+
+The paper's queue is a 4KB page: 4B head (next write), 4B tail (next read),
+and 62 slots of 64B packets.  Semantics reproduced exactly:
+
+  * write: ``next_head = (head+1) % capacity``; FULL if ``next_head == tail``;
+    otherwise write slot ``head`` and advance.
+  * read:  EMPTY if ``tail == head``; otherwise read slot ``tail`` and advance.
+
+so a queue of capacity C holds at most C-1 packets — property-tested against
+a Python deque oracle in ``tests/test_queue.py``.
+
+The paper's *memory* optimizations (cached head/tail, separate cache lines,
+acquire/release) are host-CPU coherence tricks with no TPU analogue; their
+role — avoiding synchronization traffic on every packet — is played here by
+*epoch batching*: queue state lives in device memory and producer/consumer
+exchange head/tail information once per epoch, not per packet (DESIGN.md §2).
+
+All operations are masked and batched: a ``QueueArray`` stores N queues with
+stacked buffers so that a whole network's channels update in a handful of
+fused XLA ops (the TPU-native equivalent of "queues are fast").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .struct import pytree_dataclass, static_field
+
+# Paper default: 62 packet slots per queue (4KB page / 64B packets).
+DEFAULT_CAPACITY = 62
+
+
+@pytree_dataclass
+class QueueArray:
+    """``n`` SPSC ring buffers with a shared capacity and payload width.
+
+    buf:  (n, capacity, payload_words) payload storage
+    head: (n,) int32 — next slot to write
+    tail: (n,) int32 — next slot to read
+    """
+
+    buf: jax.Array
+    head: jax.Array
+    tail: jax.Array
+    capacity: int = static_field(default=DEFAULT_CAPACITY)
+
+    @property
+    def n(self) -> int:
+        return self.buf.shape[0]
+
+    @property
+    def payload_words(self) -> int:
+        return self.buf.shape[2]
+
+
+def make_queues(
+    n: int,
+    payload_words: int,
+    capacity: int = DEFAULT_CAPACITY,
+    dtype=jnp.float32,
+) -> QueueArray:
+    return QueueArray(
+        buf=jnp.zeros((n, capacity, payload_words), dtype=dtype),
+        head=jnp.zeros((n,), dtype=jnp.int32),
+        tail=jnp.zeros((n,), dtype=jnp.int32),
+        capacity=capacity,
+    )
+
+
+# --------------------------------------------------------------------------
+# Occupancy queries (pre-cycle snapshot reads).
+# --------------------------------------------------------------------------
+
+def size(q: QueueArray) -> jax.Array:
+    """(n,) number of packets currently enqueued."""
+    return (q.head - q.tail) % q.capacity
+
+
+def free(q: QueueArray) -> jax.Array:
+    """(n,) number of packets that can still be pushed (capacity-1 max)."""
+    return (q.capacity - 1) - size(q)
+
+
+def empty(q: QueueArray) -> jax.Array:
+    return q.head == q.tail
+
+
+def full(q: QueueArray) -> jax.Array:
+    return (q.head + 1) % q.capacity == q.tail
+
+
+def peek(q: QueueArray) -> tuple[jax.Array, jax.Array]:
+    """Front packet of every queue: ((n, W) payload, (n,) valid)."""
+    payload = jnp.take_along_axis(q.buf, q.tail[:, None, None], axis=1)[:, 0, :]
+    return payload, ~empty(q)
+
+
+# --------------------------------------------------------------------------
+# Single-cycle handshake update (paper §II-A bridge semantics).
+# --------------------------------------------------------------------------
+
+def _push_one(buf, head, payload, do_push):
+    """Write ``payload`` at slot ``head`` of one queue's buffer if do_push."""
+    cur = jax.lax.dynamic_index_in_dim(buf, head, axis=0, keepdims=False)
+    row = jnp.where(do_push, payload, cur)
+    return jax.lax.dynamic_update_index_in_dim(buf, row, head, axis=0)
+
+
+def cycle(
+    q: QueueArray,
+    push_payload: jax.Array,
+    push_valid: jax.Array,
+    pop_ready: jax.Array,
+) -> tuple[QueueArray, jax.Array, jax.Array]:
+    """Apply one simulation cycle of handshakes to all queues at once.
+
+    Per queue: the producer drives ``(push_payload, push_valid)`` and sees
+    ``ready = ~full`` (pre-cycle); the consumer sees ``(front, ~empty)``
+    (pre-cycle) and drives ``pop_ready``.  Both handshakes may fire in the
+    same cycle — SPSC push touches ``head``, pop touches ``tail``, so they
+    commute, exactly as in the shared-memory implementation.
+
+    Returns (new_queues, did_push, did_pop).
+    """
+    do_push = push_valid & ~full(q)
+    do_pop = pop_ready & ~empty(q)
+
+    buf = jax.vmap(_push_one)(q.buf, q.head, push_payload, do_push)
+    head = jnp.where(do_push, (q.head + 1) % q.capacity, q.head)
+    tail = jnp.where(do_pop, (q.tail + 1) % q.capacity, q.tail)
+    return q.replace(buf=buf, head=head, tail=tail), do_push, do_pop
+
+
+# --------------------------------------------------------------------------
+# Epoch (bulk) operations — used by the distributed exchange. These move up
+# to ``max_n`` packets in one fused op, amortizing inter-device traffic over
+# many packets (the paper's "queues are unlikely to be a bottleneck" claim,
+# restated for ICI).
+# --------------------------------------------------------------------------
+
+def drain(q: QueueArray, max_n: int, limit: jax.Array | None = None):
+    """Pop up to ``max_n`` packets from each queue.
+
+    limit: optional (n,) per-queue cap (credit count from the receiver).
+    Returns (new_queues, payloads (n, max_n, W), count (n,)).
+    Slots beyond ``count`` contain stale data; consumers must mask by count.
+    """
+    n_avail = size(q)
+    count = jnp.minimum(n_avail, max_n).astype(jnp.int32)
+    if limit is not None:
+        count = jnp.minimum(count, limit.astype(jnp.int32))
+    offs = jnp.arange(max_n, dtype=jnp.int32)  # (max_n,)
+    idx = (q.tail[:, None] + offs[None, :]) % q.capacity  # (n, max_n)
+    payloads = jnp.take_along_axis(q.buf, idx[:, :, None], axis=1)  # (n,max_n,W)
+    tail = (q.tail + count) % q.capacity
+    return q.replace(tail=tail), payloads, count
+
+
+def _fill_one(buf, head, payloads, count, capacity):
+    """Push ``count`` rows of ``payloads`` into one queue at ``head``."""
+    max_n = payloads.shape[0]
+    offs = jnp.arange(max_n, dtype=jnp.int32)
+    idx = (head + offs) % capacity  # (max_n,)
+    mask = offs < count
+    cur = buf[idx]  # gather (max_n, W)
+    rows = jnp.where(mask[:, None], payloads, cur)
+    return buf.at[idx].set(rows, mode="promise_in_bounds", unique_indices=max_n <= capacity)
+
+
+def fill(q: QueueArray, payloads: jax.Array, count: jax.Array) -> QueueArray:
+    """Push ``count[i]`` packets from ``payloads[i]`` into queue i.
+
+    Caller must guarantee ``count <= free(q)`` (the credit protocol in
+    ``distributed.py`` does).  Counts are clamped defensively anyway.
+    """
+    max_n = payloads.shape[1]
+    if max_n > q.capacity - 1:
+        # A wrap-around of the scatter index window could alias masked
+        # (write-back) slots onto real writes, whose ordering is unspecified.
+        raise ValueError(
+            f"fill: max_n={max_n} must be <= capacity-1={q.capacity - 1}"
+        )
+    count = jnp.minimum(count.astype(jnp.int32), free(q))
+    buf = jax.vmap(lambda b, h, p, c: _fill_one(b, h, p, c, q.capacity))(
+        q.buf, q.head, payloads, count
+    )
+    head = (q.head + count) % q.capacity
+    return q.replace(buf=buf, head=head)

@@ -1,0 +1,65 @@
+"""Minimal pytree-dataclass helper (flax.struct-like, zero deps).
+
+Every core data structure (queues, block states, network state) is a frozen
+dataclass registered as a JAX pytree so it can flow through jit / scan /
+vmap / shard_map without ceremony.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, TypeVar
+
+import jax
+
+_T = TypeVar("_T")
+
+
+def pytree_dataclass(cls: type[_T]) -> type[_T]:
+    """Decorator: freeze ``cls`` and register it as a JAX pytree node.
+
+    All fields are pytree children unless annotated via
+    ``field(metadata={'static': True})``, in which case they are hashable
+    aux data (useful for shapes, port maps, python ints).
+    """
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    fields = dataclasses.fields(cls)
+    data_names = [f.name for f in fields if not f.metadata.get("static", False)]
+    static_names = [f.name for f in fields if f.metadata.get("static", False)]
+
+    def flatten(obj):
+        data = tuple(getattr(obj, n) for n in data_names)
+        static = tuple(getattr(obj, n) for n in static_names)
+        return data, static
+
+    def flatten_with_keys(obj):
+        data = tuple(
+            (jax.tree_util.GetAttrKey(n), getattr(obj, n)) for n in data_names
+        )
+        static = tuple(getattr(obj, n) for n in static_names)
+        return data, static
+
+    def unflatten(static, data):
+        kwargs = dict(zip(data_names, data))
+        kwargs.update(dict(zip(static_names, static)))
+        return cls(**kwargs)
+
+    jax.tree_util.register_pytree_with_keys(cls, flatten_with_keys, unflatten, flatten)
+
+    def replace(self, **kwargs):
+        return dataclasses.replace(self, **kwargs)
+
+    cls.replace = replace  # type: ignore[attr-defined]
+    return cls
+
+
+def static_field(**kwargs: Any) -> Any:
+    """A dataclass field treated as static (pytree aux data)."""
+    metadata = dict(kwargs.pop("metadata", {}))
+    metadata["static"] = True
+    return dataclasses.field(metadata=metadata, **kwargs)
+
+
+def field(default: Any = dataclasses.MISSING, *, default_factory: Any = dataclasses.MISSING) -> Any:
+    if default_factory is not dataclasses.MISSING:
+        return dataclasses.field(default_factory=default_factory)
+    return dataclasses.field(default=default)

@@ -1,0 +1,9 @@
+"""Hardware-block library: the paper's application blocks, modeled in JAX.
+
+Heterogeneous model types (paper Fig. 3) all implement the same Block
+protocol and interoperate through queues: ``systolic.SystolicCell`` is the
+cycle-accurate "RTL-like" MAC core (the million-core experiment's unit
+cell, §IV-B); the functional "SW-model" DRAM and the piecewise-linear
+"SPICE" block live in examples/heterogeneous_soc.py (§IV-A analogue).
+"""
+from .systolic import SystolicCell, SystolicParams, make_systolic_network, collect_result

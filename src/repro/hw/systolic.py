@@ -1,0 +1,209 @@
+"""Systolic matrix-multiply core grid — the million-core experiment (§IV-B).
+
+The paper's flagship run simulates a 1024×1024 grid of RISC-V cores computing
+``Y = A @ B``: each core stores one element of B, A-elements stream in from
+the west and move east, partial sums flow north→south, rows of Y appear at
+the south edge (paper Fig. 12).  We model the *unit cell* as a
+latency-insensitive MAC core:
+
+    fire  = a_valid & psum_valid & east_ready & south_ready
+    on fire: emit a eastward, emit (psum + a*b) southward
+
+Because every channel is flow-controlled there is **no wavefront skew
+logic** — ordering is enforced entirely by handshakes, which is exactly the
+paper's argument for latency-insensitive design (§II-D).
+
+Edge behaviour is folded into the cell via per-instance flags so the grid is
+perfectly uniform (one block type ⇒ one prebuilt simulator ⇒ one vmapped
+step at any scale):
+
+  * ``is_west``:  synthesize the A stream from a local buffer instead of the
+    west port (the paper's stimulus enters at the west edge).
+  * ``is_north``: synthesize ``psum = 0`` (always valid).
+  * ``is_south``: collect outputs into a local result buffer (always ready) —
+    the south-edge "sink".
+  * ``is_east``:  drop the eastward output (always ready).
+
+Packet payload: 2 words — [value, tag] where tag is the A-row index ``m``
+(used by tests to assert in-order delivery).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.block import Block
+from ..core.network import Network
+from ..core.struct import pytree_dataclass
+
+PAYLOAD_WORDS = 2  # [value, tag]
+
+
+@pytree_dataclass
+class CellState:
+    b: jax.Array        # () stationary B element
+    is_west: jax.Array  # () bool
+    is_north: jax.Array
+    is_south: jax.Array
+    is_east: jax.Array
+    a_buf: jax.Array    # (M,) A-stream source (west cells), zeros elsewhere
+    a_idx: jax.Array    # () int32 next stream element
+    y_buf: jax.Array    # (M,) collected outputs (south cells)
+    y_idx: jax.Array    # () int32
+    fires: jax.Array    # () int32 — handshake counter (perf stats)
+
+
+@pytree_dataclass
+class SystolicParams:
+    """Per-instance parameters, stacked by the network builder."""
+
+    b: jax.Array
+    is_west: jax.Array
+    is_north: jax.Array
+    is_south: jax.Array
+    is_east: jax.Array
+    a_buf: jax.Array  # (M,)
+
+
+class SystolicCell(Block):
+    in_ports = ("w_in", "n_in")
+    out_ports = ("e_out", "s_out")
+    payload_words = PAYLOAD_WORDS
+
+    def __init__(self, m_stream: int):
+        self.m_stream = int(m_stream)  # #A-rows streamed through the array
+
+    def init_state(self, key: jax.Array, params: SystolicParams | None = None) -> CellState:
+        if params is None:
+            raise ValueError("SystolicCell requires per-instance params")
+        return CellState(
+            b=params.b,
+            is_west=params.is_west,
+            is_north=params.is_north,
+            is_south=params.is_south,
+            is_east=params.is_east,
+            a_buf=params.a_buf,
+            a_idx=jnp.zeros((), jnp.int32),
+            y_buf=jnp.zeros((self.m_stream,), jnp.float32),
+            y_idx=jnp.zeros((), jnp.int32),
+            fires=jnp.zeros((), jnp.int32),
+        )
+
+    def step(self, state: CellState, rx, tx_ready):
+        (w_pay, w_valid) = rx["w_in"]
+        (n_pay, n_valid) = rx["n_in"]
+        e_ready = tx_ready["e_out"]
+        s_ready = tx_ready["s_out"]
+
+        # Effective inputs after edge synthesis.
+        stream_left = state.a_idx < self.m_stream
+        a_val = jnp.where(state.is_west, state.a_buf[state.a_idx % self.m_stream], w_pay[0])
+        a_tag = jnp.where(state.is_west, state.a_idx.astype(jnp.float32), w_pay[1])
+        a_valid = jnp.where(state.is_west, stream_left, w_valid)
+        psum = jnp.where(state.is_north, 0.0, n_pay[0])
+        psum_valid = jnp.where(state.is_north, True, n_valid)
+
+        e_rdy = state.is_east | e_ready
+        s_rdy = state.is_south | s_ready
+
+        fire = a_valid & psum_valid & e_rdy & s_rdy
+        y = psum + a_val * state.b
+
+        # Handshakes back to queues (only for non-synthesized ports).
+        rx_ready = {
+            "w_in": fire & ~state.is_west,
+            "n_in": fire & ~state.is_north,
+        }
+        tx = {
+            "e_out": (jnp.stack([a_val, a_tag]), fire & ~state.is_east),
+            "s_out": (jnp.stack([y, a_tag]), fire & ~state.is_south),
+        }
+
+        collect = fire & state.is_south
+        new_state = state.replace(
+            a_idx=state.a_idx + (fire & state.is_west).astype(jnp.int32),
+            y_buf=jnp.where(
+                collect,
+                state.y_buf.at[state.y_idx % self.m_stream].set(y),
+                state.y_buf,
+            ),
+            y_idx=state.y_idx + collect.astype(jnp.int32),
+            fires=state.fires + fire.astype(jnp.int32),
+        )
+        return new_state, rx_ready, tx
+
+
+def make_cell_params(a: np.ndarray, b: np.ndarray) -> SystolicParams:
+    """Stacked per-cell params for grid (rows=K, cols=N) computing A@B.
+
+    a: (M, K) — streamed west→east (core row r carries A[:, r]).
+    b: (K, N) — stationary (core (r, c) holds B[r, c]).
+    Returns params with leading dims (K, N).
+    """
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    rr, cc = np.meshgrid(np.arange(k), np.arange(n), indexing="ij")
+    a_buf = np.zeros((k, n, m), np.float32)
+    a_buf[:, 0, :] = a.T  # west-edge cells stream A[:, r]
+    return SystolicParams(
+        b=jnp.asarray(b),
+        is_west=jnp.asarray(cc == 0),
+        is_north=jnp.asarray(rr == 0),
+        is_south=jnp.asarray(rr == k - 1),
+        is_east=jnp.asarray(cc == n - 1),
+        a_buf=jnp.asarray(a_buf),
+    )
+
+
+def make_systolic_network(a: np.ndarray, b: np.ndarray, capacity: int = 8) -> tuple[Network, list]:
+    """Build a single-netlist Network for Y = A @ B (ground-truth engine).
+
+    Returns (network, grid_of_instances).
+    """
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    m, k = a.shape
+    _, n = b.shape
+    params = make_cell_params(a, b)
+    cell = SystolicCell(m_stream=m)
+    net = Network(payload_words=PAYLOAD_WORDS, capacity=capacity)
+    grid = [
+        [
+            net.instantiate(
+                cell,
+                name=f"c{r}_{c}",
+                params=jax.tree.map(lambda x: x[r, c], params),
+            )
+            for c in range(n)
+        ]
+        for r in range(k)
+    ]
+    for r in range(k):
+        for c in range(n):
+            if c + 1 < n:
+                net.connect(grid[r][c]["e_out"], grid[r][c + 1]["w_in"])
+            if r + 1 < k:
+                net.connect(grid[r][c]["s_out"], grid[r + 1][c]["n_in"])
+    return net, grid
+
+
+def collect_result(sim, state, grid) -> np.ndarray:
+    """Read Y (M, N) out of the south-edge cells' y_buf."""
+    k = len(grid)
+    n = len(grid[0])
+    cols = []
+    for c in range(n):
+        st = sim.group_state(state, grid[k - 1][c])
+        cols.append(np.asarray(st.y_buf))
+    return np.stack(cols, axis=1)  # (M, N)
+
+
+def cycles_needed(m: int, k: int, n: int) -> int:
+    """Loose upper bound on cycles for the single-netlist run to finish."""
+    return 4 * (m + k + n) + 64

@@ -1,0 +1,162 @@
+"""Flash attention Pallas TPU kernel (blocked online-softmax).
+
+The LM stack's dominant compute hot spot for training and prefill.  Tiled
+for the TPU memory hierarchy:
+
+  * grid = (batch*q_heads, T/bq, S/bk) — the innermost grid dimension
+    streams KV blocks, so VMEM holds only (bq, d) of Q, (bk, d) of K and V,
+    and the f32 accumulators; nothing scales with S.
+  * online-softmax accumulators (acc, m, l) live in VMEM scratch and persist
+    across the sequential innermost grid steps (TPU grid semantics).
+  * matmuls are (bq, d) x (d, bk) and (bq, bk) x (bk, d) with 128-aligned
+    shapes -> MXU.
+  * causal / sliding-window masking prunes whole KV blocks with ``pl.when``
+    (skipped blocks do no compute), so windowed layers cost O(T*window) —
+    this is what keeps RecurrentGemma's local-attention layers sub-quadratic
+    for the ``long_500k`` shape.
+
+Supports GQA/MQA (``h_q`` query heads share ``h_kv`` KV heads) and f32
+accumulation over bf16 inputs.
+
+Oracle: ``repro.kernels.ref.attention_ref`` (pure jnp, dense mask).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128  # accumulator minor dim (TPU lane width)
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
+    *, bq: int, bk: int, n_kv: int, causal: bool, window: int | None,
+    sm_scale: float,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    q_start = qi * bq
+    k_start = ki * bk
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Block-level visibility: any (q, k) pair in this tile may interact.
+    visible = jnp.bool_(True)
+    if causal:
+        visible &= k_start <= q_start + bq - 1
+    if window is not None:
+        visible &= k_start + bk - 1 > q_start - window
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), dtype=bool)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        lsafe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / lsafe[:, None]).astype(o_ref.dtype)
+        lse = jnp.where(l == 0.0, NEG_INF, m_ref[:, 0] + jnp.log(lsafe))
+        lse_ref[0, 0] = lse.astype(lse_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Hq, T, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,  # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+    return_lse: bool = False,
+):
+    """Blocked attention; returns (B, Hq, T, D) in q.dtype.
+
+    With ``return_lse=True`` also returns the log-sum-exp (B, Hq, T) f32 —
+    the residual the custom VJP needs (ops.py wires the backward pass)."""
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    G = Hq // Hkv
+    bq = min(block_q, T)
+    bk = min(block_k, S)
+    if T % bq or S % bk:
+        raise ValueError(f"T={T}, S={S} must divide block sizes ({bq}, {bk})")
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(D)
+
+    n_kv = S // bk
+    # 4-D grid (B, Hq, T/bq, S/bk): no batch/head reshape, so GSPMD sharding
+    # on (batch, heads) propagates straight through the pallas_call.
+    grid = (B, Hq, T // bq, n_kv)
+
+    kernel = functools.partial(
+        _fa_kernel, bq=bq, bk=bk, n_kv=n_kv, causal=causal, window=window,
+        sm_scale=sm_scale,
+    )
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, T, D), q.dtype),
+            jax.ShapeDtypeStruct((B, Hq, T), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    if return_lse:
+        return out, lse
+    return out

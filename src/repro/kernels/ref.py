@@ -1,0 +1,231 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Hq, T, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Dense-mask attention oracle with GQA and sliding window."""
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    G = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(D)
+    kf = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * sm_scale
+    s = jnp.einsum("bhtd,bhsd->bhts", qf, kf)
+    q_pos = jnp.arange(T)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # Fully-masked rows produce uniform softmax; zero them like the kernel.
+    any_valid = mask.any(axis=-1)
+    out = jnp.einsum("bhts,bhsd->bhtd", p, vf)
+    out = jnp.where(any_valid[None, None, :, None], out, 0.0)
+    return out.astype(q.dtype)
+
+
+def rglru_ref(
+    x: jax.Array,  # (B, T, D) gated input
+    a: jax.Array,  # (B, T, D) per-step decay in (0, 1)
+    h0: jax.Array | None = None,  # (B, D) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """RG-LRU linear recurrence oracle: h_t = a_t * h_{t-1} + x_t.
+
+    Returns (all hidden states (B, T, D), final state (B, D)).
+    Uses an associative scan in f32 (numerically the strongest formulation).
+    """
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    if h0 is not None:
+        # Fold the initial state into step 0: h_0' = a_0*h0 + x_0.
+        xf = xf.at[:, 0].add(af[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, a2 * x1 + x2
+
+    a_sc, h = jax.lax.associative_scan(combine, (af, xf), axis=1)
+    return h.astype(x.dtype), h[:, -1].astype(x.dtype)
+
+
+def _onehot(idx: jax.Array, n: int) -> jax.Array:
+    """(..., n) one-hot of idx — the TPU-safe gather/scatter primitive used
+    by both the kernel and this oracle so float op order matches exactly."""
+    return (idx[..., None] == jnp.arange(n, dtype=jnp.int32)).astype(jnp.float32)
+
+
+def systolic_step_ref(state: dict, k_cycles: int) -> dict:
+    """Oracle for the elastic-register systolic tile (K cycles, pure jnp).
+
+    Semantics (identical to kernels/systolic_step.py):
+
+    A tile of (R, C) MAC cells with *depth-1 elastic register* channels —
+    each cell owns one eastward register (a_reg, a_v) and one southward
+    register (p_reg, p_v).  A cell FIREs when both inputs are valid and both
+    of its own registers are free; firing latches outputs into its registers,
+    which downstream cells consume on a later cycle (latency-insensitive, so
+    the final result is unchanged vs. the deep-queue engine — only timing
+    differs).
+
+    Tile boundaries are *slabs* (the epoch exchange unit):
+      west_slab (R, K)/west_cnt: packets available to column 0 this epoch,
+      north_slab (C, K)/north_cnt: packets available to row 0,
+      east_slab (R, K)/east_cnt: packets emitted by column C-1,
+      south_slab (C, K)/south_cnt: packets emitted by row R-1.
+
+    Edge-of-grid behaviour via flags: is_west cells stream from a_buf
+    (one-hot gather), is_north synthesize 0, is_south collect into y_buf,
+    is_east drop.
+
+    state keys: b, a_reg, a_v, p_reg, p_v, a_idx, y_idx, a_buf, y_buf,
+    is_west, is_north, is_south, is_east, west_slab, west_cnt, north_slab,
+    north_cnt, east_slab, east_cnt, south_slab, south_cnt, widx, nidx.
+    """
+    s = {k: jnp.asarray(v) for k, v in state.items()}
+    R, C = s["b"].shape
+    M = s["a_buf"].shape[-1]
+    K = s["west_slab"].shape[-1]
+
+    def cycle(s, _):
+        a_reg, a_v = s["a_reg"], s["a_v"]
+        p_reg, p_v = s["p_reg"], s["p_v"]
+
+        # West input of cell (r, c): c>0 -> neighbour register; c==0 -> slab.
+        w_slab_val = jnp.sum(s["west_slab"] * _onehot(s["widx"], K), axis=-1)
+        w_slab_ok = s["widx"] < s["west_cnt"]
+        w_val = jnp.concatenate([w_slab_val[:, None], a_reg[:, :-1]], axis=1)
+        w_vld = jnp.concatenate([w_slab_ok[:, None], a_v[:, :-1]], axis=1)
+        n_slab_val = jnp.sum(s["north_slab"] * _onehot(s["nidx"], K), axis=-1)
+        n_slab_ok = s["nidx"] < s["north_cnt"]
+        n_val = jnp.concatenate([n_slab_val[None, :], p_reg[:-1, :]], axis=0)
+        n_vld = jnp.concatenate([n_slab_ok[None, :], p_v[:-1, :]], axis=0)
+
+        a_src = jnp.sum(s["a_buf"] * _onehot(s["a_idx"], M), axis=-1)
+        a_in = jnp.where(s["is_west"], a_src, w_val)
+        a_ok = jnp.where(s["is_west"], s["a_idx"] < M, w_vld)
+        p_in = jnp.where(s["is_north"], 0.0, n_val)
+        p_ok = jnp.where(s["is_north"], True, n_vld)
+
+        # Output readiness: own register free, or edge/boundary sink.
+        # Column C-1 emits into east_slab (capacity K, never fills in K
+        # cycles); row R-1 into south_slab.
+        e_lim = s.get("east_limit", jnp.full((R,), K, jnp.int32))
+        s_lim = s.get("south_limit", jnp.full((C,), K, jnp.int32))
+        e_free = ~a_v
+        e_free = e_free.at[:, C - 1].set(s["east_cnt"] < e_lim)
+        e_free = e_free | s["is_east"]
+        s_free = ~p_v
+        s_free = s_free.at[R - 1, :].set(s["south_cnt"] < s_lim)
+        s_free = s_free | s["is_south"]
+
+        fire = a_ok & p_ok & e_free & s_free
+        y = p_in + a_in * s["b"]
+
+        # Drain consumed upstream storage.
+        cons_a = fire & ~s["is_west"]  # consumed west input
+        cons_p = fire & ~s["is_north"]
+        widx = s["widx"] + cons_a[:, 0].astype(jnp.int32)
+        nidx = s["nidx"] + cons_p[0, :].astype(jnp.int32)
+        drain_a = jnp.concatenate(  # east neighbour consumed my a_reg
+            [cons_a[:, 1:], jnp.zeros((R, 1), bool)], axis=1
+        )
+        drain_p = jnp.concatenate([cons_p[1:, :], jnp.zeros((1, C), bool)], axis=0)
+        a_v2 = a_v & ~drain_a
+        p_v2 = p_v & ~drain_p
+
+        # Latch fired outputs.
+        emit_e = fire & ~s["is_east"]
+        emit_s = fire & ~s["is_south"]
+        a_reg2 = jnp.where(fire, a_in, a_reg)
+        p_reg2 = jnp.where(fire, y, p_reg)
+        # Column C-1 / row R-1 emissions go to slabs, not registers.
+        to_east = emit_e[:, C - 1]
+        to_south = emit_s[R - 1, :]
+        a_v3 = jnp.where(emit_e, True, a_v2).at[:, C - 1].set(a_v2[:, C - 1])
+        p_v3 = jnp.where(emit_s, True, p_v2).at[R - 1, :].set(p_v2[R - 1, :])
+        east_slab = s["east_slab"] + (
+            a_in[:, C - 1, None] * _onehot(s["east_cnt"], K)
+        ) * to_east[:, None]
+        east_cnt = s["east_cnt"] + to_east.astype(jnp.int32)
+        south_slab = s["south_slab"] + (
+            y[R - 1, :, None] * _onehot(s["south_cnt"], K)
+        ) * to_south[:, None]
+        south_cnt = s["south_cnt"] + to_south.astype(jnp.int32)
+
+        collect = fire & s["is_south"]
+        y_buf = s["y_buf"] + (y[:, :, None] * _onehot(s["y_idx"], M)) * collect[
+            :, :, None
+        ]
+        s2 = dict(
+            s,
+            a_reg=a_reg2, a_v=a_v3, p_reg=p_reg2, p_v=p_v3,
+            a_idx=s["a_idx"] + (fire & s["is_west"]).astype(jnp.int32),
+            y_buf=y_buf,
+            y_idx=s["y_idx"] + collect.astype(jnp.int32),
+            widx=widx, nidx=nidx,
+            east_slab=east_slab, east_cnt=east_cnt,
+            south_slab=south_slab, south_cnt=south_cnt,
+        )
+        return s2, None
+
+    out, _ = jax.lax.scan(cycle, s, None, length=k_cycles)
+    return out
+
+
+def slstm_scan_ref(r: dict, pre: jax.Array, carry0: tuple):
+    """Oracle for kernels/slstm_scan.py (plain lax.scan, f32).
+
+    r: {'i','f','z','o': (H, hd, hd)}; pre: (B, T, 4, d); carry0: 4x(B, d).
+    Returns (hs, (cs, ns, ms), final_carry) like the kernel.
+    """
+    B, T, _, d = pre.shape
+    H = r["i"].shape[0]
+    hd = d // H
+
+    def step(carry, pre_t):
+        c, n, h, m = carry
+        hb = h.reshape(B, H, hd)
+
+        def rmat(g):
+            return jax.lax.dot_general(
+                hb, r[g].astype(jnp.float32), (((2,), (1,)), ((1,), (0,))),
+                preferred_element_type=jnp.float32,
+            ).transpose(1, 0, 2).reshape(B, d)
+
+        li = pre_t[:, 0] + rmat("i")
+        lf = jax.nn.log_sigmoid(pre_t[:, 1] + rmat("f"))
+        z = jnp.tanh(pre_t[:, 2] + rmat("z"))
+        o = jax.nn.sigmoid(pre_t[:, 3] + rmat("o"))
+        m_new = jnp.maximum(lf + m, li)
+        c = c * jnp.exp(lf + m - m_new) + jnp.exp(li - m_new) * z
+        n = n * jnp.exp(lf + m - m_new) + jnp.exp(li - m_new)
+        h = o * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), (c, n, h, m_new)
+
+    carry, (cs, ns, hs, ms) = jax.lax.scan(
+        step, carry0, jnp.moveaxis(pre.astype(jnp.float32), 1, 0)
+    )
+    mv = lambda x: jnp.moveaxis(x, 0, 1)
+    return mv(hs), (mv(cs), mv(ns), mv(ms)), carry

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence (RecurrentGemma).
+
+Computes h_t = a_t * h_{t-1} + x_t over the time axis — the recurrent hot
+spot of the hybrid archs (and the only sequential op in their decode path's
+prefill).  Tiling:
+
+  * grid = (B, D/bd, T/bt); the innermost grid dim walks time chunks
+    sequentially, carrying the recurrent state in VMEM scratch.
+  * within a chunk, the scan is computed with a Hillis–Steele doubling
+    network (log2(bt) passes of static-shift elementwise ops) — no
+    data-dependent control flow, fully vectorizable on the VPU; O(bt·log bt)
+    work instead of bt sequential steps.
+  * f32 accumulation regardless of input dtype.
+
+Oracle: ``ref.rglru_ref`` (associative_scan).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(x_ref, a_ref, h0_ref, h_ref, hlast_ref, h_scratch, *, bt: int, n_t: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        h_scratch[...] = h0_ref[...].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)  # (bt, bd)
+    a = a_ref[0].astype(jnp.float32)  # (bt, bd)
+
+    # Hillis-Steele inclusive scan of the affine maps (a, x).
+    A, X = a, x
+    d = 1
+    while d < bt:
+        A_s = jnp.concatenate([jnp.ones_like(A[:d]), A[:-d]], axis=0)
+        X_s = jnp.concatenate([jnp.zeros_like(X[:d]), X[:-d]], axis=0)
+        X = X + A * X_s
+        A = A * A_s
+        d *= 2
+
+    h_in = h_scratch[...]  # (1, bd)
+    h = X + A * h_in  # (bt, bd) — chunk-carry applied
+    h_scratch[...] = h[-1:, :]
+    h_ref[0] = h.astype(h_ref.dtype)
+
+    @pl.when(t == n_t - 1)
+    def _final():
+        hlast_ref[...] = h[-1:, :].astype(hlast_ref.dtype)
+
+
+def rglru_scan(
+    x: jax.Array,  # (B, T, D)
+    a: jax.Array,  # (B, T, D) decay in (0, 1)
+    h0: jax.Array | None = None,  # (B, D)
+    *,
+    block_t: int = 256,
+    block_d: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (h (B, T, D), h_last (B, D))."""
+    B, T, D = x.shape
+    bt = min(block_t, T)
+    bd = min(block_d, D)
+    if T % bt or D % bd:
+        raise ValueError(f"T={T}, D={D} must divide blocks ({bt}, {bd})")
+    if h0 is None:
+        h0 = jnp.zeros((B, D), x.dtype)
+    n_t = T // bt
+    grid = (B, D // bd, n_t)
+
+    kernel = functools.partial(_rglru_kernel, bt=bt, n_t=n_t)
+    h, hlast = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), lambda b, j, t: (b, t, j)),
+            pl.BlockSpec((1, bt, bd), lambda b, j, t: (b, t, j)),
+            pl.BlockSpec((1, bd), lambda b, j, t: (b, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, bd), lambda b, j, t: (b, t, j)),
+            pl.BlockSpec((1, bd), lambda b, j, t: (b, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, D), x.dtype),
+            jax.ShapeDtypeStruct((B, D), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
+        interpret=interpret,
+    )(x, a, h0)
+    return h, hlast

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel for the sLSTM recurrence (xLSTM).
+
+The sLSTM step is strictly sequential, so its performance is set by how
+often the recurrent weights R_{i,f,z,o} travel HBM->VMEM.  The XLA scan
+re-reads them every timestep (~1.2 MB x T x layers); this kernel keeps all
+four block-diagonal R matrices **resident in VMEM for the whole sequence**
+and streams only the hoisted gate pre-activations:
+
+  * grid = (T/bt,): time chunks arrive as (B, bt, 4, d) blocks; the carry
+    (c, n, h, m) persists in VMEM scratch across sequential grid steps.
+  * per step: 4 head-blocked (B,H,hd)x(H,hd,hd) matmuls (MXU) + the
+    exponential-gating pointwise update (VPU).
+  * outputs: the full h/c/n/m sequences (the custom-VJP backward in
+    models/recurrent.py consumes them as residuals) + final carry.
+
+Oracle: ``ref.slstm_scan_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _step(r_i, r_f, r_z, r_o, c, n, h, m, pre_t):
+    """One sLSTM step; all f32. pre_t: (B, 4, d)."""
+    B, d = h.shape
+    H = r_i.shape[0]
+    hd = d // H
+    hb = h.reshape(B, H, hd)
+
+    def rmat(r):
+        return jax.lax.dot_general(
+            hb, r, (((2,), (1,)), ((1,), (0,))),
+            preferred_element_type=jnp.float32,
+        ).transpose(1, 0, 2).reshape(B, d)
+
+    li = pre_t[:, 0] + rmat(r_i)
+    lf = jax.nn.log_sigmoid(pre_t[:, 1] + rmat(r_f))
+    z = jnp.tanh(pre_t[:, 2] + rmat(r_z))
+    o = jax.nn.sigmoid(pre_t[:, 3] + rmat(r_o))
+    m_new = jnp.maximum(lf + m, li)
+    c = c * jnp.exp(lf + m - m_new) + jnp.exp(li - m_new) * z
+    n = n * jnp.exp(lf + m - m_new) + jnp.exp(li - m_new)
+    h = o * c / jnp.maximum(n, 1.0)
+    return c, n, h, m_new
+
+
+def _slstm_kernel(
+    ri_ref, rf_ref, rz_ref, ro_ref, pre_ref, c0_ref, n0_ref, h0_ref, m0_ref,
+    hs_ref, cs_ref, ns_ref, ms_ref, cf_ref, nf_ref, hf_ref, mf_ref,
+    c_s, n_s, h_s, m_s,
+    *, bt: int, n_t: int,
+):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        c_s[...] = c0_ref[...].astype(jnp.float32)
+        n_s[...] = n0_ref[...].astype(jnp.float32)
+        h_s[...] = h0_ref[...].astype(jnp.float32)
+        m_s[...] = m0_ref[...].astype(jnp.float32)
+
+    r_i = ri_ref[...].astype(jnp.float32)
+    r_f = rf_ref[...].astype(jnp.float32)
+    r_z = rz_ref[...].astype(jnp.float32)
+    r_o = ro_ref[...].astype(jnp.float32)
+    pre = pre_ref[...].astype(jnp.float32)  # (B, bt, 4, d)
+
+    def body(i, carry):
+        c, n, h, m = carry
+        pre_t = jax.lax.dynamic_index_in_dim(pre, i, axis=1, keepdims=False)
+        c, n, h, m = _step(r_i, r_f, r_z, r_o, c, n, h, m, pre_t)
+        hs_ref[:, i] = h.astype(hs_ref.dtype)
+        cs_ref[:, i] = c.astype(cs_ref.dtype)
+        ns_ref[:, i] = n.astype(ns_ref.dtype)
+        ms_ref[:, i] = m.astype(ms_ref.dtype)
+        return c, n, h, m
+
+    carry = (c_s[...], n_s[...], h_s[...], m_s[...])
+    c, n, h, m = jax.lax.fori_loop(0, bt, body, carry)
+    c_s[...] = c
+    n_s[...] = n
+    h_s[...] = h
+    m_s[...] = m
+
+    @pl.when(t == n_t - 1)
+    def _final():
+        cf_ref[...] = c
+        nf_ref[...] = n
+        hf_ref[...] = h
+        mf_ref[...] = m
+
+
+def slstm_scan(
+    r: dict,            # {'i','f','z','o': (H, hd, hd)}
+    pre: jax.Array,     # (B, T, 4, d) f32
+    carry0: tuple,      # (c, n, h, m) each (B, d) f32
+    *,
+    block_t: int = 128,
+    interpret: bool = False,
+):
+    """Returns (hs (B,T,d), (c,n,h,m) sequences (B,T,d), final carry)."""
+    B, T, _, d = pre.shape
+    bt = min(block_t, T)
+    if T % bt:
+        raise ValueError(f"T={T} must divide block_t={bt}")
+    n_t = T // bt
+    c0, n0, h0, m0 = carry0
+    f32 = jnp.float32
+    seq = jax.ShapeDtypeStruct((B, T, d), f32)
+    vec = jax.ShapeDtypeStruct((B, d), f32)
+
+    kernel = functools.partial(_slstm_kernel, bt=bt, n_t=n_t)
+    grid = (n_t,)
+    seq_spec = pl.BlockSpec((B, bt, d), lambda t: (0, t, 0))
+    full = lambda shape: pl.BlockSpec(shape, lambda t: tuple(0 for _ in shape))
+    hs, cs, ns, ms, cf, nf, hf, mf = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            full(r["i"].shape), full(r["f"].shape), full(r["z"].shape),
+            full(r["o"].shape),
+            pl.BlockSpec((B, bt, 4, d), lambda t: (0, t, 0, 0)),
+            full((B, d)), full((B, d)), full((B, d)), full((B, d)),
+        ],
+        out_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                   full((B, d)), full((B, d)), full((B, d)), full((B, d))],
+        out_shape=[seq, seq, seq, seq, vec, vec, vec, vec],
+        scratch_shapes=[pltpu.VMEM((B, d), f32)] * 4,
+        interpret=interpret,
+    )(r["i"], r["f"], r["z"], r["o"], pre, c0, n0, h0, m0)
+    return hs, (cs, ns, ms), (cf, nf, hf, mf)

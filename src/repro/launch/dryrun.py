@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+``jax.jit(step).lower(**ShapeDtypeStructs).compile()`` must succeed on the
+single-pod 16x16 mesh AND the 2x16x16 multi-pod mesh for every assigned
+cell, plus the paper's own manycore grid.  memory_analysis() proves the
+working set fits; cost_analysis() + HLO collective parsing feed the
+roofline table (EXPERIMENTS.md §Roofline).
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    python -m repro.launch.dryrun --all [--mesh single|multi|both]
+    python -m repro.launch.dryrun --arch manycore
+
+Results are written to experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from ..configs import ALIASES, ARCH_IDS, SHAPES, get_config, skip_reason
+from ..sharding.partition import Strategy
+from . import hlo_analysis as HA
+from .mesh import make_grid_mesh, make_production_mesh
+from .steps import lower_cell
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N·D prefill, 2·N_active·B decode."""
+    n_active = cfg.active_param_count()
+    if shape.step == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.step == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # one token per request
+
+
+# Per-(arch, shape-kind) strategy overrides found by the §Perf hillclimb.
+# key: (arch_id, step) with None wildcards; first match wins.
+STRATEGY_OVERRIDES: list[tuple[str | None, str | None, dict]] = [
+    # xlstm-125m (§Perf): tp=16 with 4 heads forced per-layer activation
+    # all-gathers (iter-1); FSDP over both axes put weight shards on
+    # contraction dims -> per-scan-step partial-sum all-reduces (iter-2,
+    # refuted).  A 125M model is small enough to REPLICATE: pure 256-way DP,
+    # one gradient all-reduce per step (iter-3, confirmed).
+    ("xlstm_125m", None, dict(tp=None, dp_all=True, fsdp=False)),
+]
+
+# §Perf iteration (llama3.2-3b prefill): sequence-sharding activations over
+# the model axis lets GSPMD distribute attention by (batch x seq x kv-shard)
+# instead of replicating head-indivisible activations: 241s -> 1.6s
+# collective on llama3.2-3b prefill_32k, and 2.4-2.7x on train for odd-head
+# archs.  Applied to every pure-attention family; recurrent/hybrid archs
+# keep SP off (a sequential recurrence cannot shard its scan axis).
+_SP_FAMILIES = {"dense", "moe", "vlm", "audio"}
+
+
+def default_strategy(cfg, shape, mesh) -> Strategy:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    arch = getattr(cfg, "name", "").replace(".", "_").replace("-", "_")
+    for a, s, kw in STRATEGY_OVERRIDES:
+        if (a is None or arch == a or arch.startswith(a)) and (
+            s is None or s == shape.step
+        ):
+            kw = dict(kw)
+            if kw.pop("dp_all", False):
+                # grow the DP axis set greedily while the global batch still
+                # divides it (batch=256 divides 16x16 but not 2x16x16 —
+                # the pod axis then stays replicated at 50% scaling, which
+                # beats a non-divisible sharding collapse; see §Perf).
+                dp = ()
+                for ax in ("data", "model", "pod"):
+                    if ax in mesh.axis_names:
+                        size = 1
+                        for a in dp + (ax,):
+                            size *= mesh.shape[a]
+                        if shape.global_batch % size == 0:
+                            dp = dp + (ax,)
+            return Strategy(dp=dp, tp=kw.pop("tp", "model"),
+                            fsdp=kw.pop("fsdp", True),
+                            seq_shard=kw.pop("seq_shard", False))
+    sp = (
+        getattr(cfg, "family", "") in _SP_FAMILIES
+        and shape.step in ("train", "prefill")
+    )
+    return Strategy(dp=dp, tp="model", fsdp=True, seq_shard=sp)
+
+
+def run_lm_cell(arch: str, shape_name: str, mesh_kind: str, strategy: Strategy | None = None) -> dict:
+    arch_id = ALIASES.get(arch, arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind}
+    reason = skip_reason(arch_id, shape_name)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    cfg = get_config(arch_id)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    strategy = strategy or default_strategy(cfg, shape, mesh)
+    t0 = time.time()
+    try:
+        lowered, kind = lower_cell(cfg, shape, mesh, strategy)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        terms = HA.roofline_terms(cost, hlo, n_chips)
+        mf = model_flops(cfg, shape)
+        rec.update(
+            status="ok",
+            step_kind=kind,
+            n_chips=n_chips,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            model_flops=mf,
+            useful_ratio=mf / terms["hlo_flops"] if terms.get("hlo_flops") else None,
+            dominant=HA.dominant_term(terms),
+            memory_analysis=_mem_dict(mem),
+            **{k: v for k, v in terms.items()},
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec
+
+
+def run_manycore(mesh_kind: str, k_epoch: int | None = None) -> dict:
+    """Lower+compile the million-core systolic epoch on the device grid."""
+    import jax.numpy as jnp
+    from ..configs.manycore import CONFIG
+    from ..core.distributed import GridEngine
+    from ..hw.systolic import SystolicCell, make_cell_params
+
+    rec = {"arch": "manycore", "shape": f"grid{CONFIG.grid_rows}x{CONFIG.grid_cols}",
+           "mesh": mesh_kind}
+    # 512 devices as 32x16 (multi) or 256 as 16x16 (single pod)
+    rows, cols = (32, 16) if mesh_kind == "multi" else (16, 16)
+    mesh = make_grid_mesh(rows, cols)
+    try:
+        eng = GridEngine(
+            SystolicCell(m_stream=CONFIG.m_stream),
+            CONFIG.grid_rows, CONFIG.grid_cols, mesh,
+            K=k_epoch or CONFIG.k_epoch, capacity=CONFIG.queue_capacity,
+        )
+        params = jax.eval_shape(
+            lambda: make_cell_params(
+                np.zeros((CONFIG.m_stream, CONFIG.grid_rows), np.float32),
+                np.zeros((CONFIG.grid_rows, CONFIG.grid_cols), np.float32),
+            )
+        )
+        state_shapes = jax.eval_shape(
+            lambda p: eng.init(jax.random.key(0), p), params
+        )
+        fn = jax.jit(eng.epoch_fn())
+        t0 = time.time()
+        lowered = fn.lower(state_shapes)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        terms = HA.roofline_terms(cost, hlo, mesh.size)
+        rec.update(
+            status="ok", step_kind="epoch(K=%d)" % (k_epoch or CONFIG.k_epoch),
+            n_chips=mesh.size,
+            cores=CONFIG.grid_rows * CONFIG.grid_cols,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            dominant=HA.dominant_term(terms),
+            memory_analysis=_mem_dict(compiled.memory_analysis()),
+            **terms,
+        )
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        if hasattr(mem, attr):
+            out[attr] = int(getattr(mem, attr))
+    return out
+
+
+def _save(rec: dict) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    with open(os.path.join(OUT_DIR, name), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def _summ(rec: dict) -> str:
+    if rec["status"] == "ok":
+        per_dev = rec.get("memory_analysis", {}).get("argument_size_in_bytes", 0) / 1e9
+        return (f"OK   {rec['arch']:26s} {rec['shape']:12s} {rec['mesh']:6s} "
+                f"dom={rec['dominant'][:-2]:10s} comp={rec['compute_s']:.3e}s "
+                f"mem={rec['memory_s']:.3e}s coll={rec['collective_s']:.3e}s "
+                f"args/dev={per_dev:.2f}GB compile={rec['compile_s']:.0f}s")
+    if rec["status"] == "skipped":
+        return f"SKIP {rec['arch']:26s} {rec['shape']:12s} {rec['mesh']:6s} ({rec['reason'][:60]})"
+    return f"FAIL {rec['arch']:26s} {rec['shape']:12s} {rec['mesh']:6s} {rec['error'][:100]}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    jobs: list = []
+    if args.all:
+        for arch in ARCH_IDS:
+            if arch == "manycore":
+                continue
+            for shape in SHAPES:
+                for mk in meshes:
+                    jobs.append((arch, shape, mk))
+        for mk in meshes:
+            jobs.append(("manycore", None, mk))
+    else:
+        arch = args.arch or "llama3.2-1b"
+        if ALIASES.get(arch, arch) == "manycore":
+            jobs = [("manycore", None, mk) for mk in meshes]
+        else:
+            shapes = [args.shape] if args.shape else list(SHAPES)
+            jobs = [(arch, s, mk) for s in shapes for mk in meshes]
+
+    for arch, shape, mk in jobs:
+        if arch == "manycore":
+            rec = run_manycore(mk)
+        else:
+            rec = run_lm_cell(arch, shape, mk)
+        _save(rec)
+        print(_summ(rec), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.launch.report [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def load(mesh: str | None = None) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(OUT_DIR, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if mesh is None or r.get("mesh") == mesh:
+            recs.append(r)
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9), r["mesh"]))
+    return recs
+
+
+def _fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    x = float(x)
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x*1e6:.1f}us"
+    if x < 0.1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def roofline_table(mesh: str = "single") -> str:
+    rows = [
+        "| arch | shape | step | compute | memory | collective | dominant | "
+        "MODEL_FLOPs | HLO/MODEL | peak-frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        if r["arch"] == "manycore":
+            continue
+        if r["status"] == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | SKIP | — | — | "
+                f"{r['reason'][:48]} |"
+            )
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | {r['error'][:60]} |")
+            continue
+        total = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / total if total else 0.0
+        ratio = (
+            f"{r['hlo_flops']/r['model_flops']:.2f}" if r.get("model_flops") else "-"
+        )
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['step_kind']} | "
+            f"{_fmt_s(r['compute_s'])} | {_fmt_s(r['memory_s'])} | "
+            f"{_fmt_s(r['collective_s'])} | {r['dominant'][:-2]} | "
+            f"{r.get('model_flops', 0):.2e} | {ratio} | {frac*100:.1f}% |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table() -> str:
+    rows = [
+        "| arch | shape | mesh | status | chips | args/dev | compile | collectives |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load():
+        if r["status"] == "ok":
+            gb = r.get("memory_analysis", {}).get("argument_size_in_bytes", 0) / 1e9
+            coll = ", ".join(
+                f"{k}:{int(v)}" for k, v in sorted(r.get("collective_counts", {}).items())
+            )
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | "
+                f"{r.get('n_chips','-')} | {gb:.2f} GB | {r.get('compile_s','-')}s | {coll} |"
+            )
+        elif r["status"] == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | - | - | - | "
+                f"{r['reason'][:52]} |"
+            )
+        else:
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | **FAIL** | - | - | - | "
+                f"{r['error'][:52]} |"
+            )
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--table", default="both", choices=["roofline", "dryrun", "both"])
+    args = ap.parse_args()
+    if args.table in ("dryrun", "both"):
+        print("## Dry-run matrix\n")
+        print(dryrun_table())
+        print()
+    if args.table in ("roofline", "both"):
+        print(f"## Roofline ({args.mesh}-pod)\n")
+        print(roofline_table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,202 @@
+"""Shared layer primitives: norms, RoPE/M-RoPE, attention, MLPs.
+
+Pure functions over explicit param pytrees (dicts of arrays).  Every
+initializer returns params in ``cfg.dtype`` (bf16 by default) and all
+norm/softmax/recurrence math runs in f32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from .config import ModelConfig
+
+
+def truncnorm(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- RMSNorm
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    norm = xf * jax.lax.rsqrt(var + eps)
+    # (1 + scale) parameterization (gemma/llama-style zero-centered scale)
+    return (norm * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, D); positions: (B, T) int32."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, T, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, theta: float, sections: tuple[int, int, int]
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. positions: (3, B, T) for (t, h, w) axes.
+
+    The frequency spectrum (D/2 freqs) is partitioned into three sections,
+    each rotated by its own position stream.  For text tokens the three
+    streams are equal and M-RoPE reduces to standard RoPE.
+    """
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)  # (D/2,)
+    sec = jnp.asarray(
+        sum(([i] * s for i, s in enumerate(sections)), []), dtype=jnp.int32
+    )  # (D/2,) section id per frequency
+    # pick the position stream per frequency: (B, T, D/2)
+    pos_sec = jnp.take(positions.astype(jnp.float32), sec, axis=0)  # (D/2 picks) -> (D/2, B, T)
+    angles = jnp.moveaxis(pos_sec, 0, -1) * freqs  # (B, T, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def positional_rotate(cfg: ModelConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    if cfg.rope_type == "mrope":
+        if positions.ndim == 2:  # text-only stream: replicate across axes
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------- attention
+def attention_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "wq": truncnorm(kq, (d, cfg.n_heads * hd), s, dtype),
+        "wk": truncnorm(kk, (d, cfg.n_kv_heads * hd), s, dtype),
+        "wv": truncnorm(kv, (d, cfg.n_kv_heads * hd), s, dtype),
+        "wo": truncnorm(ko, (cfg.n_heads * hd, d), 1.0 / math.sqrt(cfg.n_heads * hd), dtype),
+    }
+
+
+def attention_fwd(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,          # (B, T, d)
+    positions: jax.Array,  # (B, T) or (3, B, T)
+    window: int | None,
+) -> jax.Array:
+    B, T, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, T, H, hd)
+    k = (x @ params["wk"]).reshape(B, T, Hkv, hd)
+    v = (x @ params["wv"]).reshape(B, T, Hkv, hd)
+    q = positional_rotate(cfg, q, positions)
+    k = positional_rotate(cfg, k, positions)
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    use_kernel = cfg.use_kernels and T % 128 == 0
+    o = kops.flash_attention(
+        qh, kh, vh, causal=cfg.causal, window=window, use_kernel=use_kernel
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, H * hd)
+    return o @ params["wo"]
+
+
+def attention_decode(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,        # (B, 1, d)
+    cache_k: jax.Array,  # (B, S, Hkv, hd)
+    cache_v: jax.Array,
+    pos: jax.Array,      # () int32 current position
+    window: int | None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode over a KV cache; returns (out, new_k, new_v).
+
+    For windowed layers the cache has S = window slots written round-robin.
+    """
+    B, _, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    S = cache_k.shape[1]
+    G = H // Hkv
+    q = (x @ params["wq"]).reshape(B, 1, H, hd)
+    k = (x @ params["wk"]).reshape(B, 1, Hkv, hd)
+    v = (x @ params["wv"]).reshape(B, 1, Hkv, hd)
+    posb = jnp.broadcast_to(pos[None, None], (B, 1))
+    q = positional_rotate(cfg, q, posb)
+    k = positional_rotate(cfg, k, posb)
+    slot = pos if window is None else pos % S
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+
+    qf = q.astype(jnp.float32).reshape(B, H, hd)
+    kf = cache_k.astype(jnp.float32)
+    vf = cache_v.astype(jnp.float32)
+    # scores: (B, H, S) via grouped heads
+    qg = qf.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, kf) / math.sqrt(hd)
+    idx = jnp.arange(S)
+    if window is None:
+        valid = idx <= pos
+    else:
+        # Ring cache holds the last S absolute positions; before wrap-around
+        # only slots <= pos have been written.
+        valid = (idx <= pos) | (pos >= S)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        s = jnp.tanh(s / c) * c
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, vf).reshape(B, 1, H * hd).astype(x.dtype)
+    return o @ params["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------- MLP
+def mlp_init(key, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": truncnorm(k1, (d, d_ff), 1.0 / math.sqrt(d), dtype),
+        "wg": truncnorm(k2, (d, d_ff), 1.0 / math.sqrt(d), dtype),
+        "wo": truncnorm(k3, (d_ff, d), 1.0 / math.sqrt(d_ff), dtype),
+    }
+
+
+def mlp_fwd(params: dict, x: jax.Array, act: str) -> jax.Array:
+    gate = x @ params["wg"]
+    gate = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)
+    return (gate * (x @ params["wi"])) @ params["wo"]
+
+
+# ---------------------------------------------------------------- embedding
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return truncnorm(key, (vocab, d), 1.0, dtype)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table_or_head: jax.Array, x: jax.Array, tied: bool) -> jax.Array:
+    w = table_or_head.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    if tied:
+        return xf @ w.T
+    return xf @ w

@@ -1,0 +1,366 @@
+"""Model assembly: init / forward / prefill / decode for every assigned arch.
+
+A model is a sequence of *segments*; each segment is (pattern, n_stages)
+where ``pattern`` is a tuple of layer kinds (e.g. ('rglru','rglru',
+'attn_local')) and the segment's parameters are stacked over stages and
+executed with ``lax.scan`` — one compiled stage body per segment regardless
+of depth.  This is the Switchboard "prebuilt simulator per unique block"
+principle applied to model compilation (DESIGN.md §3): compile cost is
+O(#unique layer kinds), not O(n_layers).
+
+Layer kinds: attn | attn_local | rglru | mlstm | slstm.
+Every layer is pre-norm residual; transformer-family kinds carry their own
+MLP (dense or MoE); xLSTM kinds are self-contained blocks (d_ff = 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import recurrent as R
+from .config import ModelConfig
+from .moe import moe_init, moe_fwd
+
+PyTree = Any
+
+
+# ----------------------------------------------------------------- segments
+def segments_of(cfg: ModelConfig) -> list[tuple[tuple[str, ...], int]]:
+    segs = [(cfg.block_pattern, cfg.n_stages)]
+    if cfg.remainder:
+        segs.append((cfg.remainder, 1))
+    return segs
+
+
+ATTN_KINDS = ("attn", "attn_local", "attn_moe")
+
+
+def _has_mlp(cfg: ModelConfig, kind: str) -> bool:
+    if kind == "attn_moe":
+        return True
+    return kind in ("attn", "attn_local", "rglru") and cfg.d_ff > 0
+
+
+def _uses_moe(cfg: ModelConfig, kind: str) -> bool:
+    return kind == "attn_moe"
+
+
+# ----------------------------------------------------------------- init
+def _layer_init(key, cfg: ModelConfig, kind: str, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: dict = {"norm1": L.rmsnorm_init(cfg.d_model, dtype)}
+    if kind in ATTN_KINDS:
+        p["mix"] = L.attention_init(k1, cfg, dtype)
+    elif kind == "rglru":
+        p["mix"] = R.rglru_block_init(k1, cfg, dtype)
+    elif kind == "mlstm":
+        p["mix"] = R.mlstm_block_init(k1, cfg, dtype)
+    elif kind == "slstm":
+        p["mix"] = R.slstm_block_init(k1, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if _has_mlp(cfg, kind):
+        p["norm2"] = L.rmsnorm_init(cfg.d_model, dtype)
+        if _uses_moe(cfg, kind):
+            p["mlp"] = moe_init(k2, cfg, dtype)
+        else:
+            p["mlp"] = L.mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> PyTree:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 4)
+    params: dict = {"embed": L.embed_init(keys[0], cfg.vocab, cfg.d_model, dtype)}
+    segs = []
+    for si, (pattern, n_stages) in enumerate(segments_of(cfg)):
+        def stage_init(k):
+            ks = jax.random.split(k, len(pattern))
+            return tuple(
+                _layer_init(ks[i], cfg, kind, dtype) for i, kind in enumerate(pattern)
+            )
+        stage_keys = jax.random.split(jax.random.fold_in(keys[1], si), n_stages)
+        segs.append(jax.vmap(stage_init)(stage_keys))
+    params["segments"] = segs
+    params["final_norm"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.truncnorm(
+            keys[2], (cfg.d_model, cfg.vocab), 1.0 / math.sqrt(cfg.d_model), dtype
+        )
+    return params
+
+
+# ----------------------------------------------------------------- forward
+def _layer_fwd(
+    p: dict, cfg: ModelConfig, kind: str, x: jax.Array, positions: jax.Array,
+    state: PyTree, constrain: Callable,
+):
+    """One layer, full-sequence. Returns (x, new_state, aux)."""
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    new_state: PyTree = state
+    if kind in ATTN_KINDS:
+        window = cfg.attn_window if kind == "attn_local" else None
+        mix = L.attention_fwd(p["mix"], cfg, h, positions, window)
+    elif kind == "rglru":
+        mix, new_state = R.rglru_block_fwd(p["mix"], cfg, h, state)
+    elif kind == "mlstm":
+        mix, new_state = R.mlstm_block_fwd(p["mix"], cfg, h, state)
+    elif kind == "slstm":
+        mix, new_state = R.slstm_block_fwd(p["mix"], cfg, h, state)
+    else:
+        raise ValueError(kind)
+    x = x + constrain(mix, "residual")
+    if _has_mlp(cfg, kind):
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if _uses_moe(cfg, kind):
+            ff, aux = moe_fwd(p["mlp"], cfg, h2, constrain)
+        else:
+            ff = L.mlp_fwd(p["mlp"], h2, cfg.hidden_act)
+        x = x + constrain(ff, "residual")
+    return x, new_state, aux
+
+
+def forward(
+    params: PyTree,
+    cfg: ModelConfig,
+    inputs: jax.Array,       # tokens (B, S) int32  OR embeddings (B, S, d)
+    constrain: Callable = lambda a, kind: a,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward (training / encoder). Returns (logits, moe_aux)."""
+    if cfg.input_mode == "embeddings":
+        x = inputs.astype(jnp.dtype(cfg.dtype))
+        B, S = x.shape[:2]
+    else:
+        x = L.embed_lookup(params["embed"], inputs)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        B, S = inputs.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = constrain(x, "activation")
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for seg_idx, (pattern, n_stages) in enumerate(segments_of(cfg)):
+        seg_params = params["segments"][seg_idx]
+
+        def stage_body(carry, stage_p):
+            x, aux = carry
+            for i, kind in enumerate(pattern):
+                x, _, a = _layer_fwd(stage_p[i], cfg, kind, x, positions, None, constrain)
+                aux = aux + a
+            return (x, aux), None
+
+        body = jax.checkpoint(stage_body) if cfg.remat else stage_body
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), seg_params, length=n_stages)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = L.unembed(head, x, cfg.tie_embeddings)
+    return logits, aux_total
+
+
+# ----------------------------------------------------------------- loss
+def loss_fn(
+    params: PyTree, cfg: ModelConfig, batch: dict, constrain: Callable = lambda a, k: a
+) -> tuple[jax.Array, dict]:
+    inputs = batch["inputs"]
+    labels = batch["labels"]  # (B, S) int32
+    logits, aux = forward(params, cfg, inputs, constrain)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - ll).mean()
+    z_loss = 1e-4 * (logz**2).mean()
+    moe_loss = 0.01 * aux
+    loss = nll + z_loss + moe_loss
+    return loss, {"nll": nll, "z_loss": z_loss, "moe_aux": aux}
+
+
+# ----------------------------------------------------------------- decode
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int) -> list:
+    """Per-segment stacked per-layer states for autoregressive decoding."""
+    dtype = jnp.dtype(cfg.dtype)
+
+    def one(kind):
+        if kind in ATTN_KINDS:
+            S = max_seq if kind == "attn" else min(cfg.attn_window or max_seq, max_seq)
+            shape = (batch, S, cfg.n_kv_heads, cfg.head_dim)
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        if kind == "rglru":
+            return R.rglru_init_state(cfg, batch)
+        if kind == "mlstm":
+            return R.mlstm_init_state(cfg, batch)
+        if kind == "slstm":
+            return R.slstm_init_state(cfg, batch)
+        raise ValueError(kind)
+
+    states = []
+    for pattern, n_stages in segments_of(cfg):
+        stage_state = tuple(one(kind) for kind in pattern)
+        states.append(
+            jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n_stages,) + x.shape), stage_state
+            )
+        )
+    return states
+
+
+def _layer_decode(
+    p: dict, cfg: ModelConfig, kind: str, x: jax.Array, pos: jax.Array, state: PyTree,
+    constrain: Callable,
+):
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        window = cfg.attn_window if kind == "attn_local" else None
+        mix, ck, cv = L.attention_decode(
+            p["mix"], cfg, h, state["k"], state["v"], pos, window
+        )
+        new_state = {"k": ck, "v": cv}
+    elif kind == "rglru":
+        mix, new_state = R.rglru_block_decode(p["mix"], cfg, h, state)
+    elif kind == "mlstm":
+        mix, new_state = R.mlstm_block_decode(p["mix"], cfg, h, state)
+    elif kind == "slstm":
+        mix, new_state = R.slstm_block_decode(p["mix"], cfg, h, state)
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    if _has_mlp(cfg, kind):
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if _uses_moe(cfg, kind):
+            ff, _ = moe_fwd(p["mlp"], cfg, h2, constrain)
+        else:
+            ff = L.mlp_fwd(p["mlp"], h2, cfg.hidden_act)
+        x = x + ff
+    return x, new_state
+
+
+def decode_step(
+    params: PyTree,
+    cfg: ModelConfig,
+    states: list,
+    token: jax.Array,  # (B,) int32 current token
+    pos: jax.Array,    # ()   int32 its position
+    constrain: Callable = lambda a, k: a,
+) -> tuple[list, jax.Array]:
+    """One autoregressive step. Returns (new_states, logits (B, vocab))."""
+    x = L.embed_lookup(params["embed"], token[:, None])
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    new_states = []
+    for seg_idx, (pattern, n_stages) in enumerate(segments_of(cfg)):
+        seg_params = params["segments"][seg_idx]
+        seg_state = states[seg_idx]
+
+        def stage_body(x, inp):
+            stage_p, stage_s = inp
+            new_s = []
+            for i, kind in enumerate(pattern):
+                x, s = _layer_decode(
+                    stage_p[i], cfg, kind, x, pos, stage_s[i], constrain
+                )
+                new_s.append(s)
+            return x, tuple(new_s)
+
+        x, new_seg_state = jax.lax.scan(
+            stage_body, x, (seg_params, seg_state), length=n_stages
+        )
+        new_states.append(new_seg_state)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = L.unembed(head, x, cfg.tie_embeddings)
+    return new_states, logits[:, 0, :]
+
+
+def prefill(
+    params: PyTree, cfg: ModelConfig, inputs: jax.Array, max_seq: int,
+    constrain: Callable = lambda a, k: a,
+) -> tuple[list, jax.Array]:
+    """Run the prompt through the model, building decode states.
+
+    Returns (states, last-token logits (B, vocab)).
+    """
+    if cfg.input_mode == "embeddings":
+        x = inputs.astype(jnp.dtype(cfg.dtype))
+        B, S = x.shape[:2]
+    else:
+        x = L.embed_lookup(params["embed"], inputs)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        B, S = inputs.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = constrain(x, "activation")
+    states = init_decode_state(cfg, B, max_seq)
+    new_states = []
+    for seg_idx, (pattern, n_stages) in enumerate(segments_of(cfg)):
+        seg_params = params["segments"][seg_idx]
+        seg_state = states[seg_idx]
+
+        def stage_body(x, inp):
+            stage_p, stage_s = inp
+            new_s = []
+            for i, kind in enumerate(pattern):
+                if kind in ATTN_KINDS:
+                    window = cfg.attn_window if kind == "attn_local" else None
+                    h = L.rmsnorm(stage_p[i]["norm1"], x, cfg.norm_eps)
+                    mix, kk, vv = _attention_prefill(
+                        stage_p[i]["mix"], cfg, h, positions, window, stage_s[i]
+                    )
+                    x = x + constrain(mix, "residual")
+                    if _has_mlp(cfg, kind):
+                        h2 = L.rmsnorm(stage_p[i]["norm2"], x, cfg.norm_eps)
+                        if _uses_moe(cfg, kind):
+                            ff, _ = moe_fwd(stage_p[i]["mlp"], cfg, h2, constrain)
+                        else:
+                            ff = L.mlp_fwd(stage_p[i]["mlp"], h2, cfg.hidden_act)
+                        x = x + constrain(ff, "residual")
+                    new_s.append({"k": kk, "v": vv})
+                else:
+                    x, s, _ = _layer_fwd(
+                        stage_p[i], cfg, kind, x, positions, None, constrain
+                    )
+                    # thread final recurrent state into the decode cache
+                    s = _coerce_rnn_state(cfg, kind, s)
+                    new_s.append(s)
+            return x, tuple(new_s)
+
+        x, new_seg_state = jax.lax.scan(
+            stage_body, x, (seg_params, seg_state), length=n_stages
+        )
+        new_states.append(new_seg_state)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = L.unembed(head, x[:, -1:, :], cfg.tie_embeddings)
+    return new_states, logits[:, 0, :]
+
+
+def _attention_prefill(p, cfg, h, positions, window, state):
+    """Full-sequence attention that also fills the KV cache."""
+    B, T, _ = h.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k = (h @ p["wk"]).reshape(B, T, Hkv, hd)
+    v = (h @ p["wv"]).reshape(B, T, Hkv, hd)
+    k = L.positional_rotate(cfg, k, positions)
+    mix = L.attention_fwd(p, cfg, h, positions, window)
+    S = state["k"].shape[1]
+    if T >= S:
+        ck = k[:, -S:, :, :]
+        cv = v[:, -S:, :, :]
+        if window is not None:
+            # ring layout: absolute position p lives at slot p % S
+            roll = (T % S)
+            ck = jnp.roll(ck, roll, axis=1)
+            cv = jnp.roll(cv, roll, axis=1)
+    else:
+        ck = jax.lax.dynamic_update_slice(state["k"], k, (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(state["v"], v, (0, 0, 0, 0))
+    return mix, ck, cv
+
+
+def _coerce_rnn_state(cfg, kind, s):
+    return s

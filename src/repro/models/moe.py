@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch (GShard-style,
+scatter/gather formulation — no O(tokens x experts x capacity) one-hot
+einsums, so HLO FLOPs stay close to the model's useful FLOPs).
+
+Dispatch pipeline per token group (a group = the tokens of one data shard):
+  1. router logits -> top_k experts + gate weights,
+  2. position_in_expert via cumsum of expert one-hots (int32),
+  3. tokens scattered into (E, capacity, d) expert buffers (dropped beyond
+     capacity — the paper-standard "dropping" strategy),
+  4. expert matmuls as batched einsum over the expert dim,
+  5. gather back + gate-weighted combine.
+
+Sharding: groups (G) ride the data axes; expert buffers are annotated to
+the 'model' axis between steps 3 and 4, which makes GSPMD materialize the
+dispatch all-to-all exactly once (see sharding/partition.py).  The expert
+dimension is the EP axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, MoEConfig
+from .layers import truncnorm, mlp_init, mlp_fwd
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> dict:
+    mc = cfg.moe
+    d, dff, E = cfg.d_model, mc.d_ff_expert, mc.n_experts
+    kr, ki, kg, ko, ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "router": truncnorm(kr, (d, E), s, jnp.float32),
+        "wi": truncnorm(ki, (E, d, dff), s, dtype),
+        "wg": truncnorm(kg, (E, d, dff), s, dtype),
+        "wo": truncnorm(ko, (E, dff, d), 1.0 / math.sqrt(dff), dtype),
+    }
+    if mc.shared_expert:
+        p["shared"] = mlp_init(ks, d, mc.d_ff_expert, dtype)
+    return p
+
+
+def _router(params, mc: MoEConfig, x: jax.Array):
+    """x: (G, S, d) -> (expert_idx (G,S,k), gates (G,S,k), aux_loss ())."""
+    logits = (x.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    if mc.gate_fn == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(scores, mc.top_k)  # (G,S,k)
+    if mc.router_norm_topk and mc.top_k > 1:
+        gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+    # Switch-style load-balancing aux loss (scatter-add, no one-hots).
+    E = logits.shape[-1]
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    counts = jnp.zeros((E,), jnp.float32).at[idx[..., 0].reshape(-1)].add(1.0)
+    ce = counts / (idx.shape[0] * idx.shape[1])
+    aux = E * jnp.sum(me * ce)
+    return idx, gates, aux
+
+
+def moe_fwd(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, d) — B doubles as the group dim
+    constrain: Callable[[jax.Array, str], jax.Array] = lambda a, kind: a,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B, S, d), aux_loss ()).
+
+    ``constrain`` is the sharding hook: called with ('dispatch' | 'combine')
+    buffers so the partitioner can pin the EP resharding points.
+    """
+    mc = cfg.moe
+    B, S, d = x.shape
+    E, k = mc.n_experts, mc.top_k
+    cap = max(int(mc.capacity_factor * S * k / E), 4)
+
+    idx, gates, aux = _router(params, mc, x)  # (B,S,k)
+
+    # position_in_expert over the flattened (S*k) choices of each group.
+    flat_idx = idx.reshape(B, S * k)
+    onehot = (flat_idx[..., None] == jnp.arange(E, dtype=jnp.int32)).astype(jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - 1  # inclusive -> own position
+    position = jnp.take_along_axis(
+        pos_in_e, flat_idx[..., None], axis=-1
+    )[..., 0]  # (B, S*k)
+    keep = (position < cap).reshape(B, S, k)
+    slot = jnp.where(
+        keep, flat_idx.reshape(B, S, k) * cap + position.reshape(B, S, k), E * cap
+    )  # (B, S, k); overflow slot swallows drops
+
+    # scatter tokens -> (B, E*cap+1, d).  One scatter per choice rank so the
+    # (B, S*k, d) token replication is never materialized.
+    buf = jnp.zeros((B, E * cap + 1, d), x.dtype)
+    for i in range(k):
+        buf = jax.vmap(lambda b, s_, v: b.at[s_].add(v))(buf, slot[:, :, i], x)
+    expert_in = buf[:, : E * cap].reshape(B, E, cap, d)
+    expert_in = constrain(expert_in, "dispatch")
+
+    # expert computation (batched over E — the EP-sharded einsum).
+    gate_h = jnp.einsum("becd,edf->becf", expert_in, params["wg"])
+    act = jax.nn.silu(gate_h) if cfg.hidden_act == "silu" else jax.nn.gelu(gate_h)
+    h = act * jnp.einsum("becd,edf->becf", expert_in, params["wi"])
+    expert_out = jnp.einsum("becf,efd->becd", h, params["wo"])  # (B,E,cap,d)
+    expert_out = constrain(expert_out, "combine")
+
+    # gather + weighted combine (again per choice rank).
+    flat_out = expert_out.reshape(B, E * cap, d)
+    flat_out = jnp.concatenate([flat_out, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    y = jnp.zeros((B, S, d), jnp.float32)
+    for i in range(k):
+        got = jax.vmap(lambda f, s_: f[s_])(flat_out, slot[:, :, i])  # (B,S,d)
+        w = (gates[:, :, i] * keep[:, :, i]).astype(jnp.float32)
+        y = y + got.astype(jnp.float32) * w[..., None]
+    y = y.astype(x.dtype)
+
+    if mc.shared_expert:
+        y = y + mlp_fwd(params["shared"], x, cfg.hidden_act)
+    return y, aux

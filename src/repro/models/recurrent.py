@@ -1,0 +1,464 @@
+"""Recurrent time-mixing blocks: RG-LRU (Griffin/RecurrentGemma), mLSTM and
+sLSTM (xLSTM).  All are sub-quadratic in sequence length, which is what
+qualifies their architectures for the ``long_500k`` shape.
+
+Conventions match ``layers.py``: explicit param dicts, f32 recurrence math,
+params stored in model dtype.  Each block exposes:
+  *_init(key, cfg, dtype) -> params
+  *_fwd(params, cfg, x)   -> (y, final_state)   # full-sequence (train/prefill)
+  *_decode(params, cfg, x, state) -> (y, state) # single-token step
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from .config import ModelConfig
+from .layers import truncnorm
+
+# =========================================================== RG-LRU block
+# Griffin recurrent block (arXiv:2402.19427): two input branches; the x
+# branch goes through a short causal conv then the RG-LRU; the gate branch
+# modulates via GeLU; output projection mixes back to d_model.
+_C_RGLRU = 8.0  # Griffin's fixed recurrence sharpness
+
+
+def rglru_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, dr = cfg.d_model, cfg.rnn_dim
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    # Lambda init: a = sigmoid(lam)**c uniform-ish in (0.9, 0.999)
+    u = jax.random.uniform(ks[4], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log((u ** (1.0 / _C_RGLRU)) / (1.0 - u ** (1.0 / _C_RGLRU)))
+    return {
+        "wx": truncnorm(ks[0], (d, dr), s, dtype),
+        "wg": truncnorm(ks[1], (d, dr), s, dtype),
+        "conv": truncnorm(ks[2], (cfg.conv_width, dr), 1.0 / math.sqrt(cfg.conv_width), dtype),
+        "wa": truncnorm(ks[3], (dr, dr), 1.0 / math.sqrt(dr), dtype),
+        "lam": lam.astype(jnp.float32),
+        "wi": truncnorm(ks[5], (dr, dr), 1.0 / math.sqrt(dr), dtype),
+        "wo": truncnorm(jax.random.fold_in(key, 7), (dr, d), 1.0 / math.sqrt(dr), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, carry: jax.Array | None):
+    """Depthwise causal conv. x: (B, T, D); w: (W, D); carry: (B, W-1, D)."""
+    W = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)  # (B, T+W-1, D)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(W))
+    new_carry = xp[:, -(W - 1) :] if W > 1 else carry
+    return out, new_carry
+
+
+def _rglru_gates(params, xc: jax.Array):
+    """Decay a_t and normalized input for the linear recurrence (f32)."""
+    rt = jax.nn.sigmoid((xc @ params["wa"].astype(xc.dtype)).astype(jnp.float32))
+    it = jax.nn.sigmoid((xc @ params["wi"].astype(xc.dtype)).astype(jnp.float32))
+    log_a = -_C_RGLRU * rt * jax.nn.softplus(params["lam"])
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    xin = xc.astype(jnp.float32) * it * mult
+    return a, xin
+
+
+def rglru_block_fwd(params: dict, cfg: ModelConfig, x: jax.Array, state=None):
+    """x: (B, T, d). state: None or dict(conv=(B,W-1,dr), h=(B,dr))."""
+    xb = x @ params["wx"]
+    gate = jax.nn.gelu((x @ params["wg"]).astype(jnp.float32))
+    conv_carry = None if state is None else state["conv"]
+    xc, conv_carry = _causal_conv(xb, params["conv"], conv_carry)
+    a, xin = _rglru_gates(params, xc)
+    h0 = None if state is None else state["h"]
+    use_kernel = cfg.use_kernels and xin.shape[1] % 256 == 0 and xin.shape[2] % 256 == 0
+    h, h_last = kops.rglru(
+        xin.astype(jnp.float32), a, h0, use_kernel=use_kernel
+    )
+    y = (h.astype(jnp.float32) * gate).astype(x.dtype) @ params["wo"]
+    return y, {"conv": conv_carry, "h": h_last.astype(jnp.float32)}
+
+
+def rglru_block_decode(params: dict, cfg: ModelConfig, x: jax.Array, state: dict):
+    """x: (B, 1, d) single step."""
+    return rglru_block_fwd(params, cfg, x, state)
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.rnn_dim), _dt(cfg)),
+        "h": jnp.zeros((batch, cfg.rnn_dim), jnp.float32),
+    }
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# =========================================================== mLSTM block
+# xLSTM (arXiv:2405.04517) matrix-memory block, pre-up-projection style:
+# up-project 2x, causal conv feeds q/k, exponential-gated matrix memory,
+# learnable skip, gated down-projection.  Parallel (training) form uses the
+# stabilized decay-matrix formulation; decode uses the recurrent form with
+# state (C, n, m) per head.
+
+
+def mlstm_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di = 2 * d  # inner dim
+    H = cfg.n_heads
+    ks = jax.random.split(key, 9)
+    s = 1.0 / math.sqrt(d)
+    si = 1.0 / math.sqrt(di)
+    return {
+        "w_up": truncnorm(ks[0], (d, di), s, dtype),
+        "w_gate": truncnorm(ks[1], (d, di), s, dtype),
+        "conv": truncnorm(ks[2], (cfg.conv_width, di), 0.5, dtype),
+        "wq": truncnorm(ks[3], (di, di), si, dtype),
+        "wk": truncnorm(ks[4], (di, di), si, dtype),
+        "wv": truncnorm(ks[5], (di, di), si, dtype),
+        "w_if": truncnorm(ks[6], (di, 2 * H), si, dtype),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((H,), jnp.float32), 3.0 + jnp.arange(H, dtype=jnp.float32) * 0.5]
+        ),
+        "skip": jnp.ones((di,), dtype),
+        "w_down": truncnorm(ks[7], (di, d), si, dtype),
+    }
+
+
+MLSTM_CHUNK = 256  # chunkwise-parallel block length
+
+
+def mlstm_chunked(q, k, v, log_i, log_f, state, chunk: int = MLSTM_CHUNK):
+    """Chunkwise-parallel stabilized mLSTM (the xLSTM training form).
+
+    q/k/v: (B, T, H, hd) f32; log_i/log_f: (B, T, H) f32.
+    state: (C (B,H,hd,hd), n (B,H,hd), m (B,H)).
+    Within a chunk the decay matrix is quadratic (chunk x chunk); across
+    chunks the (C, n, m) state is carried recurrently — O(T*chunk) memory
+    instead of O(T^2), which is what makes train_4k / long-context shapes
+    feasible.  Returns (h (B,T,H,hd), (C, n, m) final).
+    """
+    B, T, H, hd = q.shape
+    c = min(chunk, T)
+    if T % c:
+        raise ValueError(f"T={T} must be divisible by chunk={c}")
+    nc = T // c
+
+    def to_chunks(x):
+        return jnp.moveaxis(x.reshape(B, nc, c, *x.shape[2:]), 1, 0)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lic, lfc = to_chunks(log_i), to_chunks(log_f)
+
+    def chunk_step(carry, inp):
+        C0, n0, m0 = carry  # (B,H,hd,hd), (B,H,hd), (B,H)
+        qt, kt, vt, li, lf = inp  # (B,c,H,hd) / (B,c,H)
+        F = jnp.cumsum(lf, axis=1)  # (B,c,H) decay from chunk start to t incl.
+        # per-step stabilizer: m_t = max(F_t + m0, max_{s<=t}(F_t - F_s + li_s))
+        g = li - F  # (B,c,H): li_s - F_s
+        g_run = jax.lax.cummax(g, axis=1)
+        m_t = jnp.maximum(F + m0[:, None], F + g_run)  # (B,c,H)
+
+        # inter-chunk term
+        scale_in = jnp.exp(F + m0[:, None] - m_t)  # (B,c,H)
+        h_inter = jnp.einsum("bchd,bhde->bche", qt, C0) * scale_in[..., None]
+        n_inter = jnp.einsum("bchd,bhd->bch", qt, n0) * scale_in
+
+        # intra-chunk term: D[t,s] = exp(F_t - F_s + li_s - m_t), s <= t
+        dmat = F[:, :, None] - F[:, None, :] + li[:, None, :] - m_t[:, :, None]
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        dexp = jnp.where(mask[None, :, :, None], jnp.exp(dmat), 0.0)  # (B,c,c,H)
+        s_qk = jnp.einsum("bthd,bshd->btsh", qt, kt) * dexp
+        h_intra = jnp.einsum("btsh,bshd->bthd", s_qk, vt)
+        n_intra = jnp.sum(s_qk, axis=2)  # (B,c,H)
+
+        norm = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_t))
+        h = (h_inter + h_intra) / (norm[..., None] + 1e-6)
+
+        # state update to chunk end
+        F_end = F[:, -1]  # (B,H)
+        m_end = jnp.maximum(F_end + m0, F_end + g_run[:, -1])
+        sc_state = jnp.exp(F_end[:, None] + li - F - m_end[:, None])  # (B,c,H)
+        C1 = C0 * jnp.exp(F_end + m0 - m_end)[..., None, None] + jnp.einsum(
+            "bchd,bche,bch->bhde", kt, vt, sc_state
+        )
+        n1 = n0 * jnp.exp(F_end + m0 - m_end)[..., None] + jnp.einsum(
+            "bchd,bch->bhd", kt, sc_state
+        )
+        return (C1, n1, m_end), h
+
+    (C, n, m), hs = jax.lax.scan(
+        chunk_step, state, (qc, kc, vc, lic, lfc)
+    )
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, H, hd)
+    return h, (C, n, m)
+
+
+def mlstm_block_fwd(params: dict, cfg: ModelConfig, x: jax.Array, state=None):
+    """Chunkwise-parallel form. x: (B, T, d) -> (y, state)."""
+    B, T, d = x.shape
+    H = cfg.n_heads
+    di = 2 * d
+    hd = di // H
+    up = x @ params["w_up"]  # (B, T, di)
+    gate = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32))
+    conv_carry = None if state is None else state["conv"]
+    qk_src, conv_carry = _causal_conv(up, params["conv"], conv_carry)
+    qk_src = jax.nn.silu(qk_src.astype(jnp.float32)).astype(x.dtype)
+    q = (qk_src @ params["wq"]).reshape(B, T, H, hd).astype(jnp.float32)
+    k = (qk_src @ params["wk"]).reshape(B, T, H, hd).astype(jnp.float32) / math.sqrt(hd)
+    v = (up @ params["wv"]).reshape(B, T, H, hd).astype(jnp.float32)
+    gif = (qk_src @ params["w_if"]).astype(jnp.float32) + params["b_if"]
+    log_i = gif[..., :H]  # (B, T, H) input gate (pre-exp)
+    log_f = jax.nn.log_sigmoid(gif[..., H:])  # (B, T, H)
+
+    if state is None:
+        rec0 = (
+            jnp.zeros((B, H, hd, hd), jnp.float32),
+            jnp.zeros((B, H, hd), jnp.float32),
+            jnp.full((B, H), -jnp.inf, jnp.float32),
+        )
+    else:
+        rec0 = (state["C"], state["n"], state["m"])
+    chunk = min(MLSTM_CHUNK, T)
+    h, (C, n, m) = mlstm_chunked(q, k, v, log_i, log_f, rec0, chunk=chunk)
+
+    h = h.reshape(B, T, di)
+    y = (h * gate + up.astype(jnp.float32) * params["skip"].astype(jnp.float32)).astype(
+        x.dtype
+    ) @ params["w_down"]
+    new_state = {"conv": conv_carry, "C": C, "n": n, "m": m}
+    return y, new_state
+
+
+def mlstm_block_decode(params: dict, cfg: ModelConfig, x: jax.Array, state: dict):
+    """Recurrent form, x: (B, 1, d)."""
+    B, _, d = x.shape
+    H = cfg.n_heads
+    di = 2 * d
+    hd = di // H
+    up = x @ params["w_up"]
+    gate = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32))
+    qk_src, conv_carry = _causal_conv(up, params["conv"], state["conv"])
+    qk_src = jax.nn.silu(qk_src.astype(jnp.float32)).astype(x.dtype)
+    q = (qk_src @ params["wq"]).reshape(B, H, hd).astype(jnp.float32)
+    k = (qk_src @ params["wk"]).reshape(B, H, hd).astype(jnp.float32) / math.sqrt(hd)
+    v = (up @ params["wv"]).reshape(B, H, hd).astype(jnp.float32)
+    gif = (qk_src[:, 0] @ params["w_if"]).astype(jnp.float32) + params["b_if"]
+    log_i = gif[:, :H]
+    log_f = jax.nn.log_sigmoid(gif[:, H:])
+
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(log_f + m, log_i)
+    fdec = jnp.exp(log_f + m - m_new)
+    iexp = jnp.exp(log_i - m_new)
+    C = C * fdec[..., None, None] + iexp[..., None, None] * (k[..., :, None] @ v[..., None, :])
+    n = n * fdec[..., None] + iexp[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    h = (num / (den[..., None] + 1e-6)).reshape(B, 1, di)
+    y = (h * gate + up.astype(jnp.float32) * params["skip"].astype(jnp.float32)).astype(
+        x.dtype
+    ) @ params["w_down"]
+    return y, {"conv": conv_carry, "C": C, "n": n, "m": m_new}
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    di = 2 * cfg.d_model
+    H = cfg.n_heads
+    hd = di // H
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), _dt(cfg)),
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -jnp.inf, jnp.float32),
+    }
+
+
+# =========================================================== sLSTM block
+# Scalar-memory LSTM with exponential gating.  Two structural properties of
+# the xLSTM paper are load-bearing for performance and kept here:
+#   * input projections W_{i,f,z,o} x_t do not depend on the recurrence, so
+#     they are hoisted out of the scan into one (B,T,d)x(d,4d) MXU matmul —
+#     the scan body touches only the recurrent weights;
+#   * recurrent matrices R_* are BLOCK-DIAGONAL per head (xLSTM §"sLSTM"),
+#     shrinking the per-step weight traffic from 4*d^2 to 4*d^2/H and making
+#     the recurrence bandwidth-feasible (EXPERIMENTS.md §Perf, xlstm cell).
+
+
+def slstm_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 10)
+    s = 1.0 / math.sqrt(d)
+    p = {}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p[f"w_{g}"] = truncnorm(ks[i], (d, d), s, dtype)
+        # block-diagonal recurrence: one (hd, hd) block per head
+        p[f"r_{g}"] = truncnorm(ks[4 + i], (H, hd, hd), 1.0 / math.sqrt(hd), dtype)
+    p["b_i"] = jnp.zeros((d,), jnp.float32)
+    p["b_f"] = jnp.full((d,), 3.0, jnp.float32)
+    p["b_z"] = jnp.zeros((d,), jnp.float32)
+    p["b_o"] = jnp.zeros((d,), jnp.float32)
+    # gated FFN (factor 4/3, GeGLU-ish) after the recurrence, per xLSTM
+    dff = max(4 * d // 3, 8)
+    p["ff_wi"] = truncnorm(ks[8], (d, dff), s, dtype)
+    p["ff_wg"] = truncnorm(jax.random.fold_in(key, 11), (d, dff), s, dtype)
+    p["ff_wo"] = truncnorm(ks[9], (dff, d), 1.0 / math.sqrt(dff), dtype)
+    return p
+
+
+def _slstm_pre(params, x: jax.Array) -> jax.Array:
+    """Hoisted input projections: (B, T, 4, d) f32."""
+    pre = jnp.stack(
+        [x @ params[f"w_{g}"] for g in ("i", "f", "z", "o")], axis=2
+    ).astype(jnp.float32)
+    bias = jnp.stack(
+        [params["b_i"], params["b_f"], params["b_z"], params["b_o"]], axis=0
+    )
+    return pre + bias[None, None]
+
+
+# --- custom-VJP recurrence -------------------------------------------------
+# Differentiating the scan naively makes XLA emit the recurrent-weight
+# gradient reduction (a cross-batch all-reduce under data parallelism)
+# INSIDE the backward loop — one collective per timestep (measured: 24,576
+# all-reduces for xlstm train_4k).  The restructured backward below collects
+# the per-step gate adjoints as scan outputs and computes
+#   dR_g = sum_t h_{t-1} (x) dpre_g,t
+# as ONE einsum after the loop, so the weight-grad all-reduce fires once.
+# (EXPERIMENTS.md §Perf, xlstm cell, iteration 3.)
+
+
+def _r_tree(params):
+    return {g: params[f"r_{g}"] for g in ("i", "f", "z", "o")}
+
+
+@jax.custom_vjp
+def _slstm_scan(r, pre, carry0):
+    """r: {g: (H,hd,hd)}; pre: (B,T,4,d) f32; carry0: (c,n,h,m) (B,d) f32.
+
+    Returns (hs (B,T,d) f32, carry_final)."""
+    hs, carry, _ = _slstm_scan_fwd_impl(r, pre, carry0)
+    return hs, carry
+
+
+def _slstm_step(r, carry, pre_t):
+    c, n, h, m = carry
+    B, d = h.shape
+    H = r["i"].shape[0]
+    hd = d // H
+    hb = h.reshape(B, H, hd)
+
+    def rmat(g):
+        # r stays in its storage dtype (bf16) on the wire; accumulate f32.
+        return jax.lax.dot_general(
+            hb.astype(r[g].dtype), r[g],
+            (((2,), (1,)), ((1,), (0,))),
+            preferred_element_type=jnp.float32,
+        ).transpose(1, 0, 2).reshape(B, d)
+
+    li = pre_t[:, 0] + rmat("i")
+    lf = jax.nn.log_sigmoid(pre_t[:, 1] + rmat("f"))
+    z = jnp.tanh(pre_t[:, 2] + rmat("z"))
+    o = jax.nn.sigmoid(pre_t[:, 3] + rmat("o"))
+    m_new = jnp.maximum(lf + m, li)
+    c = c * jnp.exp(lf + m - m_new) + jnp.exp(li - m_new) * z
+    n = n * jnp.exp(lf + m - m_new) + jnp.exp(li - m_new)
+    h = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h, m_new)
+
+
+def _slstm_scan_fwd_impl(r, pre, carry0):
+    # kernels/ops.slstm_scan keeps R VMEM-resident on TPU; the jnp scan twin
+    # runs elsewhere.  Sequences come back (B, T, d); the backward wants the
+    # PRE-step carries as (T, B, d), reconstructed by shifting.
+    hs, (cs, ns, ms), carry = kops.slstm_scan(r, pre, carry0)
+
+    def prev_seq(seq, first):
+        seq_t = jnp.moveaxis(seq, 1, 0)  # (T, B, d)
+        return jnp.concatenate([first[None], seq_t[:-1]], axis=0)
+
+    c0, n0, h0, m0 = carry0
+    carries_prev = (
+        prev_seq(cs, c0), prev_seq(ns, n0), prev_seq(hs, h0), prev_seq(ms, m0)
+    )
+    return hs, carry, carries_prev
+
+
+def _slstm_scan_fwd(r, pre, carry0):
+    hs, carry, carries_prev = _slstm_scan_fwd_impl(r, pre, carry0)
+    return (hs, carry), (r, pre, carries_prev)
+
+
+def _slstm_scan_bwd(res, grads):
+    r, pre, carries_prev = res
+    dhs, dcarry_final = grads
+    pre_seq = jnp.moveaxis(pre, 1, 0)  # (T,B,4,d)
+    dhs_seq = jnp.moveaxis(dhs.astype(jnp.float32), 1, 0)  # (T,B,d)
+
+    def body(g, inp):
+        carry_prev, pre_t, dh_t = inp
+        g = (g[0], g[1], g[2] + dh_t, g[3])
+        # pull the adjoint through one step, r treated as a constant
+        _, vjp_fn = jax.vjp(lambda cc, pp: _slstm_step(r, cc, pp), carry_prev, pre_t)
+        g_prev, dpre_t = vjp_fn(g)
+        return g_prev, dpre_t
+
+    g0 = jax.tree.map(lambda x: x.astype(jnp.float32), dcarry_final)
+    g_init, dpre_seq = jax.lax.scan(
+        body, g0, (carries_prev, pre_seq, dhs_seq), reverse=True
+    )
+    # one reduction for the recurrent weights, outside the loop:
+    h_prev_seq = carries_prev[2]  # (T, B, d)
+    T, B, d = h_prev_seq.shape
+    H, hd, _ = r["i"].shape
+    hb = h_prev_seq.reshape(T, B, H, hd)
+    gate_idx = {"i": 0, "f": 1, "z": 2, "o": 3}
+    dr = {
+        g: jnp.einsum(
+            "tbhd,tbhe->hde", hb, dpre_seq[:, :, gi].reshape(T, B, H, hd)
+        ).astype(r[g].dtype)
+        for g, gi in gate_idx.items()
+    }
+    dpre = jnp.moveaxis(dpre_seq, 0, 1)  # (B,T,4,d)
+    return dr, dpre, g_init
+
+
+_slstm_scan.defvjp(_slstm_scan_fwd, _slstm_scan_bwd)
+
+
+def slstm_block_fwd(params: dict, cfg: ModelConfig, x: jax.Array, state=None):
+    B, T, d = x.shape
+    pre = _slstm_pre(params, x)  # (B, T, 4, d) — one MXU matmul, not T
+    if state is None:
+        carry = _slstm_zero_carry(B, d)
+    else:
+        carry = (state["c"], state["n"], state["h"], state["m"])
+
+    hs, carry = _slstm_scan(_r_tree(params), pre, carry)
+    h = hs.astype(x.dtype)  # (B, T, d)
+    gate = jax.nn.gelu((h @ params["ff_wg"]).astype(jnp.float32)).astype(x.dtype)
+    y = (gate * (h @ params["ff_wi"])) @ params["ff_wo"]
+    new_state = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    return y, new_state
+
+
+def slstm_block_decode(params: dict, cfg: ModelConfig, x: jax.Array, state: dict):
+    return slstm_block_fwd(params, cfg, x, state)
+
+
+def _slstm_zero_carry(B, d):
+    z = jnp.zeros((B, d), jnp.float32)
+    return (z, z, z, jnp.full((B, d), -jnp.inf, jnp.float32))
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, d), -jnp.inf, jnp.float32)}

@@ -1,0 +1,83 @@
+"""AdamW with warmup-cosine schedule and global-norm clipping.
+
+Pure-functional (optax-style but dependency-free): ``init(params)`` builds
+the state, ``update(grads, state, params)`` returns (new_params, new_state,
+metrics).  Moments are f32 regardless of param dtype; the update is applied
+in f32 and cast back (mixed-precision master-weight behaviour without
+duplicating weights — the f32 master lives in the moments' precision story;
+see DESIGN.md).  State shards exactly like params (same tree structure), so
+optimizer memory rides the FSDP axes for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+    def schedule(self, step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(self.warmup_steps, 1)
+        decay_t = (step - self.warmup_steps) / jnp.maximum(
+            self.total_steps - self.warmup_steps, 1
+        )
+        decay_t = jnp.clip(decay_t, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * decay_t))
+        cos = self.min_lr_ratio + (1.0 - self.min_lr_ratio) * cos
+        return self.lr * jnp.where(step < self.warmup_steps, warm, cos)
+
+    def init(self, params: PyTree) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=jax.tree.map(jnp.copy, zeros))
+
+    def update(
+        self, grads: PyTree, state: AdamWState, params: PyTree
+    ) -> tuple[PyTree, AdamWState, dict]:
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(
+            jax.tree.reduce(lambda a, g: a + jnp.sum(g * g), gf, jnp.zeros((), jnp.float32))
+        )
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        gf = jax.tree.map(lambda g: g * scale, gf)
+
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g, state.mu, gf)
+        nu = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g, state.nu, gf)
+
+        def upd(p, m, v):
+            mh = m / b1c
+            vh = v / b2c
+            u = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu), {
+            "grad_norm": gnorm,
+            "lr": lr,
+        }

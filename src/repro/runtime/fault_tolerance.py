@@ -1,0 +1,108 @@
+"""Fault tolerance & elasticity runtime.
+
+Pieces (composed by launch/train.py):
+
+  * ``Watchdog`` — per-step timing with EWMA baseline; flags straggler steps
+    (step > mean + k*sigma) and hung steps (> hard timeout).  On a real
+    multi-host deployment the flags feed the coordinator; here they are
+    logged and surfaced in metrics, and tests assert the detection logic.
+  * ``run_resumable`` — the crash/restart loop: training state checkpoints
+    every ``ckpt_every``; on any exception the loop restores the latest
+    checkpoint (data-pipeline cursor included) and continues.  Elastic:
+    the restore path reshard-places arrays onto whatever mesh the restarted
+    process built (checkpoint/checkpointing.py).
+  * ``FailureInjector`` — deterministic fault injection for tests/drills
+    (the paper's cloud runs lose ECS tasks; we simulate that).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+
+@dataclass
+class Watchdog:
+    ewma_alpha: float = 0.1
+    sigma_k: float = 4.0
+    hard_timeout_s: float = 600.0
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    stragglers: list = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> dict:
+        flag = False
+        if self.n >= 5:
+            sd = math.sqrt(max(self.var, 1e-12))
+            if dt > self.mean + self.sigma_k * sd and dt > 1.5 * self.mean:
+                flag = True
+                self.stragglers.append((step, dt))
+        if self.n == 0:
+            self.mean, self.var = dt, 0.0
+        else:
+            d = dt - self.mean
+            self.mean += self.ewma_alpha * d
+            self.var = (1 - self.ewma_alpha) * (self.var + self.ewma_alpha * d * d)
+        self.n += 1
+        return {
+            "step_time_s": dt,
+            "step_time_mean_s": self.mean,
+            "straggler": flag,
+            "hung": dt > self.hard_timeout_s,
+        }
+
+
+class FailureInjector:
+    """Raises RuntimeError at the given (absolute) step numbers, once each."""
+
+    def __init__(self, fail_at: tuple[int, ...] = ()):
+        self.fail_at = set(fail_at)
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+def run_resumable(
+    *,
+    total_steps: int,
+    make_state: Callable[[], Any],          # fresh (step0) training state
+    restore_state: Callable[[], Any | None],  # latest checkpoint or None
+    train_one: Callable[[Any, int], Any],    # state, step -> state
+    save_state: Callable[[Any, int], None],
+    ckpt_every: int = 50,
+    max_restarts: int = 10,
+    watchdog: Watchdog | None = None,
+    on_metrics: Callable[[int, dict], None] | None = None,
+) -> Any:
+    """Crash-safe training loop: any exception -> restore + continue."""
+    restarts = 0
+    while True:
+        try:
+            restored = restore_state()
+            if restored is None:
+                state, step = make_state(), 0
+            else:
+                state, step = restored
+            while step < total_steps:
+                t0 = time.monotonic()
+                state = train_one(state, step)
+                step += 1
+                if watchdog is not None:
+                    m = watchdog.observe(step, time.monotonic() - t0)
+                    if on_metrics:
+                        on_metrics(step, m)
+                if step % ckpt_every == 0 or step == total_steps:
+                    save_state(state, step)
+            return state
+        except KeyboardInterrupt:
+            raise
+        except Exception as e:  # noqa: BLE001 — any worker failure
+            restarts += 1
+            if restarts > max_restarts:
+                raise RuntimeError(f"exceeded {max_restarts} restarts") from e
+            # loop: restore from latest checkpoint and continue
+            continue

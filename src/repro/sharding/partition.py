@@ -1,0 +1,237 @@
+"""Sharding rules: logical param/activation axes -> mesh PartitionSpecs.
+
+Strategy (2-D or 3-D mesh):
+  * data axes ``dp`` = ('data',) or ('pod', 'data')  — batch + FSDP
+  * tensor axis ``tp`` = 'model'                      — TP / EP
+
+Parameter rules (FSDP x TP 2-D sharding — every large matrix is sharded on
+BOTH mesh axis groups, so per-device bytes scale 1/(dp*tp)):
+
+  embed (V, d)          : (tp, dp)       vocab over model, d over data
+  attn wq/wk/wv (d, HD) : (dp, tp)
+  attn wo (HD, d)       : (tp, dp)
+  mlp wi/wg (d, f)      : (dp, tp)
+  mlp wo (f, d)         : (tp, dp)
+  moe router (d, E)     : (dp, None)
+  moe wi/wg (E, d, f)   : (tp, dp, None)  EP: experts over model
+  moe wo (E, f, d)      : (tp, None, dp)
+  rglru/mlstm/slstm mats: (dp, tp) input-major, (tp, dp) output-major
+  norms / scalars       : replicated
+
+Every rule is divisibility-guarded: an axis that does not divide the dim
+falls back to None (e.g. hubert's vocab=504 on a 16-way model axis).
+Stacked-segment params get a leading None for the stage dim automatically.
+
+Activation constraints (used via ``constrain(x, kind)``):
+  activation/residual (B, S, d): (dp, sp?, None) — optional sequence
+  sharding over 'model' for long-context prefill,
+  dispatch/combine (G, E, cap, d): (dp, tp, None, None) — pins the MoE
+  all-to-all boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """How a given (arch, shape, mesh) is partitioned."""
+
+    dp: tuple[str, ...] = ("data",)   # batch + FSDP axes
+    tp: str | None = "model"          # tensor/expert axis
+    seq_shard: bool = False           # Megatron-style sequence sharding (SP)
+    fsdp: bool = True                 # shard the non-tp dim of matrices over dp
+
+    def dp_size(self, mesh: Mesh) -> int:
+        n = 1
+        for a in self.dp:
+            n *= mesh.shape[a]
+        return n
+
+    def tp_size(self, mesh: Mesh) -> int:
+        return mesh.shape[self.tp] if self.tp else 1
+
+
+def _div(n: int, axes, mesh: Mesh):
+    """Return axes if they evenly divide n, else None."""
+    if axes is None:
+        return None
+    size = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= mesh.shape[a]
+    return axes if n % size == 0 else None
+
+
+# --------------------------------------------------------------- params
+_RULES: list[tuple[str, Any]] = [
+    # (regex on 'path/like/this' with shapes appended at match time)
+    (r"embed$", ("tp", "dp")),
+    (r"lm_head$", ("dp", "tp")),
+    (r"(norm1|norm2|final_norm).*scale$", (None,)),
+    (r"mix/w[qkv]$", ("dp", "tp")),
+    (r"mix/wo$", ("tp", "dp")),
+    (r"mlp/(wi|wg)$", ("dp", "tp")),
+    (r"mlp/wo$", ("tp", "dp")),
+    (r"mlp/router$", ("dp", None)),
+    (r"mlp/shared/(wi|wg)$", ("dp", "tp")),
+    (r"mlp/shared/wo$", ("tp", "dp")),
+    # rglru
+    (r"mix/(wx|wg)$", ("dp", "tp")),
+    (r"mix/conv$", (None, "tp")),
+    (r"mix/(wa|wi)$", ("dp", "tp")),
+    (r"mix/lam$", ("tp",)),
+    (r"mix/wo$", ("tp", "dp")),
+    # mlstm
+    (r"mix/(w_up|w_gate)$", ("dp", "tp")),
+    (r"mix/w_if$", ("dp", None)),
+    (r"mix/w_down$", ("tp", "dp")),
+    (r"mix/skip$", ("tp",)),
+    (r"mix/b_if$", (None,)),
+    # slstm
+    (r"mix/(w|r)_[ifzo]$", ("dp", "tp")),
+    (r"mix/b_[ifzo]$", (None,)),
+    (r"mix/ff_(wi|wg)$", ("dp", "tp")),
+    (r"mix/ff_wo$", ("tp", "dp")),
+]
+
+# MoE expert tensors (3-D) handled specially.
+_MOE_3D = [
+    (r"mlp/(wi|wg)$", ("tp", "dp", None)),
+    (r"mlp/wo$", ("tp", None, "dp")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(k.name)
+        elif isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(params_shapes: PyTree, strategy: Strategy, mesh: Mesh) -> PyTree:
+    """PartitionSpec tree for a params (or ShapeDtypeStruct) tree."""
+
+    def resolve(tag, dim):
+        if tag == "dp":
+            axes = strategy.dp if strategy.fsdp else None
+        elif tag == "tp":
+            axes = strategy.tp
+        else:
+            axes = tag
+        return _div(dim, axes, mesh)
+
+    def spec_for(path, leaf) -> P:
+        ps = _path_str(path)
+        shape = leaf.shape
+        in_segments = "segments" in ps
+        rank = len(shape)
+        eff_shape = shape[1:] if in_segments else shape  # strip stage dim
+
+        rules = _MOE_3D + _RULES if len(eff_shape) == 3 else _RULES
+        for pat, axes in rules:
+            if re.search(pat, ps):
+                if len(axes) != len(eff_shape):
+                    continue
+                resolved = tuple(resolve(a, d) for a, d in zip(axes, eff_shape))
+                if in_segments:
+                    resolved = (None,) + resolved
+                return P(*resolved)
+        return P()  # replicate by default
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shapes)
+
+
+def named_shardings(params_shapes: PyTree, strategy: Strategy, mesh: Mesh) -> PyTree:
+    specs = param_specs(params_shapes, strategy, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------- activations
+def make_constrain(strategy: Strategy, mesh: Mesh, seq_len: int | None = None):
+    """Returns constrain(x, kind) applying with_sharding_constraint."""
+    dp = strategy.dp
+
+    def constrain(x, kind: str):
+        if mesh is None:
+            return x
+        if kind in ("activation", "residual"):
+            if x.ndim != 3:
+                return x
+            sp = None
+            if strategy.seq_shard and strategy.tp and seq_len and seq_len % mesh.shape[strategy.tp] == 0:
+                sp = strategy.tp
+            spec = P(_div(x.shape[0], dp, mesh), sp, None)
+        elif kind == "dispatch" or kind == "combine":
+            # Both expert buffers stay expert-sharded (EP).  Measured
+            # alternatives for 'combine' (qwen3-moe train, §Perf bonus):
+            # resharding expert_out back to token ranks before the gather
+            # moves the 10x-padded capacity buffer over ICI (coll 144->405 s,
+            # refuted); the winning schedule (future work) is a shard_map'd
+            # combine: local gather + local top-k sum, then ONE (B,S,d)
+            # all-reduce (~2 GB/layer instead of 26 GB/layer).
+            spec = P(
+                _div(x.shape[0], dp, mesh),
+                _div(x.shape[1], strategy.tp, mesh),
+                None,
+                None,
+            )
+        elif kind == "logits":
+            spec = P(_div(x.shape[0], dp, mesh), None, _div(x.shape[-1], strategy.tp, mesh))
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+# --------------------------------------------------------------- batch/cache
+def batch_specs(cfg, shape, strategy: Strategy, mesh: Mesh) -> PyTree:
+    """Input shardings for a train batch."""
+    b = shape.global_batch
+    dp = _div(b, strategy.dp, mesh)
+    if cfg.input_mode == "embeddings":
+        return {"inputs": P(dp, None, None), "labels": P(dp, None)}
+    return {"inputs": P(dp, None), "labels": P(dp, None)}
+
+
+def decode_state_specs(state_shapes: PyTree, cfg, strategy: Strategy, mesh: Mesh) -> PyTree:
+    """Shardings for decode caches: batch over dp; heads/features over tp
+    with divisibility fallback to head_dim, then replicate."""
+
+    def spec_for(path, leaf) -> P:
+        shape = leaf.shape
+        ps = _path_str(path)
+        # stacked (n_stages, B, ...) leaves
+        stage = ("segments" in ps) or True  # decode states are always stacked
+        eff = shape[1:]
+        if len(eff) == 4 and ps.endswith(("k", "v")):  # (B, S, Hkv, hd)
+            b, s, hkv, hd = eff
+            tp_on_heads = _div(hkv, strategy.tp, mesh)
+            tp_on_hd = _div(hd, strategy.tp, mesh) if tp_on_heads is None else None
+            return P(None, _div(b, strategy.dp, mesh), None, tp_on_heads,
+                     tp_on_hd)
+        # recurrent states: (B, ...) — batch over dp, last dim over tp
+        resolved = [None, _div(eff[0], strategy.dp, mesh)]
+        for d in eff[1:-1]:
+            resolved.append(None)
+        if len(eff) > 1:
+            resolved.append(_div(eff[-1], strategy.tp, mesh))
+        return P(*resolved)
+
+    return jax.tree_util.tree_map_with_path(spec_for, state_shapes)

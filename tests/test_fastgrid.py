@@ -1,0 +1,78 @@
+"""Register/kernel-fused grid engine: equivalence with the queue engine,
+K-invariance, and credit-bounded backpressure (no packet loss)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.fastgrid import RegisterGridEngine
+
+
+def _mesh11():
+    return jax.make_mesh((1, 1), ("gr", "gc"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.mark.parametrize("k_epoch", [2, 8, 16])
+def test_register_engine_matmul_exact(k_epoch, rng):
+    M, R, C = 10, 8, 8
+    A = rng.randn(M, R).astype(np.float32)
+    B = rng.randn(R, C).astype(np.float32)
+    eng = RegisterGridEngine(R, C, _mesh11(), K=k_epoch, m_stream=M)
+    st = eng.run_until_done(eng.init(A, B), max_epochs=100_000)
+    np.testing.assert_allclose(eng.result(st), A @ B, rtol=1e-5)
+
+
+def test_register_matches_queue_engine(rng):
+    """Two different channel implementations (62-deep queues vs depth-1
+    registers + fused kernel) produce identical results — the latency-
+    insensitivity guarantee across backends."""
+    from repro.core.distributed import GridEngine
+    from repro.hw.systolic import SystolicCell, make_cell_params
+
+    M, R, C = 8, 6, 6
+    A = rng.randn(M, R).astype(np.float32)
+    B = rng.randn(R, C).astype(np.float32)
+
+    qeng = GridEngine(SystolicCell(m_stream=M), R, C, _mesh11(), K=4, capacity=8)
+    qs = qeng.init(jax.random.key(0), make_cell_params(A, B))
+    qs = qeng.run_until(
+        qs, lambda c: ((~c.is_south) | (c.y_idx >= M)).all(), 100_000
+    )
+    Yq = qeng.gather_cells(qs).y_buf[R - 1].T
+
+    reng = RegisterGridEngine(R, C, _mesh11(), K=4, m_stream=M)
+    Yr = reng.result(reng.run_until_done(reng.init(A, B), 100_000))
+    np.testing.assert_allclose(Yq, Yr, atol=0)
+
+
+def test_register_engine_multidevice():
+    """2x2 device grid in a subprocess: cross-granule slab exchange with
+    credits; results exact for several epoch lengths."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from repro.core.fastgrid import RegisterGridEngine
+        rng = np.random.RandomState(1)
+        M, R, C = 12, 8, 8
+        A = rng.randn(M, R).astype(np.float32)
+        B = rng.randn(R, C).astype(np.float32)
+        mesh = jax.make_mesh((2, 2), ('gr', 'gc'),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        for K in (2, 7, 16):
+            eng = RegisterGridEngine(R, C, mesh, K=K, m_stream=M)
+            st = eng.place(eng.init(A, B))
+            st = eng.run_until_done(st, max_epochs=100000)
+            np.testing.assert_allclose(eng.result(st), A @ B, rtol=1e-5)
+        print('FASTGRID-MULTI-OK')
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "FASTGRID-MULTI-OK" in out.stdout

@@ -1,0 +1,115 @@
+"""Network builder tests: the paper's loopback example (Listing 1/2),
+external ports, one-cycle bridges, and deterministic rate control."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Block, Network
+from repro.core.struct import pytree_dataclass
+
+
+@pytree_dataclass
+class IncState:
+    count: jax.Array
+
+
+class Increment(Block):
+    """Paper Listing 1: receive a packet, add 1 to word 0, retransmit."""
+
+    in_ports = ("to_rtl",)
+    out_ports = ("from_rtl",)
+    payload_words = 2
+
+    def init_state(self, key):
+        return IncState(count=jnp.zeros((), jnp.int32))
+
+    def step(self, state, rx, tx_ready):
+        (pay, valid) = rx["to_rtl"]
+        ready = tx_ready["from_rtl"]
+        fire = valid & ready
+        out = pay.at[0].add(1.0)
+        return (
+            state.replace(count=state.count + fire.astype(jnp.int32)),
+            {"to_rtl": fire},
+            {"from_rtl": (out, fire)},
+        )
+
+
+def build_loopback():
+    net = Network(payload_words=2, capacity=8)
+    dut = net.instantiate(Increment(), name="dut")
+    net.external_in(dut["to_rtl"], "tx")
+    net.external_out(dut["from_rtl"], "rx")
+    return net, net.build()
+
+
+def test_loopback_increment():
+    """The paper's quickstart: send a packet, receive data+1."""
+    _, sim = build_loopback()
+    state = sim.init(jax.random.key(0))
+    state, ok = sim.push_external(state, "tx", jnp.array([41.0, 7.0]))
+    assert bool(ok)
+    state = sim.run(state, 4)
+    state, pay, valid = sim.pop_external(state, "rx")
+    assert bool(valid)
+    np.testing.assert_allclose(np.asarray(pay), [42.0, 7.0])
+
+
+def test_bridge_latency_one_cycle():
+    """N_RX = N_TX = 1: a packet needs >= 2 cycles to traverse the block."""
+    _, sim = build_loopback()
+    state = sim.init(jax.random.key(0))
+    state, _ = sim.push_external(state, "tx", jnp.array([1.0, 0.0]))
+    state = sim.run(state, 1)  # block consumed, output pushed this cycle
+    _, _, valid1 = sim.pop_external(state, "rx")
+    state = sim.run(state, 1)
+    _, _, valid2 = sim.pop_external(state, "rx")
+    assert bool(valid2)  # present after 2 cycles at the latest
+
+
+def test_pipeline_of_blocks_order_preserved():
+    """Chain of 3 increment blocks: FIFO order, +3 total."""
+    net = Network(payload_words=2, capacity=8)
+    blk = Increment()
+    insts = [net.instantiate(blk, name=f"b{i}") for i in range(3)]
+    net.external_in(insts[0]["to_rtl"], "tx")
+    for a, b in zip(insts, insts[1:]):
+        net.connect(a["from_rtl"], b["to_rtl"])
+    net.external_out(insts[-1]["from_rtl"], "rx")
+    sim = net.build()
+    state = sim.init(jax.random.key(0))
+    for v in (10.0, 20.0, 30.0):
+        state, ok = sim.push_external(state, "tx", jnp.array([v, v]))
+        assert bool(ok)
+    state = sim.run(state, 16)
+    got = []
+    for _ in range(3):
+        state, pay, valid = sim.pop_external(state, "rx")
+        assert bool(valid)
+        got.append(float(pay[0]))
+    assert got == [13.0, 23.0, 33.0]
+
+
+def test_clock_divider_rate_control():
+    """§II-C deterministic rate control: a divider-2 block fires half as
+    often as a divider-1 block fed identical stimulus."""
+    class Counter(Increment):
+        pass
+
+    fast, slow = Counter(), Counter()
+    slow.clock_divider = 2
+    net = Network(payload_words=2, capacity=8)
+    fi = net.instantiate(fast, name="fast")
+    si = net.instantiate(slow, name="slow")
+    net.external_in(fi["to_rtl"], "ftx")
+    net.external_in(si["to_rtl"], "stx")
+    sim = net.build()
+    state = sim.init(jax.random.key(0))
+    for _ in range(6):
+        state, _ = sim.push_external(state, "ftx", jnp.array([0.0, 0.0]))
+        state, _ = sim.push_external(state, "stx", jnp.array([0.0, 0.0]))
+    state = sim.run(state, 6)
+    f_count = int(sim.group_state(state, fi).count)
+    s_count = int(sim.group_state(state, si).count)
+    assert f_count == 6
+    assert s_count == 3

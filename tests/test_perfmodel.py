@@ -1,0 +1,44 @@
+"""Performance-model tests (§II-C formulas + deterministic rate control)."""
+import pytest
+
+from repro.core.perfmodel import (
+    bsp_error_bound, dividers_for_rates, max_wall_rate, n_meas_actual,
+    n_meas_ideal,
+)
+
+
+def test_ideal_measurement_rate_ratio():
+    # Block B processes in 100 cycles at 2 GHz; A's clock is 1 GHz:
+    # A should measure 50 of its own cycles.
+    assert n_meas_ideal(100, 1e9, 2e9) == pytest.approx(50.0)
+
+
+def test_actual_measurement_reduces_to_ideal():
+    """With matched wall ratios, zero comm latency and zero bridge latency,
+    the paper's equation collapses to the ideal measurement."""
+    ideal = n_meas_ideal(100, 1e9, 2e9)
+    actual = n_meas_actual(100, 1e3, 2e3, t_comm=0.0, n_rx=0, n_tx=0)
+    assert actual == pytest.approx(ideal)
+
+
+def test_comm_term_dominates_at_high_wall_rates():
+    lo = n_meas_actual(100, 1e2, 2e2, t_comm=1e-3)
+    hi = n_meas_actual(100, 1e5, 2e5, t_comm=1e-3)
+    assert hi > lo  # error grows with wall rate (Fig. 15 mechanism)
+    # paper rule: F_wall << N_ideal / (2 T_comm) for accuracy
+    f_max = max_wall_rate(n_meas_ideal(100, 1e9, 2e9), t_comm=1e-3, rel_err=0.05)
+    err = n_meas_actual(100, f_max, 2 * f_max, 1e-3, 0, 0) - n_meas_ideal(100, 1, 2)
+    assert err / n_meas_ideal(100, 1, 2) == pytest.approx(0.05, rel=1e-6)
+
+
+def test_bsp_error_bound_monotone_in_k():
+    assert bsp_error_bound(1, 3, 1000) < bsp_error_bound(16, 3, 1000)
+    assert bsp_error_bound(8, 2, 100) == pytest.approx(2 * 8 * 2 / 100)
+
+
+def test_dividers_realize_exact_ratios():
+    # 1 GHz, 500 MHz, 250 MHz -> dividers 1, 2, 4
+    assert dividers_for_rates([1e9, 5e8, 2.5e8]) == [1, 2, 4]
+    # 3:2 rational ratio -> 2, 3
+    assert dividers_for_rates([3.0, 2.0]) == [2, 3]
+    assert dividers_for_rates([]) == []

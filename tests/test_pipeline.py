@@ -1,0 +1,99 @@
+"""Pipeline parallelism (core/pipeline.py): forward + gradients match the
+unpipelined reference; multi-device schedule verified in a subprocess."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _stage_fn(p, h):
+    return jnp.tanh(h @ p["w"] + p["b"])
+
+
+def _reference(params_stacked, x):
+    """Sequential execution of all stages over all microbatches."""
+    M = x.shape[0]
+    S = params_stacked["w"].shape[0]
+    h = x
+    for s in range(S):
+        p = jax.tree.map(lambda a: a[s], params_stacked)
+        h = jax.vmap(lambda hh: _stage_fn(p, hh))(h)
+    return h
+
+
+def _params(S, d, key):
+    ks = jax.random.split(key, 2)
+    return {
+        "w": jax.random.normal(ks[0], (S, d, d)) * (1.0 / np.sqrt(d)),
+        "b": jnp.zeros((S, d)),
+    }
+
+
+def test_pipeline_single_stage_identity():
+    from repro.core.pipeline import Pipeline
+
+    mesh = jax.make_mesh((1,), ("stage",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    d, M, mb = 8, 3, 4
+    params = _params(1, d, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (M, mb, d))
+    pipe = Pipeline(_stage_fn, mesh, axis="stage")
+    np.testing.assert_allclose(
+        np.asarray(pipe(params, x)), np.asarray(_reference(params, x)),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_pipeline_multidevice_fwd_and_grad():
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.pipeline import Pipeline, stage_shardings
+
+        def stage_fn(p, h):
+            return jnp.tanh(h @ p["w"] + p["b"])
+
+        S, d, M, mb = 4, 16, 6, 8
+        mesh = jax.make_mesh((S,), ("stage",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        ks = jax.random.split(jax.random.key(0), 2)
+        params = {"w": jax.random.normal(ks[0], (S, d, d)) / np.sqrt(d),
+                  "b": jnp.zeros((S, d))}
+        x = jax.random.normal(ks[1], (M, mb, d))
+        tgt = jax.random.normal(jax.random.key(2), (M, mb, d))
+
+        def reference(params, x):
+            h = x
+            for s in range(S):
+                p = jax.tree.map(lambda a: a[s], params)
+                h = jnp.tanh(h @ p["w"] + p["b"])
+            return h
+
+        pipe = Pipeline(stage_fn, mesh, axis="stage")
+        params_sharded = jax.device_put(params, stage_shardings(mesh, params))
+
+        out_p = pipe(params_sharded, x)
+        out_r = reference(params, x)
+        np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                                   rtol=1e-5, atol=1e-5)
+
+        # gradients: the backward pipeline emerges from jax.grad
+        loss_p = lambda p: jnp.sum((pipe(p, x) - tgt) ** 2)
+        loss_r = lambda p: jnp.sum((reference(p, x) - tgt) ** 2)
+        gp = jax.grad(loss_p)(params_sharded)
+        gr = jax.grad(loss_r)(params)
+        for k in ("w", "b"):
+            np.testing.assert_allclose(np.asarray(gp[k]), np.asarray(gr[k]),
+                                       rtol=1e-4, atol=1e-4)
+        print('PIPELINE-OK')
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "PIPELINE-OK" in out.stdout
