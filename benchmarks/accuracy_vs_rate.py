@@ -11,17 +11,17 @@ from .common import emit, run_subprocess
 
 CODE = """
 import numpy as np, jax, jax.numpy as jnp
+from repro.core.compat import make_mesh
 from repro.core.distributed import GridEngine
 from repro.hw.systolic import SystolicCell, make_cell_params
 rng = np.random.RandomState(7)
-M, Kd, N = 24, 8, 8
+M, Kd, N = {dims}
 A = rng.randn(M, Kd).astype(np.float32)
 B = rng.randn(Kd, N).astype(np.float32)
-mesh = jax.make_mesh((2, 2), ('gr','gc'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 2), ('gr','gc'))
 rows = []
 truth = None
-for K in (1, 2, 4, 8, 16, 32, 61):
+for K in {sweep}:
     eng = GridEngine(SystolicCell(m_stream=M), Kd, N, mesh, K=K, capacity=62)
     st = eng.place(eng.init(jax.random.key(0), make_cell_params(A, B)))
     st = eng.run_until(
@@ -37,8 +37,11 @@ for K, cyc, err in rows:
 """
 
 
-def bench():
-    out = run_subprocess(CODE, devices=4)
+def bench(smoke: bool = False):
+    code = CODE.replace(
+        "{dims}", "8, 4, 4" if smoke else "24, 8, 8"
+    ).replace("{sweep}", "(1, 4, 16)" if smoke else "(1, 2, 4, 8, 16, 32, 61)")
+    out = run_subprocess(code, devices=4)
     for line in out.splitlines():
         if line.startswith("ROW"):
             _, K, cyc, err = line.split()

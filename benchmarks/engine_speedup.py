@@ -12,18 +12,18 @@ import jax
 import numpy as np
 
 from .common import emit
+from repro.core.compat import make_mesh
 from repro.core.distributed import GridEngine
 from repro.core.fastgrid import RegisterGridEngine
 from repro.hw.systolic import SystolicCell, make_cell_params
 
 
-def bench():
+def bench(smoke: bool = False):
     rng = np.random.RandomState(0)
-    M, R, C, K = 32, 16, 16, 16
+    M, R, C, K = (8, 6, 6, 4) if smoke else (32, 16, 16, 16)
     A = rng.randn(M, R).astype(np.float32)
     B = rng.randn(R, C).astype(np.float32)
-    mesh = jax.make_mesh((1, 1), ("gr", "gc"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("gr", "gc"))
 
     qeng = GridEngine(SystolicCell(m_stream=M), R, C, mesh, K=K, capacity=62)
     qs = qeng.init(jax.random.key(0), make_cell_params(A, B))

@@ -12,8 +12,8 @@ from .common import emit, timeit
 from repro.core import queue as qmod
 
 
-def bench():
-    for n in (1, 64, 4096):
+def bench(smoke: bool = False):
+    for n in (1, 64) if smoke else (1, 64, 4096):
         q = qmod.make_queues(n, 2, 62)
         pay = jnp.ones((n, 2))
         pv = jnp.ones((n,), bool)

@@ -12,7 +12,11 @@ paper-artifact mapping):
     sim_throughput     Fig. 14 throughput vs design size
     accuracy_vs_rate   Fig. 15 measurement error vs sync rate (K)
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only name]
+Run: PYTHONPATH=src python -m benchmarks.run [--only name] [--smoke]
+
+--smoke shrinks every suite to a tiny cycle budget (CPU-friendly) so the
+whole harness doubles as a per-PR engine-regression gate (scripts/ci.sh);
+the numbers are meaningless in that mode, only pass/fail matters.
 """
 import argparse
 import sys
@@ -38,7 +42,12 @@ SUITES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny cycle budgets; pass/fail only (CI)")
     args = ap.parse_args()
+    if args.only and args.only not in {n for n, _ in SUITES}:
+        ap.error(f"unknown benchmark {args.only!r}; "
+                 f"choose from {', '.join(n for n, _ in SUITES)}")
     print("name,us_per_call,derived")
     failed = []
     for name, fn in SUITES:
@@ -46,7 +55,7 @@ def main() -> None:
             continue
         print(f"# --- {name} ---", flush=True)
         try:
-            fn()
+            fn(smoke=args.smoke)
         except Exception:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()

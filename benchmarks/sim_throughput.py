@@ -11,17 +11,17 @@ import numpy as np
 
 from .common import emit
 from repro.hw.systolic import make_systolic_network, make_cell_params, SystolicCell
+from repro.core.compat import make_mesh
 from repro.core.distributed import GridEngine
 
 
-def bench():
+def bench(smoke: bool = False):
     rng = np.random.RandomState(0)
-    for n in (4, 8, 16, 32):
+    for n in (4, 8) if smoke else (4, 8, 16, 32):
         M = 8
         A = rng.randn(M, n).astype(np.float32)
         B = rng.randn(n, n).astype(np.float32)
-        mesh = jax.make_mesh((1, 1), ("gr", "gc"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((1, 1), ("gr", "gc"))
         eng = GridEngine(SystolicCell(m_stream=M), n, n, mesh, K=16, capacity=8)
         state = eng.init(jax.random.key(0), make_cell_params(A, B))
         state = eng.run_epochs(state, 2)  # warmup/compile

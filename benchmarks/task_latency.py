@@ -12,18 +12,18 @@ import jax
 import numpy as np
 
 from .common import emit
+from repro.core.compat import make_mesh
 from repro.core.distributed import GridEngine
 from repro.hw.systolic import SystolicCell, make_cell_params
 from .backend_speedup import python_reference_sim
 
 
-def bench():
+def bench(smoke: bool = False):
     rng = np.random.RandomState(0)
-    M, K, N = 32, 16, 16
+    M, K, N = (8, 6, 6) if smoke else (32, 16, 16)
     A = rng.randn(M, K).astype(np.float32)
     B = rng.randn(K, N).astype(np.float32)
-    mesh = jax.make_mesh((1, 1), ("gr", "gc"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("gr", "gc"))
     eng = GridEngine(SystolicCell(m_stream=M), K, N, mesh, K=16, capacity=62)
 
     def done(c):

@@ -10,18 +10,18 @@ from .common import emit, run_subprocess
 
 CODE = """
 import time, numpy as np, jax
+from repro.core.compat import make_mesh
 from repro.core.distributed import GridEngine
 from repro.hw.systolic import SystolicCell, make_cell_params
 rng = np.random.RandomState(0)
-M, Kd, N = 32, 16, 16
+M, Kd, N = {dims}
 A = rng.randn(M, Kd).astype(np.float32)
 B = rng.randn(Kd, N).astype(np.float32)
-mesh = jax.make_mesh((2, 2), ('gr','gc'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 2), ('gr','gc'))
 eng = GridEngine(SystolicCell(m_stream=M), Kd, N, mesh, K=16, capacity=62)
 t0 = time.perf_counter()
 st = eng.place(eng.init(jax.random.key(0), make_cell_params(A, B)))
-jax.block_until_ready(st.cell.b)
+jax.block_until_ready(st.block_states[0].b)
 t_setup = time.perf_counter() - t0
 t0 = time.perf_counter()
 st2 = jax.block_until_ready(eng.run_epochs(st, 1))   # includes compile
@@ -33,8 +33,9 @@ print(f'BREAKDOWN {t_build:.3f} {t_setup:.3f} {t_run:.3f}')
 """
 
 
-def bench():
-    out = run_subprocess(CODE, devices=4)
+def bench(smoke: bool = False):
+    out = run_subprocess(CODE.replace("{dims}", "8, 6, 6" if smoke else "32, 16, 16"),
+                         devices=4)
     for line in out.splitlines():
         if line.startswith("BREAKDOWN"):
             _, build, setup, run = line.split()

@@ -21,6 +21,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
+from repro.core.compat import make_mesh
 from repro.core.distributed import GridEngine
 from repro.hw.systolic import SystolicCell, make_cell_params
 
@@ -37,8 +38,7 @@ def main() -> None:
     A = rng.randn(M, R).astype(np.float32)
     B = rng.randn(R, C).astype(np.float32)
 
-    mesh = jax.make_mesh((1, 1), ("gr", "gc"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("gr", "gc"))
     print(f"grid {R}x{C} = {R*C} cores, streaming {M} rows of A")
 
     def done(cells):

@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Per-PR gate: tier-1 tests + smoke benchmarks + the distributed example.
+#
+#   scripts/ci.sh            # everything
+#   scripts/ci.sh tests      # tier-1 tests only
+#   scripts/ci.sh smoke      # smoke benchmarks only
+#
+# The smoke benchmarks run every suite (all three engines, the distributed
+# exchange, the subprocess multi-device paths) on a tiny cycle budget, so
+# engine regressions are caught per-PR even where the full benchmark
+# numbers would take too long.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+stage="${1:-all}"
+
+if [[ "$stage" == "all" || "$stage" == "tests" ]]; then
+    if ! python -c "import hypothesis" 2>/dev/null; then
+        echo "WARNING: hypothesis not installed — property-based queue/systolic"
+        echo "         tests will be SKIPPED.  For full coverage run:"
+        echo "         pip install -r requirements-dev.txt"
+    fi
+    echo "=== tier-1 tests ==="
+    python -m pytest -x -q
+fi
+
+if [[ "$stage" == "all" || "$stage" == "smoke" ]]; then
+    echo "=== smoke benchmarks ==="
+    python -m benchmarks.run --smoke
+    echo "=== distributed heterogeneous-SoC example (4 fake devices) ==="
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        python examples/heterogeneous_soc.py
+fi
+
+echo "CI OK"

@@ -3,21 +3,26 @@
 Switchboard's modular-simulation model (blocks + latency-insensitive
 channels + SPSC queues + unsynchronized scale-out + rate-controlled
 performance measurement), adapted to the TPU execution model.  See
-DESIGN.md §2 for the mechanism-by-mechanism mapping.
+DESIGN.md for the mechanism-by-mechanism mapping and the three-layer
+architecture: Network description -> channel-graph IR + partition ->
+engine backend.
 
   packet      SB packet layout (§III-A)
   queue       SPSC ring buffers, single-cycle + epoch bulk ops (§III-B)
   block       ready/valid Block protocol + bridge semantics (§II-A)
-  network     SbNetwork analogue; single-netlist simulator (§III-F)
-  distributed epoch-batched shard_map grid engine (§II, §IV-B)
+  network     SbNetwork analogue; build(engine=...) entry point (§III-F)
+  graph       channel-graph IR shared by every backend (DESIGN.md §1)
+  distributed epoch-batched shard_map GraphEngine + GridEngine preset
   perfmodel   rate control + N_meas error model (§II-C)
   fastgrid    kernel-fused register-channel engine (§Perf optimized backend)
   pipeline    LM pipeline parallelism on the same channel semantics
+  compat      version-tolerant jax.make_mesh / jax.shard_map wrappers
 """
 from .block import Block
 from .network import Network, NetworkSim, NetworkState
+from .graph import ChannelGraph, grid_partition, normalize_partition
 from .queue import QueueArray, make_queues, DEFAULT_CAPACITY
-from .distributed import GridEngine, GridState
+from .distributed import GraphEngine, GraphState, GridEngine
 from .fastgrid import RegisterGridEngine
 from .pipeline import Pipeline
 from . import packet, perfmodel

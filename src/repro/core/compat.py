@@ -1,0 +1,67 @@
+"""Version-tolerant wrappers over fast-moving JAX APIs.
+
+The repo targets the JAX the container ships; newer call signatures
+(``jax.make_mesh(axis_types=...)``, ``jax.shard_map(check_vma=...)``) are
+accepted here and degraded gracefully so engines, tests, and benchmarks
+share one spelling:
+
+    from repro.core.compat import make_mesh, shard_map
+
+Both helpers are pure call-forwarders — no behavioural shimming beyond
+dropping/renaming keywords the installed JAX does not know about.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Sequence
+
+import jax
+
+__all__ = ["make_mesh", "shard_map"]
+
+
+def _supports_kwarg(fn: Callable, name: str) -> bool:
+    try:
+        return name in inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # builtins / C callables
+        return False
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices: Any = None,
+    axis_types: Any = None,
+):
+    """``jax.make_mesh`` that tolerates JAX versions without ``axis_types``.
+
+    ``axis_types`` (an explicit Auto/Manual marker in newer JAX) is dropped
+    when unsupported — older versions treat every axis as Auto, which is the
+    only mode this repo uses.
+    """
+    kwargs: dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and _supports_kwarg(jax.make_mesh, "axis_types"):
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` across JAX versions.
+
+    Newer JAX exposes ``jax.shard_map(..., check_vma=)``; older versions only
+    have ``jax.experimental.shard_map.shard_map(..., check_rep=)``.  The
+    engines always disable the replication/VMA check: their bodies mix
+    per-granule state with collectives in ways the checker rejects.
+    """
+    impl = getattr(jax, "shard_map", None)
+    if impl is not None:
+        kwargs: dict[str, Any] = {}
+        if _supports_kwarg(impl, "check_vma"):
+            kwargs["check_vma"] = False if check_vma is None else check_vma
+        return impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)

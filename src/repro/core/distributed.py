@@ -1,37 +1,49 @@
-"""Distributed epoch-batched grid simulation (paper §II, §IV-B; DESIGN.md §2).
+"""Distributed epoch-batched simulation of a partitioned channel graph
+(paper §II, §IV-B; DESIGN.md §2-§3).
 
-This is the TPU-native adaptation of Switchboard's scale-out story.  A grid
-of R×C uniform cells is partitioned into (Dr, Dc) device tiles ("granules",
-the paper's network-of-networks).  Each granule advances **K cycles of pure
-local simulation** (a ``lax.scan`` touching only granule-local state), then
-exchanges the contents of boundary queues with its neighbors via
+This is the TPU-native adaptation of Switchboard's scale-out story,
+generalized from a uniform grid to **any** topology the channel-graph IR
+(``repro.core.graph``) can describe.  A partition map assigns every block
+instance to a *granule* (the paper's network-of-networks node, here one
+device of a mesh).  Each granule advances **K cycles of pure local
+simulation** (a ``lax.scan`` touching only granule-local state), then
+exchanges the contents of boundary queues with its peers via
 ``lax.ppermute`` inside ``shard_map``:
 
     paper                      | here
     ---------------------------+---------------------------------
-    single-netlist granule     | device tile, vmapped cell step
+    single-netlist granule     | device, vmapped per-group step
     shm queue between granules | egress queue -> ppermute slab -> ingress
     free-running processes     | K-cycle epochs (bounded staleness)
     TCP bridge between hosts   | 'pod' tier of the same ppermute
     ready/valid backpressure   | credit return on the reverse ppermute
 
-Functional correctness is *independent of K* because every cross-granule
-channel is latency-insensitive — the epoch boundary only adds latency, which
-the channels tolerate by construction.  This is property-tested (results
-equal the single-netlist ground truth for K in {1..64}).
+Functional correctness is *independent of K* for handshaked dataflow
+because every cross-granule channel is latency-insensitive — the epoch
+boundary only adds latency, which the channels tolerate by construction.
+This is property-tested against the single-netlist ground truth
+(``tests/test_graph.py``); at K=1 the exchange runs every cycle and the
+distributed simulation is additionally *cycle-accurate*.
 
-Credit protocol: the receiver of a boundary channel advertises
-``free(ingress)`` after each fill; the sender drains at most that many
-packets next epoch.  Safety: only the sender fills the ingress queue, so the
-advertised credit can only be consumed by the sender's own future sends.
+Arbitrary granule adjacency: boundary channels are grouped into **routes**
+(one per directed granule pair) and routes are greedily edge-colored into
+**exchange classes**, each a partial permutation (every granule sends on at
+most one route and receives on at most one route per class).  One
+``ppermute`` moves a whole class's packet slabs; König's theorem bounds the
+number of classes by the maximum granule degree, so a nearest-neighbor grid
+needs exactly two classes (east, south) — the historical ``GridEngine``
+schedule falls out as a special case, and ``GridEngine`` below is now just
+a partition-map preset over ``GraphEngine``.
 
-Flow directions supported: east (gc axis) and south (gr axis), which covers
-systolic dataflow (paper Fig. 12) and 1-D pipelines (Dc=1 or Dr=1).
+Credit protocol (DESIGN.md §3): the receiver of a boundary channel
+advertises ``free(ingress)`` after each fill; the sender drains at most
+that many packets next epoch.  Safety: only the sender fills the ingress
+queue, so the advertised credit can only be consumed by the sender's own
+future sends.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -40,42 +52,527 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import queue as qmod
 from .block import Block
+from .compat import shard_map
+from .graph import ChannelGraph, grid_partition, normalize_partition
 from .struct import pytree_dataclass, static_field
 
 PyTree = Any
 
 
 @pytree_dataclass
-class GridState:
-    """All leaves carry leading (Dr, Dc) device dims, sharded P('gr','gc')."""
+class GraphTables:
+    """Per-granule lookup tables (device-varying, constant over time).
 
-    cell: PyTree  # leaves (Dr, Dc, Tr, Tc, ...)
-    qe: qmod.QueueArray  # (Dr, Dc, Tr*Tc, ...) west-input queues
-    qs: qmod.QueueArray  # (Dr, Dc, Tr*Tc, ...) north-input queues
-    ee: qmod.QueueArray  # (Dr, Dc, Tr, ...) east egress
-    es: qmod.QueueArray  # (Dr, Dc, Tc, ...) south egress
-    credit_e: jax.Array  # (Dr, Dc, Tr) packets we may send east
-    credit_s: jax.Array  # (Dr, Dc, Tc)
-    cycle: jax.Array  # (Dr, Dc) local cycle counters
-    epoch: jax.Array  # (Dr, Dc)
+    All leaves carry the leading device dims; index values are *local*
+    queue ids (0 = NULL_RX sentinel, 1 = NULL_TX sentinel).
+    """
 
-
-def _sq(tree: PyTree) -> PyTree:
-    """Strip the leading (1, 1) device dims inside shard_map."""
-    return jax.tree.map(lambda x: x.reshape(x.shape[2:]), tree)
+    rx_idx: tuple  # per group: (dev..., n_slot, n_in) int32
+    tx_idx: tuple  # per group: (dev..., n_slot, n_out) int32
+    active: tuple  # per group: (dev..., n_slot) bool — padding slots False
+    send_idx: tuple  # per class: (dev..., Cmax) int32 local egress queue ids
+    send_mask: tuple  # per class: (dev..., Cmax) bool
+    recv_idx: tuple  # per class: (dev..., Cmax) int32 local ingress queue ids
+    recv_mask: tuple  # per class: (dev..., Cmax) bool
 
 
-def _unsq(tree: PyTree) -> PyTree:
-    return jax.tree.map(lambda x: x.reshape((1, 1) + x.shape), tree)
+@pytree_dataclass
+class GraphState:
+    """All leaves carry leading device dims, sharded over the granule axes."""
+
+    queues: qmod.QueueArray  # (dev..., n_local, ...) granule-local queues
+    block_states: tuple  # per group: leaves (dev..., n_slot, ...)
+    credits: tuple  # per class: (dev..., Cmax) int32 send credits
+    cycle: jax.Array  # (dev...,) int32 local cycle counters
+    epoch: jax.Array  # (dev...,) int32
+    tables: GraphTables
 
 
-class GridEngine:
-    """Epoch-batched distributed simulator for a uniform cell grid.
+@pytree_dataclass
+class _ExchangeClass:
+    """One partial permutation of boundary routes (static aux data)."""
+
+    perm: tuple = static_field(default=())  # ((src_granule, dst_granule), ...)
+    cmax: int = static_field(default=0)  # max channels on any route
+
+
+def _sq(tree: PyTree, nd: int) -> PyTree:
+    """Strip the leading (1,) * nd device dims inside shard_map."""
+    return jax.tree.map(lambda x: x.reshape(x.shape[nd:]), tree)
+
+
+def _unsq(tree: PyTree, nd: int) -> PyTree:
+    return jax.tree.map(lambda x: x.reshape((1,) * nd + x.shape), tree)
+
+
+def _rank_within(groups: np.ndarray, n_groups: int) -> tuple[np.ndarray, np.ndarray]:
+    """For each element, its rank among elements of the same group value.
+
+    Returns (rank, counts).  Stable: earlier elements get lower ranks.
+    """
+    counts = np.bincount(groups, minlength=n_groups) if groups.size else np.zeros(
+        (n_groups,), np.int64
+    )
+    order = np.argsort(groups, kind="stable")
+    starts = np.zeros((n_groups,), np.int64)
+    if n_groups > 1:
+        starts[1:] = np.cumsum(counts[:-1])
+    rank = np.empty((groups.size,), np.int64)
+    rank[order] = np.arange(groups.size, dtype=np.int64) - np.repeat(starts, counts)
+    return rank, counts
+
+
+class GraphEngine:
+    """Epoch-batched distributed interpreter of a partitioned ChannelGraph.
+
+    graph:     the channel-graph IR (``Network.graph()`` or a builder).
+    partition: instance -> granule map (anything ``normalize_partition``
+               accepts); granules are the devices of ``mesh`` along
+               ``axes``, flattened row-major.
+    K:         cycles per epoch (staleness/amortization knob — the paper's
+               "max simulation rate" analogue, swept in Fig. 15).
+    """
+
+    def __init__(
+        self,
+        graph: ChannelGraph,
+        partition,
+        mesh: Mesh,
+        K: int,
+        axes: Sequence[str] | None = None,
+    ):
+        self.graph = graph
+        self.mesh = mesh
+        self.axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+        self.dev_shape = tuple(mesh.shape[a] for a in self.axes)
+        self.nd = len(self.dev_shape)
+        self.G = int(np.prod(self.dev_shape))
+        self.K = K
+        self.E = min(K, graph.capacity - 1)  # max packets/boundary channel/epoch
+        self.W = graph.payload_words
+        self.capacity = graph.capacity
+        self.dtype = graph.dtype
+        self.part = normalize_partition(graph, partition, self.G)
+        self._spec = P(*self.axes)
+        self._jit_cache: dict[Any, Callable] = {}
+        self._build_tables()
+
+    # ------------------------------------------------- host-side compilation
+    def _build_tables(self) -> None:
+        """Lower (graph, partition) to per-granule tables — all vectorized."""
+        g, G = self.graph, self.G
+        NRX, NTX = g.NULL_RX, g.NULL_TX
+        src_g, dst_g = g.channel_granules(self.part)
+        owner = np.where(src_g >= 0, src_g, dst_g)  # ext channels live with
+        boundary = (src_g >= 0) & (dst_g >= 0) & (src_g != dst_g)  # their block
+        cids = np.arange(g.n_channels, dtype=np.int64)
+
+        # Local queue id assignment: every channel owns one queue per granule
+        # it touches — internal/external channels one queue in their owner
+        # granule; boundary channels an egress queue (sender side) and an
+        # ingress queue (receiver side).  Ids 0/1 are the sentinels.
+        loc = (owner >= 0) & ~boundary
+        ent_g = np.concatenate([owner[loc], src_g[boundary], dst_g[boundary]])
+        ent_c = np.concatenate([cids[loc], cids[boundary], cids[boundary]])
+        n_loc = int(loc.sum())
+        n_bnd = int(boundary.sum())
+        ent_kind = np.concatenate(
+            [np.zeros(n_loc, np.int8), np.ones(n_bnd, np.int8), np.full(n_bnd, 2, np.int8)]
+        )
+        rank, counts = _rank_within(ent_g.astype(np.int64), G)
+        lid = 2 + rank
+        self.n_local = int(2 + (counts.max() if counts.size else 0))
+
+        # channel -> local queue id on its producer/consumer side
+        tx_local = np.full((g.n_channels,), NTX, np.int64)
+        rx_local = np.full((g.n_channels,), NRX, np.int64)
+        tx_local[ent_c[ent_kind == 0]] = lid[ent_kind == 0]
+        rx_local[ent_c[ent_kind == 0]] = lid[ent_kind == 0]
+        tx_local[ent_c[ent_kind == 1]] = lid[ent_kind == 1]  # egress
+        rx_local[ent_c[ent_kind == 2]] = lid[ent_kind == 2]  # ingress
+        tx_local[NTX], rx_local[NRX] = NTX, NRX
+        self._tx_local, self._rx_local = tx_local, rx_local
+        self._chan_owner = owner
+
+        # Per-group member placement + local port tables (padded to n_slot).
+        rx_t, tx_t, act_t = [], [], []
+        self._member_of: list[np.ndarray] = []  # (G, n_slot) member index
+        self._member_granule: list[np.ndarray] = []  # (n_m,)
+        self._member_slot: list[np.ndarray] = []  # (n_m,)
+        self._n_slot: list[int] = []
+        for gi, grp in enumerate(g.groups):
+            gm = self.part[grp.members].astype(np.int64)
+            slot, counts = _rank_within(gm, G)
+            n_slot = int(max(counts.max() if counts.size else 0, 1))
+            member_of = np.zeros((G, n_slot), np.int64)
+            active = np.zeros((G, n_slot), bool)
+            member_of[gm, slot] = np.arange(grp.n_members, dtype=np.int64)
+            active[gm, slot] = True
+            rxm = np.full((G, n_slot, g.rx_idx[gi].shape[1]), NRX, np.int64)
+            txm = np.full((G, n_slot, g.tx_idx[gi].shape[1]), NTX, np.int64)
+            rxm[gm, slot] = rx_local[g.rx_idx[gi]]
+            txm[gm, slot] = tx_local[g.tx_idx[gi]]
+            rx_t.append(rxm.astype(np.int32))
+            tx_t.append(txm.astype(np.int32))
+            act_t.append(active)
+            self._member_of.append(member_of)
+            self._member_granule.append(gm)
+            self._member_slot.append(slot)
+            self._n_slot.append(n_slot)
+        self._rx_tables, self._tx_tables, self._act_tables = rx_t, tx_t, act_t
+
+        # Boundary routes -> greedy edge coloring into exchange classes.
+        routes: dict[tuple[int, int], list[int]] = {}
+        for c in cids[boundary]:
+            routes.setdefault((int(src_g[c]), int(dst_g[c])), []).append(int(c))
+        classes: list[dict] = []
+        for (s, d), chans in sorted(
+            routes.items(), key=lambda kv: (-len(kv[1]), kv[0])
+        ):
+            for cl in classes:
+                if s not in cl["srcs"] and d not in cl["dsts"]:
+                    break
+            else:
+                cl = {"srcs": set(), "dsts": set(), "routes": []}
+                classes.append(cl)
+            cl["srcs"].add(s)
+            cl["dsts"].add(d)
+            cl["routes"].append(((s, d), chans))
+
+        self.classes: list[_ExchangeClass] = []
+        send_i, send_m, recv_i, recv_m = [], [], [], []
+        for cl in classes:
+            cmax = max(len(ch) for _, ch in cl["routes"])
+            si = np.zeros((G, cmax), np.int64)
+            sm = np.zeros((G, cmax), bool)
+            ri = np.zeros((G, cmax), np.int64)
+            rm = np.zeros((G, cmax), bool)
+            perm = []
+            for (s, d), chans in cl["routes"]:
+                k = len(chans)
+                si[s, :k] = tx_local[chans]
+                sm[s, :k] = True
+                ri[d, :k] = rx_local[chans]
+                rm[d, :k] = True
+                perm.append((s, d))
+            self.classes.append(_ExchangeClass(perm=tuple(perm), cmax=cmax))
+            send_i.append(si.astype(np.int32))
+            send_m.append(sm)
+            recv_i.append(ri.astype(np.int32))
+            recv_m.append(rm)
+        self._send_idx, self._send_mask = send_i, send_m
+        self._recv_idx, self._recv_mask = recv_i, recv_m
+
+    def _dev(self, arr: np.ndarray) -> jax.Array:
+        """(G, ...) host table -> (dev_shape..., ...) device array."""
+        return jnp.asarray(arr.reshape(self.dev_shape + arr.shape[1:]))
+
+    def tables(self) -> GraphTables:
+        return GraphTables(
+            rx_idx=tuple(self._dev(t) for t in self._rx_tables),
+            tx_idx=tuple(self._dev(t) for t in self._tx_tables),
+            active=tuple(self._dev(t) for t in self._act_tables),
+            send_idx=tuple(self._dev(t) for t in self._send_idx),
+            send_mask=tuple(self._dev(t) for t in self._send_mask),
+            recv_idx=tuple(self._dev(t) for t in self._recv_idx),
+            recv_mask=tuple(self._dev(t) for t in self._recv_mask),
+        )
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array, group_params: dict[int, PyTree] | None = None) -> GraphState:
+        """Initial state.  ``group_params[gi]`` overrides the IR's stacked
+        per-member params for group ``gi`` (leading dim = n_members, in
+        global instantiation order — the same order ``NetworkSim`` uses, so
+        per-member init is bit-identical across engines)."""
+        states = []
+        for gi, grp in enumerate(self.graph.groups):
+            blk = grp.block
+            params = grp.params
+            if group_params is not None and gi in group_params:
+                params = group_params[gi]
+            # Same key derivation as NetworkSim.init (group index + global
+            # member order), so per-member init is bit-identical across
+            # engines even for key-consuming blocks.
+            keys = jax.random.split(jax.random.fold_in(key, gi), grp.n_members)
+            mo = self._member_of[gi].reshape(self.dev_shape + (self._n_slot[gi],))
+            keys_l = keys[mo]
+            init = blk.init_state
+            for _ in range(self.nd + 1):
+                init = jax.vmap(init)
+            if params is not None:
+                params_l = jax.tree.map(lambda x: jnp.asarray(x)[mo], params)
+                st = init(keys_l, params_l)
+            else:
+                st = init(keys_l)
+            states.append(st)
+
+        q = qmod.make_queues(self.n_local, self.W, self.capacity, self.dtype)
+        queues = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, self.dev_shape + x.shape), q
+        )
+        cap1 = self.capacity - 1
+        credits = tuple(
+            jnp.full(self.dev_shape + (cl.cmax,), cap1, jnp.int32)
+            for cl in self.classes
+        )
+        return GraphState(
+            queues=queues,
+            block_states=tuple(states),
+            credits=credits,
+            cycle=jnp.zeros(self.dev_shape, jnp.int32),
+            epoch=jnp.zeros(self.dev_shape, jnp.int32),
+            tables=self.tables(),
+        )
+
+    def shardings(self) -> NamedSharding:
+        """NamedSharding for every GraphState leaf (granule-major)."""
+        return NamedSharding(self.mesh, self._spec)
+
+    def place(self, state: GraphState) -> GraphState:
+        sh = self.shardings()
+        return jax.tree.map(lambda x: jax.device_put(x, sh), state)
+
+    # ----------------------------------------------------------- local cycle
+    def _local_cycle(self, st: GraphState) -> GraphState:
+        """One cycle of the granule-local network (pre-squeezed state).
+
+        Identical semantics to ``NetworkSim.step`` — same pre-cycle queue
+        snapshot, same sentinel handling, same clock-divider rate control —
+        but driven by the granule-local tables."""
+        q = st.queues
+        tb = st.tables
+        NRX, NTX = self.graph.NULL_RX, self.graph.NULL_TX
+        fronts, valids = qmod.peek(q)
+        readies = ~qmod.full(q)
+        valids = valids.at[NRX].set(False)
+        readies = readies.at[NTX].set(True)
+
+        push_payload = jnp.zeros((self.n_local, self.W), self.dtype)
+        push_valid = jnp.zeros((self.n_local,), bool)
+        pop_ready = jnp.zeros((self.n_local,), bool)
+
+        new_states = []
+        for gi, grp in enumerate(self.graph.groups):
+            blk = grp.block
+            rxm, txm = tb.rx_idx[gi], tb.tx_idx[gi]
+            rx = {
+                port: (fronts[rxm[:, p]], valids[rxm[:, p]])
+                for p, port in enumerate(blk.in_ports)
+            }
+            tx_ready = {port: readies[txm[:, p]] for p, port in enumerate(blk.out_ports)}
+            bst = st.block_states[gi]
+            new_st, rx_ready, tx = jax.vmap(blk.step)(bst, rx, tx_ready)
+
+            if blk.clock_divider > 1:
+                en = (st.cycle % blk.clock_divider) == 0
+                new_st = jax.tree.map(lambda n, o: jnp.where(en, n, o), new_st, bst)
+                rx_ready = {k: v & en for k, v in rx_ready.items()}
+                tx = {k: (p, v & en) for k, (p, v) in tx.items()}
+            new_states.append(new_st)
+
+            for p, port in enumerate(blk.in_ports):
+                pop_ready = pop_ready.at[rxm[:, p]].max(rx_ready[port])
+            for p, port in enumerate(blk.out_ports):
+                pay, val = tx[port]
+                push_payload = push_payload.at[txm[:, p]].set(
+                    pay.astype(self.dtype), mode="drop"
+                )
+                push_valid = push_valid.at[txm[:, p]].max(val)
+
+        push_valid = push_valid.at[NTX].set(False)
+        pop_ready = pop_ready.at[NRX].set(False)
+        q2, _, _ = qmod.cycle(q, push_payload, push_valid, pop_ready)
+        return st.replace(
+            queues=q2, block_states=tuple(new_states), cycle=st.cycle + 1
+        )
+
+    # ---------------------------------------------------------------- epoch
+    def _pshift(self, x: jax.Array, perm) -> jax.Array:
+        if not perm:
+            return jnp.zeros_like(x)
+        return jax.lax.ppermute(x, self.axes, list(perm))
+
+    def _epoch(self, st: GraphState) -> GraphState:
+        """K local cycles + boundary exchange (runs inside shard_map)."""
+        st = jax.lax.scan(
+            lambda s, _: (self._local_cycle(s), None), st, None, length=self.K
+        )[0]
+        q = st.queues
+        tb = st.tables
+        new_credits = []
+        for r, cl in enumerate(self.classes):
+            sidx, smask = tb.send_idx[r], tb.send_mask[r]
+            ridx, rmask = tb.recv_idx[r], tb.recv_mask[r]
+            # drain egress queues (rows sidx), bounded by receiver credit
+            sub = qmod.QueueArray(
+                buf=q.buf[sidx], head=q.head[sidx], tail=q.tail[sidx],
+                capacity=q.capacity,
+            )
+            limit = jnp.where(smask, st.credits[r], 0)
+            sub2, slab, cnt = qmod.drain(sub, self.E, limit=limit)
+            q = q.replace(tail=q.tail.at[sidx].set(sub2.tail))
+            # one hop for the whole class (a partial permutation of granules)
+            slab_in = self._pshift(slab, cl.perm)
+            cnt_in = jnp.where(rmask, self._pshift(cnt, cl.perm), 0)
+            q = qmod_fill_at(q, ridx, slab_in, cnt_in)
+            # receiver advertises new free space; returns to the sender on
+            # the reverse permutation
+            cred = jnp.where(rmask, jnp.take(qmod.free(q), ridx), 0)
+            rev = tuple((d, s) for s, d in cl.perm)
+            new_credits.append(self._pshift(cred, rev))
+        return st.replace(
+            queues=q, credits=tuple(new_credits), epoch=st.epoch + 1
+        )
+
+    # ------------------------------------------------------------------ run
+    def epoch_fn(self):
+        """shard_map'd single-epoch function (used by dryrun + benchmarks)."""
+
+        def run(state):
+            return _unsq(self._epoch(_sq(state, self.nd)), self.nd)
+
+        return shard_map(
+            run, mesh=self.mesh, in_specs=self._spec, out_specs=self._spec
+        )
+
+    def run_epochs(self, state: GraphState, n_epochs: int) -> GraphState:
+        key = ("run", n_epochs)
+        if key not in self._jit_cache:
+
+            def run(state):
+                local = _sq(state, self.nd)
+                out = jax.lax.scan(
+                    lambda s, _: (self._epoch(s), None), local, None, length=n_epochs
+                )[0]
+                return _unsq(out, self.nd)
+
+            self._jit_cache[key] = jax.jit(
+                shard_map(run, mesh=self.mesh, in_specs=self._spec, out_specs=self._spec)
+            )
+        return self._jit_cache[key](state)
+
+    def run_cycles(self, state: GraphState, n_cycles: int) -> GraphState:
+        """Advance ``ceil(n_cycles / K)`` epochs (>= n_cycles local cycles)."""
+        return self.run_epochs(state, -(-n_cycles // self.K))
+
+    def run_until(
+        self,
+        state: GraphState,
+        done_fn: Callable[[GraphState], jax.Array],
+        max_epochs: int,
+        _cache_key: Any = None,
+    ) -> GraphState:
+        """Run epochs until ``done_fn(local_state)`` holds on every granule.
+
+        done_fn gets the granule-local (squeezed) GraphState and returns a
+        () bool; padding slots are live in ``block_states`` — mask with
+        ``local.tables.active[gi]`` when the partition is uneven.
+
+        The compiled loop is cached per (predicate, max_epochs).  The cache
+        pins the predicate object (``_cache_key`` if given, else ``done_fn``)
+        so a garbage-collected function's recycled id can never alias a
+        stale compilation.
+        """
+        anchor = _cache_key if _cache_key is not None else done_fn
+        key = ("until", id(anchor), max_epochs)
+        if key not in self._jit_cache:
+
+            def run(state):
+                local = _sq(state, self.nd)
+
+                # The global done flag is computed in the *body* and carried,
+                # so the while condition itself contains no collectives.
+                def cond(carry):
+                    s, pending = carry
+                    return (pending > 0) & (s.epoch < max_epochs)
+
+                def body(carry):
+                    s, _ = carry
+                    s = self._epoch(s)
+                    not_done = 1 - done_fn(s).astype(jnp.int32)
+                    pending = jax.lax.psum(not_done, self.axes)
+                    return s, pending
+
+                out, _ = jax.lax.while_loop(
+                    cond, body, (local, jnp.ones((), jnp.int32))
+                )
+                return _unsq(out, self.nd)
+
+            self._jit_cache[key] = (
+                anchor,  # strong ref: keeps the keyed id alive
+                jax.jit(
+                    shard_map(run, mesh=self.mesh, in_specs=self._spec, out_specs=self._spec)
+                ),
+            )
+        return self._jit_cache[key][1](state)
+
+    # ------------------------------------------------------- host utilities
+    def gather_group(self, state: GraphState, gi: int) -> PyTree:
+        """Group ``gi``'s member states in global instantiation order."""
+        n_slot = self._n_slot[gi]
+        idx = self._member_granule[gi] * n_slot + self._member_slot[gi]
+
+        def pick(x):
+            x = np.asarray(x)
+            flat = x.reshape((self.G * n_slot,) + x.shape[self.nd + 1:])
+            return flat[idx]
+
+        return jax.tree.map(pick, jax.device_get(state.block_states[gi]))
+
+    def group_state(self, state: GraphState, inst) -> PyTree:
+        """One instance's (unstacked) state — mirrors NetworkSim.group_state."""
+        inst_id = inst if isinstance(inst, int) else inst.inst_id
+        gi, k = self.graph.locate(inst_id)
+        didx = np.unravel_index(int(self._member_granule[gi][k]), self.dev_shape)
+        slot = int(self._member_slot[gi][k])
+        return jax.tree.map(
+            lambda x: jax.device_get(x)[didx + (slot,)], state.block_states[gi]
+        )
+
+    # ---------------------- host-side external ports (PySbTx/PySbRx analogue)
+    def _ext_loc(self, cid: int) -> tuple[tuple[int, ...], int]:
+        g = int(self._chan_owner[cid])
+        didx = tuple(int(i) for i in np.unravel_index(g, self.dev_shape))
+        lid = int(max(self._rx_local[cid], self._tx_local[cid]))
+        return didx, lid
+
+    def push_external(self, state: GraphState, name: str, payload):
+        cid = self.graph.ext_in[name]
+        didx, lid = self._ext_loc(cid)
+        idx = didx + (lid,)
+        q = state.queues
+        buf, head, ok = qmod.push_single(
+            q.buf[idx], q.head[idx], q.tail[idx], q.capacity,
+            jnp.asarray(payload, self.dtype),
+        )
+        new_q = q.replace(
+            buf=q.buf.at[idx].set(buf), head=q.head.at[idx].set(head)
+        )
+        return state.replace(queues=new_q), ok
+
+    def pop_external(self, state: GraphState, name: str):
+        cid = self.graph.ext_out[name]
+        didx, lid = self._ext_loc(cid)
+        idx = didx + (lid,)
+        q = state.queues
+        front, tail, valid = qmod.pop_single(
+            q.buf[idx], q.head[idx], q.tail[idx], q.capacity
+        )
+        new_q = q.replace(tail=q.tail.at[idx].set(tail))
+        return state.replace(queues=new_q), front, valid
+
+
+class GridEngine(GraphEngine):
+    """Uniform R×C grid preset over GraphEngine (the paper's §IV-B manycore).
 
     cell: Block with ports in=(w_in, n_in), out=(e_out, s_out).
     R, C: global grid shape; mesh: 2-D Mesh with axes (axis_r, axis_c).
-    K: cycles per epoch (the staleness/amortization knob — paper's
-       "max simulation rate" analogue, swept in the Fig. 15 benchmark).
+    K: cycles per epoch.
+
+    The grid topology is lowered to the channel-graph IR by the vectorized
+    ``ChannelGraph.grid`` builder and partitioned block-tile onto the device
+    grid; the exchange-class coloring then reduces to exactly the historic
+    east + south slab schedule.
     """
 
     def __init__(
@@ -91,234 +588,51 @@ class GridEngine:
         axis_r: str = "gr",
         axis_c: str = "gc",
     ):
+        Dr, Dc = mesh.shape[axis_r], mesh.shape[axis_c]
+        if R % Dr or C % Dc:
+            raise ValueError(f"grid {R}x{C} not divisible by device tile {Dr}x{Dc}")
+        graph = ChannelGraph.grid(
+            cell, R, C, payload_words=payload_words, dtype=dtype, capacity=capacity
+        )
+        super().__init__(
+            graph, grid_partition(R, C, Dr, Dc), mesh, K=K, axes=(axis_r, axis_c)
+        )
         self.cell = cell
         self.R, self.C = R, C
-        self.mesh = mesh
-        self.axis_r, self.axis_c = axis_r, axis_c
-        self.Dr = mesh.shape[axis_r]
-        self.Dc = mesh.shape[axis_c]
-        if R % self.Dr or C % self.Dc:
-            raise ValueError(f"grid {R}x{C} not divisible by device tile {self.Dr}x{self.Dc}")
-        self.Tr, self.Tc = R // self.Dr, C // self.Dc
-        self.K = K
-        self.E = min(K, capacity - 1)  # max packets per boundary channel/epoch
-        self.W = payload_words
-        self.capacity = capacity
-        self.dtype = dtype
-        self._spec = P(axis_r, axis_c)
-        self._jit_cache: dict[Any, Callable] = {}
+        self.Dr, self.Dc = Dr, Dc
+        self.Tr, self.Tc = R // Dr, C // Dc
 
-    # ------------------------------------------------------------------ init
-    def init(self, key: jax.Array, cell_params: PyTree) -> GridState:
+    def init(self, key: jax.Array, cell_params: PyTree) -> GraphState:
         """cell_params: pytree with leading (R, C) dims (global)."""
-        Dr, Dc, Tr, Tc = self.Dr, self.Dc, self.Tr, self.Tc
+        flat = jax.tree.map(
+            lambda x: jnp.reshape(jnp.asarray(x), (self.R * self.C,) + jnp.shape(x)[2:]),
+            cell_params,
+        )
+        return super().init(key, group_params={0: flat})
 
-        def tile(x):
-            # (R, C, ...) -> (Dr, Dc, Tr, Tc, ...)
-            return x.reshape((Dr, Tr, Dc, Tc) + x.shape[2:]).transpose(
-                (0, 2, 1, 3) + tuple(range(4, x.ndim + 2))
-            )
-
-        params_t = jax.tree.map(tile, cell_params)
-        keys = jax.random.split(key, self.R * self.C).reshape(Dr, Dc, Tr, Tc)
-        cell_state = jax.vmap(
-            jax.vmap(jax.vmap(jax.vmap(self.cell.init_state)))
-        )(keys, params_t)
-
-        def mkq(n):
-            q = qmod.make_queues(n, self.W, self.capacity, self.dtype)
-            return jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (Dr, Dc) + x.shape), q
-            )
-
-        cap1 = self.capacity - 1
-        return GridState(
-            cell=cell_state,
-            qe=mkq(Tr * Tc),
-            qs=mkq(Tr * Tc),
-            ee=mkq(Tr),
-            es=mkq(Tc),
-            credit_e=jnp.full((Dr, Dc, Tr), cap1, jnp.int32),
-            credit_s=jnp.full((Dr, Dc, Tc), cap1, jnp.int32),
-            cycle=jnp.zeros((Dr, Dc), jnp.int32),
-            epoch=jnp.zeros((Dr, Dc), jnp.int32),
+    def run_until(self, state, done_fn, max_epochs, _cache_key=None):
+        """done_fn gets the granule-local cell states, leaves (Tr*Tc, ...)."""
+        return super().run_until(
+            state,
+            lambda s: done_fn(s.block_states[0]),
+            max_epochs,
+            _cache_key=_cache_key if _cache_key is not None else done_fn,
         )
 
-    def shardings(self) -> PyTree:
-        """NamedSharding for every GridState leaf (device-grid major)."""
-        return NamedSharding(self.mesh, self._spec)
-
-    def place(self, state: GridState) -> GridState:
-        sh = self.shardings()
-        return jax.tree.map(lambda x: jax.device_put(x, sh), state)
-
-    # ----------------------------------------------------------- local cycle
-    def _local_cycle(self, st: GridState) -> GridState:
-        """One cycle of the granule-local network (pre-squeezed state)."""
-        Tr, Tc = self.Tr, self.Tc
-        qe, qs, ee, es = st.qe, st.qs, st.ee, st.es
-
-        w_front, w_valid = qmod.peek(qe)
-        n_front, n_valid = qmod.peek(qs)
-        rx = {
-            "w_in": (w_front.reshape(Tr, Tc, self.W), w_valid.reshape(Tr, Tc)),
-            "n_in": (n_front.reshape(Tr, Tc, self.W), n_valid.reshape(Tr, Tc)),
-        }
-        qe_ready = (~qmod.full(qe)).reshape(Tr, Tc)
-        qs_ready = (~qmod.full(qs)).reshape(Tr, Tc)
-        e_ready = jnp.concatenate([qe_ready[:, 1:], (~qmod.full(ee))[:, None]], axis=1)
-        s_ready = jnp.concatenate([qs_ready[1:, :], (~qmod.full(es))[None, :]], axis=0)
-        tx_ready = {"e_out": e_ready, "s_out": s_ready}
-
-        new_cell, rx_ready, tx = jax.vmap(jax.vmap(self.cell.step))(st.cell, rx, tx_ready)
-
-        e_pay, e_val = tx["e_out"]  # (Tr, Tc, W), (Tr, Tc)
-        s_pay, s_val = tx["s_out"]
-
-        # Internal pushes: cell (r, j-1) e_out -> qe[r, j]; shift right.
-        zpayc = jnp.zeros((Tr, 1, self.W), self.dtype)
-        zvalc = jnp.zeros((Tr, 1), bool)
-        qe_push_pay = jnp.concatenate([zpayc, e_pay[:, :-1]], axis=1).reshape(Tr * Tc, self.W)
-        qe_push_val = jnp.concatenate([zvalc, e_val[:, :-1]], axis=1).reshape(Tr * Tc)
-        zpayr = jnp.zeros((1, Tc, self.W), self.dtype)
-        zvalr = jnp.zeros((1, Tc), bool)
-        qs_push_pay = jnp.concatenate([zpayr, s_pay[:-1]], axis=0).reshape(Tr * Tc, self.W)
-        qs_push_val = jnp.concatenate([zvalr, s_val[:-1]], axis=0).reshape(Tr * Tc)
-
-        qe2, _, _ = qmod.cycle(qe, qe_push_pay, qe_push_val, rx_ready["w_in"].reshape(-1))
-        qs2, _, _ = qmod.cycle(qs, qs_push_pay, qs_push_val, rx_ready["n_in"].reshape(-1))
-        never = jnp.zeros((Tr,), bool)
-        ee2, _, _ = qmod.cycle(ee, e_pay[:, -1], e_val[:, -1], never)
-        es2, _, _ = qmod.cycle(es, s_pay[-1], s_val[-1], jnp.zeros((Tc,), bool))
-
-        return st.replace(cell=new_cell, qe=qe2, qs=qs2, ee=ee2, es=es2, cycle=st.cycle + 1)
-
-    # ---------------------------------------------------------------- epoch
-    def _epoch(self, st: GridState) -> GridState:
-        """K local cycles + boundary exchange (runs inside shard_map)."""
-        st = jax.lax.scan(lambda s, _: (self._local_cycle(s), None), st, None, length=self.K)[0]
-
-        Dr, Dc, Tr, Tc = self.Dr, self.Dc, self.Tr, self.Tc
-        perm_e = [(j, j + 1) for j in range(Dc - 1)]
-        perm_w = [(j + 1, j) for j in range(Dc - 1)]
-        perm_s = [(i, i + 1) for i in range(Dr - 1)]
-        perm_n = [(i + 1, i) for i in range(Dr - 1)]
-
-        def pshift(x, axis_name, perm):
-            if not perm:
-                return jnp.zeros_like(x)
-            return jax.lax.ppermute(x, axis_name, perm)
-
-        # --- eastward data ---
-        ee2, slab_e, cnt_e = qmod.drain(st.ee, self.E, limit=st.credit_e)
-        slab_e_in = pshift(slab_e, self.axis_c, perm_e)
-        cnt_e_in = pshift(cnt_e, self.axis_c, perm_e)
-        idx_w = jnp.arange(Tr, dtype=jnp.int32) * Tc  # local col-0 queue ids
-        qe2 = qmod_fill_at(st.qe, idx_w, slab_e_in, cnt_e_in)
-        # receiver advertises new free space; flows back west to the sender
-        cred_e_new = jnp.take(qmod.free(qe2), idx_w)
-        credit_e = pshift(cred_e_new, self.axis_c, perm_w)
-
-        # --- southward data ---
-        es2, slab_s, cnt_s = qmod.drain(st.es, self.E, limit=st.credit_s)
-        slab_s_in = pshift(slab_s, self.axis_r, perm_s)
-        cnt_s_in = pshift(cnt_s, self.axis_r, perm_s)
-        idx_n = jnp.arange(Tc, dtype=jnp.int32)  # local row-0 queue ids
-        qs2 = qmod_fill_at(st.qs, idx_n, slab_s_in, cnt_s_in)
-        cred_s_new = jnp.take(qmod.free(qs2), idx_n)
-        credit_s = pshift(cred_s_new, self.axis_r, perm_n)
-
-        return st.replace(
-            qe=qe2, qs=qs2, ee=ee2, es=es2,
-            credit_e=credit_e, credit_s=credit_s,
-            epoch=st.epoch + 1,
-        )
-
-    # ------------------------------------------------------------------ run
-    def epoch_fn(self):
-        """shard_map'd single-epoch function (used by dryrun + benchmarks)."""
-
-        def run(state):
-            local = _sq(state)
-            return _unsq(self._epoch(local))
-
-        return jax.shard_map(
-            run, mesh=self.mesh, in_specs=self._spec, out_specs=self._spec
-        )
-
-    def run_epochs(self, state: GridState, n_epochs: int) -> GridState:
-        key = ("run", n_epochs)
-        if key not in self._jit_cache:
-            def run(state):
-                local = _sq(state)
-                out = jax.lax.scan(
-                    lambda s, _: (self._epoch(s), None), local, None, length=n_epochs
-                )[0]
-                return _unsq(out)
-
-            self._jit_cache[key] = jax.jit(
-                jax.shard_map(run, mesh=self.mesh, in_specs=self._spec, out_specs=self._spec)
-            )
-        return self._jit_cache[key](state)
-
-    def run_until(
-        self,
-        state: GridState,
-        done_fn: Callable[[PyTree], jax.Array],
-        max_epochs: int,
-    ) -> GridState:
-        """Run epochs until ``done_fn(local_cell_states)`` holds everywhere.
-
-        done_fn gets (Tr, Tc, ...) local cell state, returns () bool.
-        """
-        key = ("until", id(done_fn), max_epochs)
-        if key not in self._jit_cache:
-            def run(state):
-                local = _sq(state)
-
-                # The global done flag is computed in the *body* and carried,
-                # so the while condition itself contains no collectives.
-                def cond(carry):
-                    s, pending = carry
-                    return (pending > 0) & (s.epoch < max_epochs)
-
-                def body(carry):
-                    s, _ = carry
-                    s = self._epoch(s)
-                    not_done = 1 - done_fn(s.cell).astype(jnp.int32)
-                    pending = jax.lax.psum(
-                        jax.lax.psum(not_done, self.axis_r), self.axis_c
-                    )
-                    return s, pending
-
-                out, _ = jax.lax.while_loop(
-                    cond, body, (local, jnp.ones((), jnp.int32))
-                )
-                return _unsq(out)
-
-            self._jit_cache[key] = jax.jit(
-                jax.shard_map(run, mesh=self.mesh, in_specs=self._spec, out_specs=self._spec)
-            )
-        return self._jit_cache[key](state)
-
-    # ------------------------------------------------------- host utilities
-    def gather_cells(self, state: GridState) -> PyTree:
+    def gather_cells(self, state: GraphState) -> PyTree:
         """Return cell states reassembled to global (R, C, ...) layout."""
-        Dr, Dc, Tr, Tc = self.Dr, self.Dc, self.Tr, self.Tc
-
-        def untile(x):
-            x = np.asarray(x)
-            return x.transpose((0, 2, 1, 3) + tuple(range(4, x.ndim))).reshape(
-                (self.R, self.C) + x.shape[4:]
-            )
-
-        return jax.tree.map(untile, jax.device_get(state.cell))
+        flat = self.gather_group(state, 0)
+        return jax.tree.map(
+            lambda x: x.reshape((self.R, self.C) + x.shape[1:]), flat
+        )
 
 
 def qmod_fill_at(q: qmod.QueueArray, idx: jax.Array, payloads: jax.Array, count: jax.Array) -> qmod.QueueArray:
     """Fill a subset of queues (rows ``idx``) of a QueueArray.
 
-    payloads: (len(idx), max_n, W); count: (len(idx),).
+    payloads: (len(idx), max_n, W); count: (len(idx),).  Rows with
+    ``count == 0`` are written back unchanged, so duplicate padding indices
+    are harmless.
     """
     sub = qmod.QueueArray(
         buf=q.buf[idx], head=q.head[idx], tail=q.tail[idx], capacity=q.capacity

@@ -27,6 +27,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..kernels import ops as kops
+from .compat import shard_map
+from .graph import ChannelGraph
 from .struct import pytree_dataclass
 
 PyTree = Any
@@ -95,9 +97,87 @@ class RegisterGridEngine:
         self.M = m_stream
         self._spec = P(axis_r, axis_c)
         self._cache: dict = {}
+        self._graph_ab: tuple[np.ndarray, np.ndarray] | None = None
+
+    # ------------------------------------------------------- IR entry point
+    @classmethod
+    def from_graph(
+        cls,
+        graph: ChannelGraph,
+        mesh: Mesh,
+        K: int,
+        axis_r: str = "gr",
+        axis_c: str = "gc",
+    ) -> "RegisterGridEngine":
+        """Build the register engine from the channel-graph IR.
+
+        This backend is specialized: the kernel fuses the systolic-matmul
+        cell semantics, so the IR must describe exactly the §IV-B topology —
+        one group of ``SystolicCell`` instances wired as a row-major R×C
+        east/south grid with stacked ``SystolicParams``.  The shape is
+        *verified* against a freshly generated reference grid IR; anything
+        else raises, steering the caller to engine="graph".
+        """
+        from ..hw.systolic import SystolicCell, SystolicParams
+
+        if len(graph.groups) != 1 or not isinstance(graph.groups[0].block, SystolicCell):
+            raise ValueError(
+                "engine='register' requires a single-group SystolicCell "
+                f"network, got {graph.summary()}"
+            )
+        grp = graph.groups[0]
+        if not isinstance(grp.params, SystolicParams):
+            raise ValueError("engine='register' requires stacked SystolicParams")
+        is_north = np.asarray(grp.params.is_north).astype(bool)
+        C = int(is_north.sum())
+        if C == 0 or grp.n_members % C:
+            raise ValueError("IR is not a rectangular systolic grid")
+        R = grp.n_members // C
+        ref = ChannelGraph.grid(
+            grp.block, R, C,
+            payload_words=graph.payload_words, dtype=graph.dtype,
+            capacity=graph.capacity,
+        )
+        # Compare channel structure up to channel *renumbering*: every
+        # channel is identified by its (src instance, dst instance) pair,
+        # which is unique in a grid.
+        def endpoint_map(g):
+            return {
+                (int(s), int(d)): cid
+                for cid, (s, d) in enumerate(zip(g.chan_src, g.chan_dst))
+                if cid >= 2
+            }
+
+        ref_map, act_map = endpoint_map(ref), endpoint_map(graph)
+        same = (
+            not graph.ext_in and not graph.ext_out
+            and graph.n_channels == ref.n_channels
+            and set(ref_map) == set(act_map)
+        )
+        if same:
+            renum = np.arange(ref.n_channels, dtype=np.int64)
+            for pair, rc in ref_map.items():
+                renum[rc] = act_map[pair]
+            same = np.array_equal(renum[ref.rx_idx[0]], graph.rx_idx[0]) and (
+                np.array_equal(renum[ref.tx_idx[0]], graph.tx_idx[0])
+            )
+        if not same:
+            raise ValueError(
+                "IR channel table is not the row-major east/south grid the "
+                "register backend is specialized for; use engine='graph'"
+            )
+        a_buf = np.asarray(grp.params.a_buf)  # (R*C, M)
+        M = a_buf.shape[-1]
+        A = a_buf.reshape(R, C, M)[:, 0, :].T  # west cells stream A[:, r]
+        B = np.asarray(grp.params.b).reshape(R, C)
+        eng = cls(R, C, mesh, K=K, m_stream=M, axis_r=axis_r, axis_c=axis_c)
+        eng._graph_ab = (A, B)
+        return eng
 
     # ------------------------------------------------------------------ init
-    def init(self, A: np.ndarray, B: np.ndarray) -> RegGridState:
+    def init(self, A: np.ndarray | None = None, B: np.ndarray | None = None) -> RegGridState:
+        if A is None and B is None and self._graph_ab is not None:
+            A, B = self._graph_ab  # engine came from the IR; operands stacked there
         R, C, M = self.R, self.C, self.M
         Dr, Dc, Tr, Tc = self.Dr, self.Dc, self.Tr, self.Tc
         rr, cc = np.meshgrid(np.arange(R), np.arange(C), indexing="ij")
@@ -193,8 +273,8 @@ class RegisterGridEngine:
         def run(state):
             return _unsq(self._epoch(_sq(state)))
 
-        return jax.shard_map(run, mesh=self.mesh, in_specs=self._spec,
-                             out_specs=self._spec, check_vma=False)
+        return shard_map(run, mesh=self.mesh, in_specs=self._spec,
+                         out_specs=self._spec, check_vma=False)
 
     def run_until_done(self, state: RegGridState, max_epochs: int) -> RegGridState:
         key = ("until", max_epochs)
@@ -222,8 +302,8 @@ class RegisterGridEngine:
                 return _unsq(out)
 
             self._cache[key] = jax.jit(
-                jax.shard_map(run, mesh=self.mesh, in_specs=self._spec,
-                              out_specs=self._spec, check_vma=False)
+                shard_map(run, mesh=self.mesh, in_specs=self._spec,
+                          out_specs=self._spec, check_vma=False)
             )
         return self._cache[key](state)
 

@@ -1,0 +1,332 @@
+"""Channel-graph intermediate representation (DESIGN.md §1).
+
+The IR sits between the user-facing ``Network`` builder and every execution
+backend.  It is a flat, engine-agnostic table of
+
+    (block group, instance slot, port)  ->  channel id
+
+plus the channel endpoint table and the external-port maps.  Everything is
+plain numpy — no jax arrays, no device state — so a graph can be built
+once and handed to any engine:
+
+    NetworkSim           interprets the whole graph as one netlist
+                         (``repro.core.network``),
+    GraphEngine          partitions instances into granules and runs the
+                         epoch-batched distributed protocol over arbitrary
+                         granule adjacency (``repro.core.distributed``),
+    RegisterGridEngine   pattern-matches the systolic-grid shape and runs
+                         the kernel-fused backend (``repro.core.fastgrid``).
+
+Conventions shared by all consumers:
+
+  * Channel ids 0 and 1 are sentinels: ``NULL_RX`` (reads never valid) and
+    ``NULL_TX`` (writes always accepted and dropped).  Unwired input ports
+    map to ``NULL_RX``; unwired output ports map to ``NULL_TX``.
+  * Instances of the same ``Block`` *object* form one group and are stepped
+    by a single vmapped body (the paper's "one prebuilt simulator per
+    unique block", §III-F).  ``rx_idx[g][i, p]`` / ``tx_idx[g][i, p]`` give
+    the channel driven by member ``i``'s ``p``-th in/out port.
+  * Channels are SPSC: each channel has exactly one producer port and one
+    consumer port (checked at build time).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+
+from .block import Block
+
+PyTree = Any
+
+NULL_RX = 0
+NULL_TX = 1
+_N_SENTINELS = 2
+
+
+@dataclasses.dataclass
+class GroupDef:
+    """One unique block type and its instances (in instantiation order)."""
+
+    block: Block
+    members: np.ndarray  # (n_m,) int32 global instance ids
+    names: tuple[str, ...]
+    params: PyTree | None  # stacked per-member params (leading n_m dim) or None
+
+    @property
+    def n_members(self) -> int:
+        return int(self.members.shape[0])
+
+
+class ChannelGraph:
+    """Flat channel-graph IR — the single source of truth for all engines."""
+
+    NULL_RX = NULL_RX
+    NULL_TX = NULL_TX
+
+    def __init__(
+        self,
+        *,
+        payload_words: int,
+        dtype: Any,
+        capacity: int,
+        groups: list[GroupDef],
+        rx_idx: list[np.ndarray],
+        tx_idx: list[np.ndarray],
+        chan_src: np.ndarray,
+        chan_dst: np.ndarray,
+        ext_in: Mapping[str, int],
+        ext_out: Mapping[str, int],
+    ):
+        self.payload_words = payload_words
+        self.dtype = dtype
+        self.capacity = capacity
+        self.groups = groups
+        self.rx_idx = rx_idx  # per group: (n_m, n_in) int32 global channel ids
+        self.tx_idx = tx_idx  # per group: (n_m, n_out) int32 global channel ids
+        self.chan_src = np.asarray(chan_src, np.int32)  # (n_channels,) inst or -1
+        self.chan_dst = np.asarray(chan_dst, np.int32)  # (n_channels,) inst or -1
+        self.ext_in = dict(ext_in)  # name -> channel id (host pushes)
+        self.ext_out = dict(ext_out)  # name -> channel id (host pops)
+        self.n_channels = int(self.chan_src.shape[0])
+        self.n_instances = sum(g.n_members for g in groups)
+        # instance id -> (group index, slot within group)
+        self.inst_loc = np.zeros((self.n_instances, 2), np.int32)
+        for gi, g in enumerate(groups):
+            self.inst_loc[g.members, 0] = gi
+            self.inst_loc[g.members, 1] = np.arange(g.n_members, dtype=np.int32)
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_network(cls, net) -> "ChannelGraph":
+        """Extract the IR from a built ``repro.core.network.Network``.
+
+        Channel numbering (sentinels, connections in declaration order, then
+        external-in, then external-out) matches the historical single-netlist
+        layout so states remain comparable across engine backends.
+        """
+        insts = net._instances
+
+        by_block: dict[int, list] = {}
+        order: list[int] = []
+        for inst in insts:
+            key = id(inst.block)
+            if key not in by_block:
+                by_block[key] = []
+                order.append(key)
+            by_block[key].append(inst)
+
+        groups: list[GroupDef] = []
+        for key in order:
+            members = by_block[key]
+            if any(m.params is not None for m in members):
+                params = jax.tree.map(
+                    lambda *xs: np.stack([np.asarray(x) for x in xs]),
+                    *[m.params for m in members],
+                )
+            else:
+                params = None
+            groups.append(
+                GroupDef(
+                    block=members[0].block,
+                    members=np.array([m.inst_id for m in members], np.int32),
+                    names=tuple(m.name for m in members),
+                    params=params,
+                )
+            )
+
+        n_channels = _N_SENTINELS
+        chan_of_tx: dict[tuple[int, str], int] = {}
+        chan_of_rx: dict[tuple[int, str], int] = {}
+        src_list: list[int] = [-1, -1]
+        dst_list: list[int] = [-1, -1]
+        for tx, rx in net._connections:
+            if (tx.inst_id, tx.port) in chan_of_tx:
+                raise ValueError(f"output port {tx} connected twice (SPSC)")
+            if (rx.inst_id, rx.port) in chan_of_rx:
+                raise ValueError(f"input port {rx} connected twice (SPSC)")
+            chan_of_tx[(tx.inst_id, tx.port)] = n_channels
+            chan_of_rx[(rx.inst_id, rx.port)] = n_channels
+            src_list.append(tx.inst_id)
+            dst_list.append(rx.inst_id)
+            n_channels += 1
+        ext_in: dict[str, int] = {}
+        for name, rx in net._external_in.items():
+            if (rx.inst_id, rx.port) in chan_of_rx:
+                raise ValueError(f"input port {rx} connected twice (SPSC)")
+            chan_of_rx[(rx.inst_id, rx.port)] = n_channels
+            ext_in[name] = n_channels
+            src_list.append(-1)
+            dst_list.append(rx.inst_id)
+            n_channels += 1
+        ext_out: dict[str, int] = {}
+        for name, tx in net._external_out.items():
+            if (tx.inst_id, tx.port) in chan_of_tx:
+                raise ValueError(f"output port {tx} connected twice (SPSC)")
+            chan_of_tx[(tx.inst_id, tx.port)] = n_channels
+            ext_out[name] = n_channels
+            src_list.append(tx.inst_id)
+            dst_list.append(-1)
+            n_channels += 1
+
+        rx_idx: list[np.ndarray] = []
+        tx_idx: list[np.ndarray] = []
+        for g in groups:
+            blk = g.block
+            rxm = np.full((g.n_members, len(blk.in_ports)), NULL_RX, np.int32)
+            txm = np.full((g.n_members, len(blk.out_ports)), NULL_TX, np.int32)
+            for i, inst_id in enumerate(g.members):
+                for p, port in enumerate(blk.in_ports):
+                    rxm[i, p] = chan_of_rx.get((int(inst_id), port), NULL_RX)
+                for p, port in enumerate(blk.out_ports):
+                    txm[i, p] = chan_of_tx.get((int(inst_id), port), NULL_TX)
+            rx_idx.append(rxm)
+            tx_idx.append(txm)
+
+        return cls(
+            payload_words=net.payload_words,
+            dtype=net.dtype,
+            capacity=net.capacity,
+            groups=groups,
+            rx_idx=rx_idx,
+            tx_idx=tx_idx,
+            chan_src=np.array(src_list, np.int32),
+            chan_dst=np.array(dst_list, np.int32),
+            ext_in=ext_in,
+            ext_out=ext_out,
+        )
+
+    @classmethod
+    def grid(
+        cls,
+        cell: Block,
+        R: int,
+        C: int,
+        *,
+        params: PyTree | None = None,
+        payload_words: int | None = None,
+        dtype: Any = None,
+        capacity: int | None = None,
+    ) -> "ChannelGraph":
+        """Vectorized builder for a uniform R×C grid of ``cell`` instances.
+
+        Dataflow is east (``out_ports[0]`` -> ``in_ports[0]``) and south
+        (``out_ports[1]`` -> ``in_ports[1]``), instance ids row-major —
+        the §IV-B manycore topology.  O(R*C) numpy, no Python per-instance
+        loop, so million-core graphs stay cheap to describe.
+        """
+        import jax.numpy as jnp
+        from . import queue as qmod
+
+        if len(cell.in_ports) != 2 or len(cell.out_ports) != 2:
+            raise ValueError("grid() needs a cell with 2 in and 2 out ports")
+        n = R * C
+        rr, cc = np.divmod(np.arange(n, dtype=np.int64), C)
+
+        n_east = R * (C - 1)
+        east_of = lambda r, c: _N_SENTINELS + r * (C - 1) + c  # noqa: E731
+        south_of = lambda r, c: _N_SENTINELS + n_east + r * C + c  # noqa: E731
+        n_channels = _N_SENTINELS + n_east + (R - 1) * C
+
+        chan_src = np.full((n_channels,), -1, np.int64)
+        chan_dst = np.full((n_channels,), -1, np.int64)
+        er, ec = np.divmod(np.arange(n_east, dtype=np.int64), C - 1) if C > 1 else (
+            np.zeros(0, np.int64), np.zeros(0, np.int64))
+        chan_src[_N_SENTINELS:_N_SENTINELS + n_east] = er * C + ec
+        chan_dst[_N_SENTINELS:_N_SENTINELS + n_east] = er * C + ec + 1
+        sr, sc = np.divmod(np.arange((R - 1) * C, dtype=np.int64), C)
+        chan_src[_N_SENTINELS + n_east:] = sr * C + sc
+        chan_dst[_N_SENTINELS + n_east:] = (sr + 1) * C + sc
+
+        rxm = np.empty((n, 2), np.int64)
+        txm = np.empty((n, 2), np.int64)
+        rxm[:, 0] = np.where(cc > 0, east_of(rr, cc - 1), NULL_RX)
+        rxm[:, 1] = np.where(rr > 0, south_of(rr - 1, cc), NULL_RX)
+        txm[:, 0] = np.where(cc < C - 1, east_of(rr, cc), NULL_TX)
+        txm[:, 1] = np.where(rr < R - 1, south_of(rr, cc), NULL_TX)
+
+        group = GroupDef(
+            block=cell,
+            members=np.arange(n, dtype=np.int32),
+            names=tuple(),  # names elided at this scale
+            params=params,
+        )
+        return cls(
+            payload_words=payload_words or cell.payload_words,
+            dtype=dtype if dtype is not None else jnp.float32,
+            capacity=capacity or qmod.DEFAULT_CAPACITY,
+            groups=[group],
+            rx_idx=[rxm.astype(np.int32)],
+            tx_idx=[txm.astype(np.int32)],
+            chan_src=chan_src.astype(np.int32),
+            chan_dst=chan_dst.astype(np.int32),
+            ext_in={},
+            ext_out={},
+        )
+
+    # -- queries -------------------------------------------------------------
+    def locate(self, inst_id: int) -> tuple[int, int]:
+        """(group index, slot) of a global instance id."""
+        gi, slot = self.inst_loc[inst_id]
+        return int(gi), int(slot)
+
+    def channel_granules(self, partition: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Per-channel (src granule, dst granule); -1 for host/sentinel ends."""
+        part = np.asarray(partition, np.int32)
+        src_g = np.where(self.chan_src >= 0, part[np.clip(self.chan_src, 0, None)], -1)
+        dst_g = np.where(self.chan_dst >= 0, part[np.clip(self.chan_dst, 0, None)], -1)
+        return src_g.astype(np.int32), dst_g.astype(np.int32)
+
+    def summary(self) -> str:
+        return (
+            f"ChannelGraph({self.n_instances} instances in {len(self.groups)} "
+            f"groups, {self.n_channels - _N_SENTINELS} channels, "
+            f"{len(self.ext_in)} ext-in, {len(self.ext_out)} ext-out)"
+        )
+
+
+# -- partition maps ----------------------------------------------------------
+
+def normalize_partition(graph: ChannelGraph, partition, n_granules: int) -> np.ndarray:
+    """Canonicalize a partition map to a (n_instances,) int32 granule vector.
+
+    Accepts ``None`` (everything on granule 0), a sequence of granule ids in
+    instance order, or a ``{instance_name: granule}`` mapping (unlisted
+    instances default to granule 0).
+    """
+    if partition is None:
+        part = np.zeros((graph.n_instances,), np.int32)
+    elif isinstance(partition, Mapping):
+        part = np.zeros((graph.n_instances,), np.int32)
+        name_to_inst = {
+            name: int(inst)
+            for g in graph.groups
+            for name, inst in zip(g.names, g.members)
+        }
+        for name, gran in partition.items():
+            if name not in name_to_inst:
+                raise KeyError(f"partition names unknown instance {name!r}")
+            part[name_to_inst[name]] = int(gran)
+    else:
+        part = np.asarray(partition, np.int32)
+        if part.shape != (graph.n_instances,):
+            raise ValueError(
+                f"partition has shape {part.shape}, expected ({graph.n_instances},)"
+            )
+    if part.size and (part.min() < 0 or part.max() >= n_granules):
+        raise ValueError(
+            f"partition assigns granules outside [0, {n_granules}): "
+            f"[{part.min()}, {part.max()}]"
+        )
+    return part
+
+
+def grid_partition(R: int, C: int, Dr: int, Dc: int) -> np.ndarray:
+    """Block-tile partition of a row-major R×C grid onto Dr×Dc granules."""
+    if R % Dr or C % Dc:
+        raise ValueError(f"grid {R}x{C} not divisible by device tile {Dr}x{Dc}")
+    Tr, Tc = R // Dr, C // Dc
+    rr, cc = np.divmod(np.arange(R * C, dtype=np.int64), C)
+    return ((rr // Tr) * Dc + (cc // Tc)).astype(np.int32)

@@ -24,22 +24,29 @@ Key properties carried over from the paper:
     ratios are matched *exactly* (deterministic analogue of the paper's
     sleep-based controller).
 
-``build()`` returns a single-netlist simulator (paper §III-F-2) — the whole
-network as one pure ``step`` function, suitable for ``lax.scan`` and used as
-the cycle-accurate ground truth for accuracy studies (Fig. 15).  The
-distributed epoch-batched engine lives in ``repro.core.distributed``.
+The builder lowers to the **channel-graph IR** (``repro.core.graph``), and
+``build(engine=...)`` hands that IR to any backend (DESIGN.md §1):
+
+    sim = net.build()                          # single-netlist NetworkSim
+    eng = net.build(engine="graph",            # distributed GraphEngine
+                    mesh=mesh, partition=part, K=8)
+    eng = net.build(engine="register", ...)    # kernel-fused fast backend
+
+``NetworkSim`` (engine="single") interprets the whole IR as one pure
+``step`` function, suitable for ``lax.scan`` and used as the cycle-accurate
+ground truth for accuracy studies (Fig. 15).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Mapping, Sequence
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import queue as qmod
 from .block import Block
+from .graph import ChannelGraph
 from .struct import pytree_dataclass, static_field
 
 PyTree = Any
@@ -115,92 +122,85 @@ class Network:
         self._external_out[name] = tx
         return name
 
-    # -- build ---------------------------------------------------------------
-    def build(self) -> "NetworkSim":
-        return NetworkSim(self)
+    # -- lowering ------------------------------------------------------------
+    def graph(self) -> ChannelGraph:
+        """Lower the builder state to the engine-agnostic channel-graph IR."""
+        return ChannelGraph.from_network(self)
+
+    def build(self, engine: str = "single", **kw):
+        """Lower to the IR and construct the selected backend (DESIGN.md §4).
+
+        engine="single"    -> NetworkSim (this module); no extra kwargs.
+        engine="graph"     -> distributed.GraphEngine; kwargs: mesh, K,
+                              partition (instance->granule map), axes.
+        engine="register"  -> fastgrid.RegisterGridEngine (systolic-grid
+                              networks only); kwargs: mesh, K.
+
+        (The uniform-grid preset ``distributed.GridEngine`` is constructed
+        directly — it builds its own grid IR without a Network.)
+        """
+        graph = self.graph()
+        if engine == "single":
+            if kw:
+                raise TypeError(f"engine='single' takes no kwargs, got {sorted(kw)}")
+            return NetworkSim(graph)
+        if engine == "graph":
+            from .distributed import GraphEngine
+
+            mesh = kw.pop("mesh")
+            K = kw.pop("K", 1)
+            axes = kw.pop("axes", tuple(mesh.axis_names))
+            partition = kw.pop("partition", None)
+            if kw:
+                raise TypeError(f"unknown build kwargs for engine='graph': {sorted(kw)}")
+            return GraphEngine(graph, partition, mesh, K=K, axes=axes)
+        if engine == "register":
+            from .fastgrid import RegisterGridEngine
+
+            return RegisterGridEngine.from_graph(graph, **kw)
+        raise ValueError(f"unknown engine {engine!r} (single | graph | register)")
 
 
 class NetworkSim:
-    """Single-netlist simulator for a built Network.
+    """Single-netlist simulator: a thin interpreter of the channel-graph IR.
 
     The step function is pure; ``run`` wraps it in ``jax.jit(lax.scan)``.
     """
 
-    def __init__(self, net: Network):
-        self.net = net
-        insts = net._instances
-
-        # Group instances by block object identity (one group per unique
-        # "prebuilt simulator").
-        groups: dict[int, list[Instance]] = {}
-        order: list[int] = []
-        for inst in insts:
-            key = id(inst.block)
-            if key not in groups:
-                groups[key] = []
-                order.append(key)
-            groups[key].append(inst)
-        self.groups: list[list[Instance]] = [groups[k] for k in order]
-        self.group_blocks: list[Block] = [g[0].block for g in self.groups]
-
-        # Channel table. Two sentinel channels:
-        #   0: NULL_RX — never written, reads always invalid.
-        #   1: NULL_TX — auto-drained every cycle, writes always ready.
-        self.NULL_RX, self.NULL_TX = 0, 1
-        n_channels = 2
-        chan_of_tx: dict[tuple[int, str], int] = {}
-        chan_of_rx: dict[tuple[int, str], int] = {}
-        for tx, rx in net._connections:
-            cid = n_channels
-            n_channels += 1
-            if (tx.inst_id, tx.port) in chan_of_tx:
-                raise ValueError(f"output port {tx} connected twice (SPSC)")
-            if (rx.inst_id, rx.port) in chan_of_rx:
-                raise ValueError(f"input port {rx} connected twice (SPSC)")
-            chan_of_tx[(tx.inst_id, tx.port)] = cid
-            chan_of_rx[(rx.inst_id, rx.port)] = cid
-        self.ext_in_chan: dict[str, int] = {}
-        for name, rx in net._external_in.items():
-            cid = n_channels
-            n_channels += 1
-            chan_of_rx[(rx.inst_id, rx.port)] = cid
-            self.ext_in_chan[name] = cid
-        self.ext_out_chan: dict[str, int] = {}
-        for name, tx in net._external_out.items():
-            cid = n_channels
-            n_channels += 1
-            chan_of_tx[(tx.inst_id, tx.port)] = cid
-            self.ext_out_chan[name] = cid
-        self.n_channels = n_channels
-
-        # Per-group port->channel index arrays.
-        self.rx_idx: list[np.ndarray] = []  # (n_inst, n_in)
-        self.tx_idx: list[np.ndarray] = []  # (n_inst, n_out)
-        for g in self.groups:
-            blk = g[0].block
-            rxm = np.full((len(g), len(blk.in_ports)), self.NULL_RX, np.int32)
-            txm = np.full((len(g), len(blk.out_ports)), self.NULL_TX, np.int32)
-            for i, inst in enumerate(g):
-                for p, port in enumerate(blk.in_ports):
-                    rxm[i, p] = chan_of_rx.get((inst.inst_id, port), self.NULL_RX)
-                for p, port in enumerate(blk.out_ports):
-                    txm[i, p] = chan_of_tx.get((inst.inst_id, port), self.NULL_TX)
-            self.rx_idx.append(rxm)
-            self.tx_idx.append(txm)
+    def __init__(self, graph: ChannelGraph):
+        self.graph = graph
+        self.group_blocks: list[Block] = [g.block for g in graph.groups]
+        self.NULL_RX, self.NULL_TX = graph.NULL_RX, graph.NULL_TX
+        self.n_channels = graph.n_channels
+        self.rx_idx = graph.rx_idx
+        self.tx_idx = graph.tx_idx
+        self.ext_in_chan = graph.ext_in
+        self.ext_out_chan = graph.ext_out
+        self.payload_words = graph.payload_words
+        self.dtype = graph.dtype
+        self.capacity = graph.capacity
+        # Compiled-run cache lives on the instance (keyed by n_cycles), so a
+        # collected simulator releases its executables and a recycled id can
+        # never alias a stale compilation.
+        self._jit_cache: dict[int, Callable] = {}
 
     # -- state ---------------------------------------------------------------
     def init(self, key: jax.Array) -> NetworkState:
         states = []
-        for g, blk in zip(self.groups, self.group_blocks):
-            keys = jax.random.split(jax.random.fold_in(key, id(blk) % (2**31)), len(g))
-            if any(inst.params is not None for inst in g):
-                params = jax.tree.map(lambda *xs: jnp.stack(xs), *[inst.params for inst in g])
+        for gi, (g, blk) in enumerate(zip(self.graph.groups, self.group_blocks)):
+            # Fold in the group *index* (deterministic, identical across
+            # engine backends and process runs) — never id(blk), which is
+            # allocation-dependent and would break cross-engine bit-equality
+            # for blocks whose init_state consumes the key.
+            keys = jax.random.split(jax.random.fold_in(key, gi), g.n_members)
+            if g.params is not None:
+                params = jax.tree.map(jnp.asarray, g.params)
                 st = jax.vmap(blk.init_state)(keys, params)
             else:
                 st = jax.vmap(blk.init_state)(keys)
             states.append(st)
         queues = qmod.make_queues(
-            self.n_channels, self.net.payload_words, self.net.capacity, self.net.dtype
+            self.n_channels, self.payload_words, self.capacity, self.dtype
         )
         zero = jnp.zeros((self.n_channels,), jnp.int32)
         return NetworkState(
@@ -220,12 +220,12 @@ class NetworkSim:
         valids = valids.at[self.NULL_RX].set(False)
         readies = readies.at[self.NULL_TX].set(True)
 
-        push_payload = jnp.zeros((self.n_channels, self.net.payload_words), self.net.dtype)
+        push_payload = jnp.zeros((self.n_channels, self.payload_words), self.dtype)
         push_valid = jnp.zeros((self.n_channels,), bool)
         pop_ready = jnp.zeros((self.n_channels,), bool)
 
         new_states = []
-        for gi, (g, blk) in enumerate(zip(self.groups, self.group_blocks)):
+        for gi, blk in enumerate(self.group_blocks):
             rxm, txm = self.rx_idx[gi], self.tx_idx[gi]
             rx = {
                 port: (fronts[rxm[:, p]], valids[rxm[:, p]])
@@ -247,7 +247,7 @@ class NetworkSim:
             for p, port in enumerate(blk.out_ports):
                 pay, val = tx[port]
                 push_payload = push_payload.at[txm[:, p]].set(
-                    pay.astype(self.net.dtype), mode="drop"
+                    pay.astype(self.dtype), mode="drop"
                 )
                 push_valid = push_valid.at[txm[:, p]].max(val)
 
@@ -266,15 +266,23 @@ class NetworkSim:
         )
 
     def run(self, state: NetworkState, n_cycles: int) -> NetworkState:
-        """Advance ``n_cycles`` with a jitted scan."""
-        return _run_scan(self, state, n_cycles)
+        """Advance ``n_cycles`` with a jitted scan (compiled once per length)."""
+        if n_cycles not in self._jit_cache:
+
+            def impl(st):
+                return jax.lax.scan(
+                    lambda s, _: (self.step(s), None), st, None, length=n_cycles
+                )[0]
+
+            self._jit_cache[n_cycles] = jax.jit(impl)
+        return self._jit_cache[n_cycles](state)
 
     # -- host-side external port access (PySbTx / PySbRx analogue) -----------
     def push_external(self, state: NetworkState, name: str, payload) -> tuple[NetworkState, jax.Array]:
         cid = self.ext_in_chan[name]
         q = state.queues
-        pp = jnp.zeros((self.n_channels, self.net.payload_words), self.net.dtype)
-        pp = pp.at[cid].set(jnp.asarray(payload, self.net.dtype))
+        pp = jnp.zeros((self.n_channels, self.payload_words), self.dtype)
+        pp = pp.at[cid].set(jnp.asarray(payload, self.dtype))
         pv = jnp.zeros((self.n_channels,), bool).at[cid].set(True)
         pr = jnp.zeros((self.n_channels,), bool)
         q2, did_push, _ = qmod.cycle(q, pp, pv, pr)
@@ -285,33 +293,13 @@ class NetworkSim:
         q = state.queues
         fronts, valids = qmod.peek(q)
         pr = jnp.zeros((self.n_channels,), bool).at[cid].set(True)
-        pp = jnp.zeros((self.n_channels, self.net.payload_words), self.net.dtype)
+        pp = jnp.zeros((self.n_channels, self.payload_words), self.dtype)
         pv = jnp.zeros((self.n_channels,), bool)
         q2, _, did_pop = qmod.cycle(q, pp, pv, pr)
         return state.replace(queues=q2), fronts[cid], did_pop[cid]
 
-    def group_state(self, state: NetworkState, inst: Instance):
+    def group_state(self, state: NetworkState, inst: Instance | int):
         """Extract one instance's (unstacked) state from the network state."""
-        for gi, g in enumerate(self.groups):
-            for i, cand in enumerate(g):
-                if cand.inst_id == inst.inst_id:
-                    return jax.tree.map(lambda x: x[i], state.block_states[gi])
-        raise KeyError(inst.name)
-
-
-def _run_scan_impl(sim: NetworkSim, state: NetworkState, n_cycles: int) -> NetworkState:
-    def body(st, _):
-        return sim.step(st), None
-
-    out, _ = jax.lax.scan(body, state, None, length=n_cycles)
-    return out
-
-
-_jitted_cache: dict[tuple[int, int], Callable] = {}
-
-
-def _run_scan(sim: NetworkSim, state: NetworkState, n_cycles: int) -> NetworkState:
-    key = (id(sim), n_cycles)
-    if key not in _jitted_cache:
-        _jitted_cache[key] = jax.jit(lambda st: _run_scan_impl(sim, st, n_cycles))
-    return _jitted_cache[key](state)
+        inst_id = inst if isinstance(inst, int) else inst.inst_id
+        gi, slot = self.graph.locate(inst_id)
+        return jax.tree.map(lambda x: x[slot], state.block_states[gi])

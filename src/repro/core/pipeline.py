@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .compat import shard_map
+
 PyTree = Any
 
 
@@ -84,7 +86,7 @@ class Pipeline:
             outbuf = jnp.where(sid == S - 1, outbuf, jnp.zeros_like(outbuf))
             return jax.lax.psum(outbuf, axis)
 
-        return jax.shard_map(
+        return shard_map(
             run,
             mesh=self.mesh,
             in_specs=(P(self.axis), P()),

@@ -133,6 +133,26 @@ def cycle(
 
 
 # --------------------------------------------------------------------------
+# Single-queue host-side handshakes (external-port I/O). Same ring
+# conventions as ``cycle`` but for one queue's raw (capacity, W) storage, so
+# engines never re-implement the head/tail arithmetic.
+# --------------------------------------------------------------------------
+
+def push_single(buf, head, tail, capacity, payload):
+    """Push ``payload`` into one queue. Returns (buf, head, did_push)."""
+    ok = (head + 1) % capacity != tail
+    buf = _push_one(buf, head, payload, ok)
+    return buf, jnp.where(ok, (head + 1) % capacity, head), ok
+
+
+def pop_single(buf, head, tail, capacity):
+    """Pop one queue's front. Returns (front, tail, did_pop)."""
+    valid = head != tail
+    front = jax.lax.dynamic_index_in_dim(buf, tail, axis=0, keepdims=False)
+    return front, jnp.where(valid, (tail + 1) % capacity, tail), valid
+
+
+# --------------------------------------------------------------------------
 # Epoch (bulk) operations — used by the distributed exchange. These move up
 # to ``max_n`` packets in one fused op, amortizing inter-device traffic over
 # many packets (the paper's "queues are unlikely to be a bottleneck" claim,

@@ -322,6 +322,8 @@ def roofline_terms(cost: dict, hlo_text: str, n_chips: int, **_) -> dict:
     """
     mod = HloModule(hlo_text)
     t = mod.analyze()
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per computation
+        cost = cost[0] if cost else None
     return {
         "compute_s": t.flops / PEAK_FLOPS,
         "memory_s": t.bytes / HBM_BW,

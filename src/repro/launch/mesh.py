@@ -7,23 +7,23 @@ functions so importing this module never touches jax device state.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from ..core.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_grid_mesh(rows: int, cols: int) -> Mesh:
     """Device grid for the manycore simulation (granule tiling)."""
-    return jax.make_mesh(
-        (rows, cols), ("gr", "gc"), axis_types=(AxisType.Auto, AxisType.Auto)
-    )
+    return make_mesh((rows, cols), ("gr", "gc"))
 
 
 def make_host_mesh() -> Mesh:
     """Whatever devices exist locally (tests / examples)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((n, 1), ("data", "model"))

@@ -60,6 +60,19 @@ class Strategy:
         return mesh.shape[self.tp] if self.tp else 1
 
 
+def _canon(entry):
+    """Canonicalize a spec entry: a 1-tuple of axes means the axis itself.
+
+    Newer JAX does this inside PartitionSpec equality; older versions treat
+    ``P(('data',))`` and ``P('data')`` as distinct, so we normalize at the
+    source to keep specs comparable (and HLO shardings identical) across
+    versions.
+    """
+    if isinstance(entry, tuple) and len(entry) == 1:
+        return entry[0]
+    return entry
+
+
 def _div(n: int, axes, mesh: Mesh):
     """Return axes if they evenly divide n, else None."""
     if axes is None:
@@ -147,7 +160,7 @@ def param_specs(params_shapes: PyTree, strategy: Strategy, mesh: Mesh) -> PyTree
             if re.search(pat, ps):
                 if len(axes) != len(eff_shape):
                     continue
-                resolved = tuple(resolve(a, d) for a, d in zip(axes, eff_shape))
+                resolved = tuple(_canon(resolve(a, d)) for a, d in zip(axes, eff_shape))
                 if in_segments:
                     resolved = (None,) + resolved
                 return P(*resolved)
@@ -224,14 +237,14 @@ def decode_state_specs(state_shapes: PyTree, cfg, strategy: Strategy, mesh: Mesh
             b, s, hkv, hd = eff
             tp_on_heads = _div(hkv, strategy.tp, mesh)
             tp_on_hd = _div(hd, strategy.tp, mesh) if tp_on_heads is None else None
-            return P(None, _div(b, strategy.dp, mesh), None, tp_on_heads,
-                     tp_on_hd)
+            return P(None, _canon(_div(b, strategy.dp, mesh)), None,
+                     _canon(tp_on_heads), _canon(tp_on_hd))
         # recurrent states: (B, ...) — batch over dp, last dim over tp
-        resolved = [None, _div(eff[0], strategy.dp, mesh)]
+        resolved = [None, _canon(_div(eff[0], strategy.dp, mesh))]
         for d in eff[1:-1]:
             resolved.append(None)
         if len(eff) > 1:
-            resolved.append(_div(eff[-1], strategy.tp, mesh))
+            resolved.append(_canon(_div(eff[-1], strategy.tp, mesh)))
         return P(*resolved)
 
     return jax.tree_util.tree_map_with_path(spec_for, state_shapes)

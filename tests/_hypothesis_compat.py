@@ -1,0 +1,38 @@
+"""Graceful degradation when ``hypothesis`` is not installed.
+
+``from _hypothesis_compat import given, settings, st`` gives the real
+hypothesis API when available (see requirements-dev.txt); otherwise the
+decorators turn each property-based test into a single skipped test while
+the rest of the module keeps running.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without the dep
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed (pip install -r requirements-dev.txt)")
+            def skipped():
+                pass
+
+            skipped.__name__ = fn.__name__
+            return skipped
+
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        def __call__(self, *_a, **_k):
+            return None
+
+        def __getattr__(self, _name):
+            return _AnyStrategy()
+
+    st = _AnyStrategy()

@@ -32,6 +32,7 @@ def test_partition_invariance_across_device_grids():
     (1x1, 2x2, 4x1, 1x4 device grids) produces identical results."""
     code = textwrap.dedent("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.core.compat import make_mesh
         from repro.core.distributed import GridEngine
         from repro.hw.systolic import SystolicCell, make_cell_params
         rng = np.random.RandomState(3)
@@ -40,8 +41,7 @@ def test_partition_invariance_across_device_grids():
         B = rng.randn(K, N).astype(np.float32)
         results = []
         for shape in [(1,1),(2,2),(4,1),(1,4)]:
-            mesh = jax.make_mesh(shape, ('gr','gc'),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh = make_mesh(shape, ('gr','gc'))
             eng = GridEngine(SystolicCell(m_stream=M), K, N, mesh, K=5, capacity=8)
             st = eng.place(eng.init(jax.random.key(0), make_cell_params(A, B)))
             st = eng.run_until(
@@ -60,14 +60,14 @@ def test_credit_backpressure_no_loss():
     every packet must still arrive exactly once (credits prevent drops)."""
     code = textwrap.dedent("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.core.compat import make_mesh
         from repro.core.distributed import GridEngine
         from repro.hw.systolic import SystolicCell, make_cell_params
         rng = np.random.RandomState(4)
         M, K, N = 16, 4, 4
         A = rng.randn(M, K).astype(np.float32)
         B = rng.randn(K, N).astype(np.float32)
-        mesh = jax.make_mesh((2, 2), ('gr','gc'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 2), ('gr','gc'))
         # capacity 4 (3 usable) << K=32: heavy cross-boundary backpressure
         eng = GridEngine(SystolicCell(m_stream=M), K, N, mesh, K=32, capacity=4)
         st = eng.place(eng.init(jax.random.key(0), make_cell_params(A, B)))
@@ -86,14 +86,14 @@ def test_measured_cycles_grow_with_k():
     completion time while leaving results exact."""
     code = textwrap.dedent("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.core.compat import make_mesh
         from repro.core.distributed import GridEngine
         from repro.hw.systolic import SystolicCell, make_cell_params
         rng = np.random.RandomState(5)
         M, Kd, N = 8, 8, 8
         A = rng.randn(M, Kd).astype(np.float32)
         B = rng.randn(Kd, N).astype(np.float32)
-        mesh = jax.make_mesh((2, 2), ('gr','gc'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 2), ('gr','gc'))
         cycles = {}
         for K in (1, 8, 32):
             eng = GridEngine(SystolicCell(m_stream=M), Kd, N, mesh, K=K, capacity=8)

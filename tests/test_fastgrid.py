@@ -4,12 +4,12 @@ import jax
 import numpy as np
 import pytest
 
+from repro.core.compat import make_mesh
 from repro.core.fastgrid import RegisterGridEngine
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("gr", "gc"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("gr", "gc"))
 
 
 @pytest.mark.parametrize("k_epoch", [2, 8, 16])
@@ -55,13 +55,13 @@ def test_register_engine_multidevice():
 
     code = textwrap.dedent("""
         import numpy as np, jax
+        from repro.core.compat import make_mesh
         from repro.core.fastgrid import RegisterGridEngine
         rng = np.random.RandomState(1)
         M, R, C = 12, 8, 8
         A = rng.randn(M, R).astype(np.float32)
         B = rng.randn(R, C).astype(np.float32)
-        mesh = jax.make_mesh((2, 2), ('gr', 'gc'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 2), ('gr', 'gc'))
         for K in (2, 7, 16):
             eng = RegisterGridEngine(R, C, mesh, K=K, m_stream=M)
             st = eng.place(eng.init(A, B))

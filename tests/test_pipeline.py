@@ -9,6 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compat import make_mesh
+
 
 def _stage_fn(p, h):
     return jnp.tanh(h @ p["w"] + p["b"])
@@ -36,8 +38,7 @@ def _params(S, d, key):
 def test_pipeline_single_stage_identity():
     from repro.core.pipeline import Pipeline
 
-    mesh = jax.make_mesh((1,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("stage",))
     d, M, mb = 8, 3, 4
     params = _params(1, d, jax.random.key(0))
     x = jax.random.normal(jax.random.key(1), (M, mb, d))
@@ -51,14 +52,14 @@ def test_pipeline_single_stage_identity():
 def test_pipeline_multidevice_fwd_and_grad():
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.core.compat import make_mesh
         from repro.core.pipeline import Pipeline, stage_shardings
 
         def stage_fn(p, h):
             return jnp.tanh(h @ p["w"] + p["b"])
 
         S, d, M, mb = 4, 16, 6, 8
-        mesh = jax.make_mesh((S,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((S,), ("stage",))
         ks = jax.random.split(jax.random.key(0), 2)
         params = {"w": jax.random.normal(ks[0], (S, d, d)) / np.sqrt(d),
                   "b": jnp.zeros((S, d))}

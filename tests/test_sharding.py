@@ -16,11 +16,11 @@ def test_param_specs_rules_and_fallbacks():
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.core.compat import make_mesh
         from repro.configs import get_config
         from repro.launch.steps import abstract_params
         from repro.sharding.partition import Strategy, param_specs
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ('data', 'model'))
         strat = Strategy(dp=('data',), tp='model')
 
         cfg = get_config('llama3_2_1b')
@@ -57,12 +57,12 @@ def test_mini_dryrun_lower_compile_multidevice():
     code = textwrap.dedent("""
         import dataclasses, jax
         from repro.configs import get_config
+        from repro.core.compat import make_mesh
         from repro.configs.registry import ShapeSpec
         from repro.launch.steps import lower_cell
         from repro.sharding.partition import Strategy
         from repro.launch import hlo_analysis as HA
-        mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((4, 2), ('data', 'model'))
         cfg = dataclasses.replace(get_config('llama3_2_1b', smoke=True),
                                   n_layers=2, vocab=512)
         shape = ShapeSpec('mini', 64, 8, 'train')
@@ -82,11 +82,11 @@ def test_decode_state_specs_fallback():
     code = textwrap.dedent("""
         import jax
         from jax.sharding import PartitionSpec as P
+        from repro.core.compat import make_mesh
         from repro.configs import get_config
         from repro.launch.steps import abstract_decode_state
         from repro.sharding.partition import Strategy, decode_state_specs
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ('data', 'model'))
         strat = Strategy(dp=('data',), tp='model')
         # gemma_2b: kv heads = 1 (MQA) -> tp falls back to head_dim
         cfg = get_config('gemma_2b')

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.compat import make_mesh
 from repro.checkpoint import checkpointing as ckpt
 from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.optim.grad_compression import TopKCompressor, _dequantize_int8, _quantize_int8
@@ -95,8 +96,7 @@ def test_checkpoint_elastic_reshard(tmp_path):
 
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     ckpt.save(str(tmp_path), 1, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     template = {
         "w": jax.device_put(
             jnp.zeros((4, 4)), NamedSharding(mesh, P("data", None))

@@ -5,8 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from _hypothesis_compat import given, settings, st
+
+from repro.core.compat import make_mesh
 from repro.core.distributed import GridEngine
 from repro.hw.systolic import (
     SystolicCell, collect_result, cycles_needed, make_cell_params,
@@ -15,8 +17,7 @@ from repro.hw.systolic import (
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("gr", "gc"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("gr", "gc"))
 
 
 def test_single_netlist_matmul_exact(rng):
