@@ -7,6 +7,22 @@ import time
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 sys.path.insert(0, SRC)
 
+# Rows recorded by ``emit`` since the last ``begin_suite``, keyed by suite —
+# ``benchmarks.run`` serializes this to BENCH_PR2.json so the perf
+# trajectory is machine-readable PR over PR.
+_RECORDS: dict[str, list[dict]] = {}
+_CURRENT_SUITE: str | None = None
+
+
+def begin_suite(name: str) -> None:
+    global _CURRENT_SUITE
+    _CURRENT_SUITE = name
+    _RECORDS.setdefault(name, [])
+
+
+def records() -> dict[str, list[dict]]:
+    return _RECORDS
+
 
 def timeit(fn, *args, n: int = 5, warmup: int = 2):
     """Median wall time of fn(*args) over n runs (after warmup)."""
@@ -36,3 +52,8 @@ def run_subprocess(code: str, devices: int = 4, timeout: int = 600) -> str:
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+    if _CURRENT_SUITE is not None:
+        _RECORDS[_CURRENT_SUITE].append(
+            {"name": name, "us_per_call": round(float(us_per_call), 2),
+             "derived": derived}
+        )

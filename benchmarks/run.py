@@ -11,21 +11,35 @@ paper-artifact mapping):
     build_time         Fig. 13 monolithic vs modular build scaling
     sim_throughput     Fig. 14 throughput vs design size
     accuracy_vs_rate   Fig. 15 measurement error vs sync rate (K)
+    wafer_scale        Fig. 14/15 tiered many-core torus: size + (K_inner,
+                       K_outer) schedule sweep vs the flat single-K engine
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only name] [--smoke]
+                                             [--json PATH]
 
 --smoke shrinks every suite to a tiny cycle budget (CPU-friendly) so the
 whole harness doubles as a per-PR engine-regression gate (scripts/ci.sh);
 the numbers are meaningless in that mode, only pass/fail matters.
+
+Every run also writes a machine-readable summary (default
+``BENCH_PR2.json``): ``{"schema", "git_rev", "smoke", "argv", "failed",
+"suites": {suite: [{"name", "us_per_call", "derived"}, ...]}}`` — the same
+schema in smoke and full mode, so the perf trajectory can be tracked and
+diffed PR over PR.
 """
 import argparse
+import json
+import subprocess
 import sys
 import traceback
 
 from . import (
-    accuracy_vs_rate, backend_speedup, build_time, engine_speedup,
-    queue_perf, sim_throughput, task_latency, timing_breakdown,
+    accuracy_vs_rate, backend_speedup, build_time, common, engine_speedup,
+    queue_perf, sim_throughput, task_latency, timing_breakdown, wafer_scale,
 )
+
+BENCH_JSON = "BENCH_PR2.json"
+SCHEMA = "repro-bench-v1"
 
 SUITES = [
     ("queue_perf", queue_perf.bench),
@@ -36,7 +50,18 @@ SUITES = [
     ("build_time", build_time.bench),
     ("sim_throughput", sim_throughput.bench),
     ("accuracy_vs_rate", accuracy_vs_rate.bench),
+    ("wafer_scale", wafer_scale.bench),
 ]
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
 
 
 def main() -> None:
@@ -44,6 +69,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny cycle budgets; pass/fail only (CI)")
+    ap.add_argument("--json", default=BENCH_JSON, metavar="PATH",
+                    help=f"machine-readable summary (default {BENCH_JSON})")
     args = ap.parse_args()
     if args.only and args.only not in {n for n, _ in SUITES}:
         ap.error(f"unknown benchmark {args.only!r}; "
@@ -54,11 +81,26 @@ def main() -> None:
         if args.only and args.only != name:
             continue
         print(f"# --- {name} ---", flush=True)
+        common.begin_suite(name)
         try:
             fn(smoke=args.smoke)
         except Exception:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()
+
+    summary = {
+        "schema": SCHEMA,
+        "git_rev": _git_rev(),
+        "smoke": bool(args.smoke),
+        "argv": sys.argv[1:],
+        "failed": failed,
+        "suites": common.records(),
+    }
+    with open(args.json, "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {args.json}")
+
     if failed:
         print(f"# FAILED: {failed}")
         sys.exit(1)

@@ -1,0 +1,140 @@
+"""Paper Fig. 14 + Fig. 15 on the tiered wafer-scale fabric.
+
+Two experiments on the many-core torus (``repro.hw.manycore``), both over
+a hierarchical (pod -> granule) partition:
+
+  * **throughput vs design size** (Fig. 14): aggregate core-cycles/s of the
+    tiered engine as the torus grows — the property that let the paper
+    reach a million cores;
+  * **sync-rate economics** (Fig. 15 / §IV): sweep (K_inner, K_outer) and
+    compare against the *flat* single-K schedule (every tier synchronized
+    every K cycles — the pre-tier engine).  The ``wafer_econ_*`` rows pin
+    the comparison at an **equal slow-tier (pod/DCI) sync period** — the
+    paper's scarce resource, its TCP bridges: for the same number of
+    slow-tier exchanges, the tiered schedule syncs the cheap intra-pod
+    tier K_outer times more often and roughly halves the measured-cycle
+    error (equivalently: at equal error it needs fewer slow-tier syncs
+    per simulated cycle — lower wall time wherever the slow tier
+    dominates, which is exactly the paper's scale-out setting).  On this
+    CPU testbed all ppermutes cost the same, so the uniform-transport
+    wall-per-cycle numbers show only the collective-count effect; the
+    error split is transport-independent.
+
+Rows: ``wafer_size_{n}`` (throughput sweep), ``wafer_{schedule}`` where
+schedule is ``flat_K{k}`` or ``tiered_Ko{m}_Ki{k}`` (completion cycles, %
+error vs the all-K=1 ground truth, wall-us per simulated cycle), and the
+``wafer_econ_*`` equal-pod-period comparisons.
+"""
+from .common import emit, run_subprocess
+
+CODE = """
+import time
+import numpy as np, jax
+from repro.core import ChannelGraph, tiered_grid_partition
+from repro.core.compat import make_mesh
+from repro.core.distributed import GraphEngine
+from repro.hw.manycore import (
+    ManycoreCell, allreduce_done, expected_total, make_core_params)
+
+N = {size}
+CAP = 8
+
+def build(tiers, R=None, C=None):
+    R = R or N; C = C or N
+    values = (np.arange(R * C) % 97 + 1).astype(np.float32)
+    graph = ChannelGraph.torus(
+        ManycoreCell(R, C), R, C,
+        params=make_core_params(values.reshape(R, C)), capacity=CAP)
+    mesh = make_mesh({mesh_shape}, {mesh_axes})
+    part = tiered_grid_partition(R, C, {tiles})
+    return GraphEngine(graph, part, mesh, tiers=tiers), values
+
+def complete(eng, values):
+    done = lambda s: allreduce_done(s.block_states[0], s.tables.active[0])
+    st = eng.place(eng.init(jax.random.key(0)))
+    st = jax.block_until_ready(
+        eng.run_until(st, done, max_epochs=100000, cache_key='done'))
+    totals = np.asarray(eng.gather_group(st, 0).total)
+    assert np.array_equal(totals, np.full_like(totals, expected_total(values)))
+    # timed second run reuses the compiled loop
+    st2 = eng.place(eng.init(jax.random.key(0)))
+    t0 = time.perf_counter()
+    jax.block_until_ready(
+        eng.run_until(st2, done, max_epochs=100000, cache_key='done'))
+    wall = time.perf_counter() - t0
+    return int(np.asarray(st.cycle).ravel()[0]), wall
+
+inner_axes = {mesh_axes}[1:]
+
+# --- Fig. 14: throughput vs size (fixed tiered schedule) -------------------
+for n in {sizes}:
+    eng, values = build([(('pod',), 4), (inner_axes, 8)], R=n, C=n)
+    cyc, wall = complete(eng, values)
+    print(f'SIZE {n} {cyc} {wall:.4f} {n * n * cyc / wall:.4e}')
+
+# --- Fig. 15: schedules at equal simulated work ----------------------------
+flat_ks = sorted({k for k in {k_sweep}} | {k * m for k in {k_sweep} for m in (2, 4)})
+truth = None
+for label, tiers in [
+    ('truth', [(('pod',), 1), (inner_axes, 1)]),
+] + [
+    (f'flat_K{k}', [(('pod',) + tuple(inner_axes), k)]) for k in flat_ks
+] + [
+    (f'tiered_Ko{m}_Ki{k}', [(('pod',), m), (inner_axes, k)])
+    for k in {k_sweep} for m in (2, 4)
+]:
+    eng, values = build(tiers)
+    cyc, wall = complete(eng, values)
+    if truth is None:
+        truth = cyc
+        continue
+    err = 100.0 * (cyc - truth) / truth
+    print(f'ROW {label} {cyc} {err:.2f} {wall / cyc * 1e6:.2f}')
+"""
+
+
+def bench(smoke: bool = False):
+    if smoke:
+        sub = dict(size=16, sizes=(8, 16), k_sweep=(4,),
+                   mesh_shape=(2, 2), mesh_axes=("pod", "gx"),
+                   tiles=[(2, 1), (1, 2)])
+        devices = 4
+    else:
+        sub = dict(size=64, sizes=(16, 32, 64), k_sweep=(4, 8),
+                   mesh_shape=(2, 2, 2), mesh_axes=("pod", "gr", "gc"),
+                   tiles=[(2, 1), (2, 2)])
+        devices = 8
+    code = CODE
+    for key, val in sub.items():
+        code = code.replace("{%s}" % key, repr(val))
+    out = run_subprocess(code, devices=devices, timeout=1800)
+    rows: dict[str, tuple[int, float, float]] = {}
+    for line in out.splitlines():
+        if line.startswith("SIZE"):
+            _, n, cyc, wall, rate = line.split()
+            emit(f"wafer_size_{n}x{n}", float(wall) / int(cyc) * 1e6,
+                 f"{rate} core-cycles/s ({cyc} cycles to allreduce)")
+        elif line.startswith("ROW"):
+            _, label, cyc, err, us = line.split()
+            rows[label] = (int(cyc), float(err), float(us))
+            emit(f"wafer_{label}", float(us),
+                 f"measured {cyc} cycles, err {err}% vs K=1 truth")
+    # The scale-out economics: at an equal slow-tier (pod/DCI) sync period —
+    # the paper's scarce resource — the tiered schedule syncs the cheap
+    # intra-pod tier K_outer times more often, cutting measured-cycle error
+    # while spending the *same* number of slow-tier exchanges.
+    for label, (cyc, err, us) in sorted(rows.items()):
+        if not label.startswith("tiered_"):
+            continue
+        m, k = (int(x[2:]) for x in label.split("_")[1:])
+        flat = rows.get(f"flat_K{k * m}")
+        if flat is None:
+            continue
+        fcyc, ferr, fus = flat
+        emit(f"wafer_econ_Ko{m}_Ki{k}", us,
+             f"vs flat_K{k * m} at equal pod period {k * m}: "
+             f"err {ferr:.1f}%->{err:.1f}%, wall {fus:.0f}->{us:.0f} us/cyc")
+
+
+if __name__ == "__main__":
+    bench()

@@ -26,8 +26,27 @@ if [[ "$stage" == "all" || "$stage" == "tests" ]]; then
 fi
 
 if [[ "$stage" == "all" || "$stage" == "smoke" ]]; then
-    echo "=== smoke benchmarks ==="
-    python -m benchmarks.run --smoke
+    echo "=== smoke benchmarks (incl. tiered wafer-scale) ==="
+    python -m benchmarks.run --smoke --json BENCH_PR2.json
+    echo "=== BENCH_PR2.json well-formedness ==="
+    python - <<'EOF'
+import json
+
+with open("BENCH_PR2.json") as f:
+    bench = json.load(f)
+for key in ("schema", "git_rev", "smoke", "failed", "suites"):
+    assert key in bench, f"BENCH_PR2.json missing {key!r}"
+assert bench["schema"] == "repro-bench-v1", bench["schema"]
+suites = bench["suites"]
+assert "wafer_scale" in suites, "wafer-scale smoke suite missing"
+assert any(r["name"].startswith("wafer_tiered_") for r in suites["wafer_scale"]), \
+    "no tiered wafer-scale rows recorded"
+for name, rows in suites.items():
+    for r in rows:
+        assert {"name", "us_per_call", "derived"} <= set(r), (name, r)
+print(f"BENCH_PR2.json OK: {sum(len(r) for r in suites.values())} rows "
+      f"across {len(suites)} suites @ {bench['git_rev'][:12]}")
+EOF
     echo "=== distributed heterogeneous-SoC example (4 fake devices) ==="
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         python examples/heterogeneous_soc.py

@@ -5,6 +5,13 @@ computing Y = A @ B for M=1024 streamed rows, distributed over the
 production mesh with the epoch-batched queue engine.  This config is
 exercised by launch/dryrun.py --arch manycore and by the benchmarks;
 it is not part of the 40 LM cells.
+
+The sync rates are tiered (DESIGN.md §3): intra-pod (ICI) boundaries
+exchange every ``k_inner`` cycles, inter-pod (DCI) boundaries every
+``k_inner * k_outer`` — the paper's fast-shm/slow-TCP split.  The flat
+single-K schedule is ``k_outer = 1``.  ``WAFER`` is the CPU-runnable
+flagship shape consumed by ``examples/wafer_scale.py``
+(``benchmarks/wafer_scale.py`` sweeps schedules around it).
 """
 import dataclasses
 
@@ -14,11 +21,26 @@ class ManycoreConfig:
     grid_rows: int = 1024
     grid_cols: int = 1024
     m_stream: int = 1024
-    k_epoch: int = 16          # cycles per epoch (Fig. 15 knob)
+    k_inner: int = 16          # intra-pod cycles per exchange (Fig. 15 knob)
+    k_outer: int = 4           # inner rounds per inter-pod exchange
+    pods: int = 2              # outer-tier (DCI) split of the grid rows
     queue_capacity: int = 62   # paper §III-B
     payload_words: int = 2
 
+    @property
+    def k_epoch(self) -> int:
+        """Back-compat alias: the innermost sync rate."""
+        return self.k_inner
+
+    @property
+    def pod_period(self) -> int:
+        """Cycles between inter-pod synchronizations."""
+        return self.k_inner * self.k_outer
+
 
 CONFIG = ManycoreConfig()
-SMOKE = ManycoreConfig(grid_rows=8, grid_cols=8, m_stream=8, k_epoch=4,
-                       queue_capacity=8)
+SMOKE = ManycoreConfig(grid_rows=8, grid_cols=8, m_stream=8, k_inner=4,
+                       k_outer=2, queue_capacity=8)
+# >= 64k cores, sized to finish in minutes on host-CPU fake devices.
+WAFER = ManycoreConfig(grid_rows=256, grid_cols=256, m_stream=0,
+                       k_inner=8, k_outer=4, queue_capacity=8)

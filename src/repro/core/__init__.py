@@ -11,8 +11,10 @@ engine backend.
   queue       SPSC ring buffers, single-cycle + epoch bulk ops (§III-B)
   block       ready/valid Block protocol + bridge semantics (§II-A)
   network     SbNetwork analogue; build(engine=...) entry point (§III-F)
-  graph       channel-graph IR shared by every backend (DESIGN.md §1)
-  distributed epoch-batched shard_map GraphEngine + GridEngine preset
+  graph       channel-graph IR + PartitionTree shared by every backend
+              (DESIGN.md §1, §3)
+  distributed epoch-batched shard_map GraphEngine (tiered per-tier sync
+              rates) + GridEngine preset
   perfmodel   rate control + N_meas error model (§II-C)
   fastgrid    kernel-fused register-channel engine (§Perf optimized backend)
   pipeline    LM pipeline parallelism on the same channel semantics
@@ -20,9 +22,12 @@ engine backend.
 """
 from .block import Block
 from .network import Network, NetworkSim, NetworkState
-from .graph import ChannelGraph, grid_partition, normalize_partition
+from .graph import (
+    ChannelGraph, PartitionTree, Tier, grid_partition, normalize_partition,
+    normalize_tiers, tiered_grid_partition,
+)
 from .queue import QueueArray, make_queues, DEFAULT_CAPACITY
-from .distributed import GraphEngine, GraphState, GridEngine
+from .distributed import GraphEngine, GraphState, GridEngine, edge_color_routes
 from .fastgrid import RegisterGridEngine
 from .pipeline import Pipeline
 from . import packet, perfmodel

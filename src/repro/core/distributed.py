@@ -3,11 +3,13 @@
 
 This is the TPU-native adaptation of Switchboard's scale-out story,
 generalized from a uniform grid to **any** topology the channel-graph IR
-(``repro.core.graph``) can describe.  A partition map assigns every block
-instance to a *granule* (the paper's network-of-networks node, here one
-device of a mesh).  Each granule advances **K cycles of pure local
-simulation** (a ``lax.scan`` touching only granule-local state), then
-exchanges the contents of boundary queues with its peers via
+(``repro.core.graph``) can describe.  A **hierarchical partition**
+(``graph.PartitionTree``) assigns every block instance to a *granule* (the
+paper's network-of-networks node, here one device of a mesh) and groups the
+granule axes into **tiers** — fast intra-pod ICI axes, the slow inter-pod
+DCI axis — each with its own sync rate.  Each granule advances cycles of
+pure local simulation (a ``lax.scan`` touching only granule-local state)
+and exchanges the contents of boundary queues with its peers via
 ``lax.ppermute`` inside ``shard_map``:
 
     paper                      | here
@@ -15,31 +17,45 @@ exchanges the contents of boundary queues with its peers via
     single-netlist granule     | device, vmapped per-group step
     shm queue between granules | egress queue -> ppermute slab -> ingress
     free-running processes     | K-cycle epochs (bounded staleness)
-    TCP bridge between hosts   | 'pod' tier of the same ppermute
+    TCP bridge between hosts   | outer (slow) tier of the same ppermute,
+                               | synchronized every K_outer * K_inner cycles
     ready/valid backpressure   | credit return on the reverse ppermute
 
-Functional correctness is *independent of K* for handshaked dataflow
-because every cross-granule channel is latency-insensitive — the epoch
-boundary only adds latency, which the channels tolerate by construction.
-This is property-tested against the single-netlist ground truth
-(``tests/test_graph.py``); at K=1 the exchange runs every cycle and the
-distributed simulation is additionally *cycle-accurate*.
+**Tiered sync** (the paper's scale-out economics, §II-B/§IV): a boundary
+channel is classified by the *outermost* tier it crosses.  The epoch loop
+is nested — one epoch = ``K_0`` rounds of tier 1, each ``K_1`` rounds of
+tier 2, ..., the innermost tier running ``K_inner`` granule-local cycles —
+and tier t's exchange fires once per tier-t round, i.e. every
+``prod(K_t .. K_inner)`` local cycles (its *period*).  Slow-tier channels
+simply present deeper elastic buffering; the flat single-K engine is the
+one-tier special case.
 
-Arbitrary granule adjacency: boundary channels are grouped into **routes**
-(one per directed granule pair) and routes are greedily edge-colored into
-**exchange classes**, each a partial permutation (every granule sends on at
-most one route and receives on at most one route per class).  One
-``ppermute`` moves a whole class's packet slabs; König's theorem bounds the
-number of classes by the maximum granule degree, so a nearest-neighbor grid
-needs exactly two classes (east, south) — the historical ``GridEngine``
-schedule falls out as a special case, and ``GridEngine`` below is now just
-a partition-map preset over ``GraphEngine``.
+Functional correctness is *independent of every tier's K* for handshaked
+dataflow because every cross-granule channel is latency-insensitive — the
+exchange cadence only adds latency, which the channels tolerate by
+construction.  This is property-tested against the single-netlist ground
+truth (``tests/test_graph.py``, ``tests/test_tiered.py``); with every
+K = 1 the exchanges run each cycle and the distributed simulation is
+additionally *cycle-accurate*.
+
+Arbitrary granule adjacency: each tier's boundary channels are grouped
+into **routes** (one per directed granule pair) and routes are edge-colored
+into **exchange classes**, each a partial permutation (every granule sends
+on at most one route and receives on at most one route per class).  One
+``ppermute`` moves a whole class's packet slabs.  The coloring uses the
+König construction (regularize to a Δ-regular bipartite multigraph, peel
+off Δ perfect matchings), so the class count *equals* the maximum granule
+in/out-degree of the tier — property-tested in ``tests/test_tiered.py``.
+A nearest-neighbor grid needs exactly two classes (east, south) — the
+historical ``GridEngine`` schedule falls out as a special case, and
+``GridEngine`` below is now just a partition-map preset over
+``GraphEngine``.
 
 Credit protocol (DESIGN.md §3): the receiver of a boundary channel
 advertises ``free(ingress)`` after each fill; the sender drains at most
-that many packets next epoch.  Safety: only the sender fills the ingress
-queue, so the advertised credit can only be consumed by the sender's own
-future sends.
+that many packets at its tier's next exchange.  Safety: only the sender
+fills the ingress queue, so the advertised credit can only be consumed by
+the sender's own future sends.
 """
 from __future__ import annotations
 
@@ -53,7 +69,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from . import queue as qmod
 from .block import Block
 from .compat import shard_map
-from .graph import ChannelGraph, grid_partition, normalize_partition
+from .graph import (
+    ChannelGraph, PartitionTree, Tier, grid_partition, normalize_partition,
+    normalize_tiers,
+)
 from .struct import pytree_dataclass, static_field
 
 PyTree = Any
@@ -94,6 +113,8 @@ class _ExchangeClass:
 
     perm: tuple = static_field(default=())  # ((src_granule, dst_granule), ...)
     cmax: int = static_field(default=0)  # max channels on any route
+    tier: int = static_field(default=0)  # which tier's exchange runs this class
+    depth: int = static_field(default=1)  # slab depth E = min(period, cap-1)
 
 
 def _sq(tree: PyTree, nd: int) -> PyTree:
@@ -122,15 +143,103 @@ def _rank_within(groups: np.ndarray, n_groups: int) -> tuple[np.ndarray, np.ndar
     return rank, counts
 
 
+def _perfect_matching(adj: np.ndarray) -> np.ndarray:
+    """Perfect matching in a regular bipartite multigraph (Kuhn's algorithm).
+
+    adj[s, d] = remaining parallel-edge count.  Returns match[s] = d.
+    A Δ-regular bipartite multigraph always has one (Hall's theorem), so
+    failure here means the caller's regularization is broken.
+    """
+    G = adj.shape[0]
+    match_r = np.full((G,), -1, np.int64)  # right node -> matched left node
+
+    def augment(s: int, visited: np.ndarray) -> bool:
+        for d in range(G):
+            if adj[s, d] > 0 and not visited[d]:
+                visited[d] = True
+                if match_r[d] < 0 or augment(int(match_r[d]), visited):
+                    match_r[d] = s
+                    return True
+        return False
+
+    for s in range(G):
+        if not augment(s, np.zeros((G,), bool)):
+            raise AssertionError("regular bipartite graph lost its matching")
+    match = np.full((G,), -1, np.int64)
+    match[match_r] = np.arange(G, dtype=np.int64)
+    return match
+
+
+def edge_color_routes(
+    pairs: Sequence[tuple[int, int]], n_granules: int
+) -> list[list[tuple[int, int]]]:
+    """Partition directed granule pairs into partial permutations.
+
+    König construction: pad the route digraph (a bipartite graph senders ->
+    receivers) with dummy edges until it is Δ-regular, then peel off Δ
+    perfect matchings.  The number of classes therefore *equals*
+    Δ = max over granules of (out-degree, in-degree) — the optimum, since
+    some granule must appear in Δ distinct classes.  Deterministic.
+    """
+    if not pairs:
+        return []
+    G = n_granules
+    real = np.zeros((G, G), np.int64)
+    for s, d in pairs:
+        real[s, d] += 1
+    out_deg, in_deg = real.sum(axis=1), real.sum(axis=0)
+    delta = int(max(out_deg.max(), in_deg.max()))
+
+    # Regularize: total left deficiency == total right deficiency, so the
+    # two-pointer pairing below always terminates with both sides at Δ.
+    total = real.copy()
+    od, idg = out_deg.copy(), in_deg.copy()
+    si = di = 0
+    while si < G:
+        if od[si] >= delta:
+            si += 1
+            continue
+        while idg[di] >= delta:
+            di += 1
+        add = min(delta - od[si], delta - idg[di])
+        total[si, di] += add
+        od[si] += add
+        idg[di] += add
+
+    classes: list[list[tuple[int, int]]] = []
+    for _ in range(delta):
+        match = _perfect_matching(total)
+        cls: list[tuple[int, int]] = []
+        for s in range(G):
+            d = int(match[s])
+            total[s, d] -= 1
+            if real[s, d] > 0:  # prefer consuming a real route over a dummy
+                real[s, d] -= 1
+                cls.append((s, d))
+        if cls:
+            classes.append(cls)
+    assert real.sum() == 0, "edge coloring failed to cover every route"
+    return classes
+
+
 class GraphEngine:
     """Epoch-batched distributed interpreter of a partitioned ChannelGraph.
 
     graph:     the channel-graph IR (``Network.graph()`` or a builder).
-    partition: instance -> granule map (anything ``normalize_partition``
-               accepts); granules are the devices of ``mesh`` along
-               ``axes``, flattened row-major.
-    K:         cycles per epoch (staleness/amortization knob — the paper's
-               "max simulation rate" analogue, swept in Fig. 15).
+    partition: a ``graph.PartitionTree`` (hierarchical: carries both the
+               instance -> granule map and the tier structure), or any flat
+               instance -> granule map ``normalize_partition`` accepts;
+               granules are the devices of ``mesh`` along ``axes``,
+               flattened row-major (outermost tier first).
+    K:         innermost sync rate — cycles of local simulation per
+               innermost exchange (the paper's "max simulation rate"
+               analogue, swept in Fig. 15).  Ignored when ``partition`` is
+               a PartitionTree or ``tiers`` is given.
+    tiers:     optional per-tier spec (``graph.Tier`` or ``(axes, K)``
+               pairs, outermost first) grouping the mesh axes into sync
+               tiers; tier t's boundary channels are exchanged every
+               ``prod(K_t .. K_inner)`` cycles.  Default: one tier spanning
+               ``axes`` with rate ``K`` — the flat engine.
     """
 
     def __init__(
@@ -138,21 +247,69 @@ class GraphEngine:
         graph: ChannelGraph,
         partition,
         mesh: Mesh,
-        K: int,
+        K: int = 1,
         axes: Sequence[str] | None = None,
+        tiers: Sequence | None = None,
     ):
         self.graph = graph
         self.mesh = mesh
-        self.axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
-        self.dev_shape = tuple(mesh.shape[a] for a in self.axes)
+        if isinstance(partition, PartitionTree):
+            if tiers is not None:
+                raise ValueError("pass tiers via the PartitionTree or the "
+                                 "tiers kwarg, not both")
+            if axes is not None:
+                raise ValueError(
+                    "axes is derived from the PartitionTree's tiers — "
+                    "pass the axis order there"
+                )
+            ptree = partition
+            mesh_shape = tuple(mesh.shape[a] for a in ptree.axes)
+            if mesh_shape != ptree.dev_shape:
+                raise ValueError(
+                    f"PartitionTree device shape {ptree.dev_shape} does not "
+                    f"match mesh axes {ptree.axes} = {mesh_shape}"
+                )
+            if ptree.part.shape != (graph.n_instances,):
+                raise ValueError(
+                    f"PartitionTree covers {ptree.part.size} instances, "
+                    f"graph has {graph.n_instances}"
+                )
+        else:
+            if tiers is not None:
+                if axes is not None:
+                    raise ValueError(
+                        "axes is derived from the tier spec when tiers is "
+                        "given — pass the axis order via the tiers entries"
+                    )
+                tspec = normalize_tiers(tiers)
+            else:
+                t_axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+                tspec = (Tier(axes=t_axes, K=int(K)),)
+            all_axes = tuple(a for t in tspec for a in t.axes)
+            n_gran = int(np.prod([mesh.shape[a] for a in all_axes]))
+            part = normalize_partition(graph, partition, n_gran)
+            ptree = PartitionTree(
+                part, tspec, {a: mesh.shape[a] for a in all_axes}
+            )
+        self.ptree = ptree
+        self.tiers = ptree.tiers
+        self.axes = ptree.axes
+        self.dev_shape = ptree.dev_shape
         self.nd = len(self.dev_shape)
-        self.G = int(np.prod(self.dev_shape))
-        self.K = K
-        self.E = min(K, graph.capacity - 1)  # max packets/boundary channel/epoch
+        self.G = ptree.n_granules
+        self.K_tiers = ptree.K_tiers
+        self.periods = ptree.periods()
+        self.cycles_per_epoch = ptree.cycles_per_epoch
+        self.K = self.K_tiers[-1]  # innermost rate (back-compat accessor)
+        # max packets per boundary channel per *its tier's* exchange
+        self.E_tiers = tuple(
+            min(p, graph.capacity - 1) for p in self.periods
+        )
+        self.E = self.E_tiers[-1]
         self.W = graph.payload_words
         self.capacity = graph.capacity
         self.dtype = graph.dtype
-        self.part = normalize_partition(graph, partition, self.G)
+        self.part = ptree.part
         self._spec = P(*self.axes)
         self._jit_cache: dict[Any, Callable] = {}
         self._build_tables()
@@ -221,45 +378,39 @@ class GraphEngine:
             self._n_slot.append(n_slot)
         self._rx_tables, self._tx_tables, self._act_tables = rx_t, tx_t, act_t
 
-        # Boundary routes -> greedy edge coloring into exchange classes.
-        routes: dict[tuple[int, int], list[int]] = {}
+        # Boundary routes, classified by the outermost tier they cross, then
+        # edge-colored per tier into exchange classes (partial permutations).
+        chan_tier = self.ptree.tier_of_edges(src_g, dst_g)  # -1 when local
+        routes: dict[tuple[int, int, int], list[int]] = {}  # (tier, s, d)
         for c in cids[boundary]:
-            routes.setdefault((int(src_g[c]), int(dst_g[c])), []).append(int(c))
-        classes: list[dict] = []
-        for (s, d), chans in sorted(
-            routes.items(), key=lambda kv: (-len(kv[1]), kv[0])
-        ):
-            for cl in classes:
-                if s not in cl["srcs"] and d not in cl["dsts"]:
-                    break
-            else:
-                cl = {"srcs": set(), "dsts": set(), "routes": []}
-                classes.append(cl)
-            cl["srcs"].add(s)
-            cl["dsts"].add(d)
-            cl["routes"].append(((s, d), chans))
+            key = (int(chan_tier[c]), int(src_g[c]), int(dst_g[c]))
+            routes.setdefault(key, []).append(int(c))
 
         self.classes: list[_ExchangeClass] = []
         send_i, send_m, recv_i, recv_m = [], [], [], []
-        for cl in classes:
-            cmax = max(len(ch) for _, ch in cl["routes"])
-            si = np.zeros((G, cmax), np.int64)
-            sm = np.zeros((G, cmax), bool)
-            ri = np.zeros((G, cmax), np.int64)
-            rm = np.zeros((G, cmax), bool)
-            perm = []
-            for (s, d), chans in cl["routes"]:
-                k = len(chans)
-                si[s, :k] = tx_local[chans]
-                sm[s, :k] = True
-                ri[d, :k] = rx_local[chans]
-                rm[d, :k] = True
-                perm.append((s, d))
-            self.classes.append(_ExchangeClass(perm=tuple(perm), cmax=cmax))
-            send_i.append(si.astype(np.int32))
-            send_m.append(sm)
-            recv_i.append(ri.astype(np.int32))
-            recv_m.append(rm)
+        for t in range(len(self.tiers)):
+            pairs = sorted((s, d) for tt, s, d in routes if tt == t)
+            for color in edge_color_routes(pairs, G):
+                cmax = max(len(routes[(t, s, d)]) for s, d in color)
+                si = np.zeros((G, cmax), np.int64)
+                sm = np.zeros((G, cmax), bool)
+                ri = np.zeros((G, cmax), np.int64)
+                rm = np.zeros((G, cmax), bool)
+                for s, d in color:
+                    chans = routes[(t, s, d)]
+                    k = len(chans)
+                    si[s, :k] = tx_local[chans]
+                    sm[s, :k] = True
+                    ri[d, :k] = rx_local[chans]
+                    rm[d, :k] = True
+                self.classes.append(_ExchangeClass(
+                    perm=tuple(color), cmax=cmax, tier=t,
+                    depth=self.E_tiers[t],
+                ))
+                send_i.append(si.astype(np.int32))
+                send_m.append(sm)
+                recv_i.append(ri.astype(np.int32))
+                recv_m.append(rm)
         self._send_idx, self._send_mask = send_i, send_m
         self._recv_idx, self._recv_mask = recv_i, recv_m
 
@@ -392,15 +543,21 @@ class GraphEngine:
             return jnp.zeros_like(x)
         return jax.lax.ppermute(x, self.axes, list(perm))
 
-    def _epoch(self, st: GraphState) -> GraphState:
-        """K local cycles + boundary exchange (runs inside shard_map)."""
-        st = jax.lax.scan(
-            lambda s, _: (self._local_cycle(s), None), st, None, length=self.K
-        )[0]
+    def _exchange_tier(self, st: GraphState, t: int) -> GraphState:
+        """Run tier t's exchange classes (runs inside shard_map).
+
+        Drains each class's egress queues into a packet slab (bounded by the
+        receiver's advertised credit), moves the slab with one ``ppermute``
+        per class, fills the ingress queues, and returns fresh credits to
+        the sender on the reverse permutation.  Classes of other tiers —
+        and their credit windows — are untouched.
+        """
         q = st.queues
         tb = st.tables
-        new_credits = []
+        new_credits = list(st.credits)
         for r, cl in enumerate(self.classes):
+            if cl.tier != t:
+                continue
             sidx, smask = tb.send_idx[r], tb.send_mask[r]
             ridx, rmask = tb.recv_idx[r], tb.recv_mask[r]
             # drain egress queues (rows sidx), bounded by receiver credit
@@ -409,7 +566,7 @@ class GraphEngine:
                 capacity=q.capacity,
             )
             limit = jnp.where(smask, st.credits[r], 0)
-            sub2, slab, cnt = qmod.drain(sub, self.E, limit=limit)
+            sub2, slab, cnt = qmod.drain(sub, cl.depth, limit=limit)
             q = q.replace(tail=q.tail.at[sidx].set(sub2.tail))
             # one hop for the whole class (a partial permutation of granules)
             slab_in = self._pshift(slab, cl.perm)
@@ -419,10 +576,25 @@ class GraphEngine:
             # the reverse permutation
             cred = jnp.where(rmask, jnp.take(qmod.free(q), ridx), 0)
             rev = tuple((d, s) for s, d in cl.perm)
-            new_credits.append(self._pshift(cred, rev))
-        return st.replace(
-            queues=q, credits=tuple(new_credits), epoch=st.epoch + 1
-        )
+            new_credits[r] = self._pshift(cred, rev)
+        return st.replace(queues=q, credits=tuple(new_credits))
+
+    def _tier_round(self, st: GraphState, t: int) -> GraphState:
+        """One round of tier t: K_t sub-rounds (granule-local cycles at the
+        innermost tier, tier-(t+1) rounds otherwise), then tier t's
+        exchange — so tier t synchronizes every ``periods[t]`` cycles."""
+        if t == len(self.tiers) - 1:
+            body = lambda s, _: (self._local_cycle(s), None)  # noqa: E731
+        else:
+            body = lambda s, _: (self._tier_round(s, t + 1), None)  # noqa: E731
+        st = jax.lax.scan(body, st, None, length=self.tiers[t].K)[0]
+        return self._exchange_tier(st, t)
+
+    def _epoch(self, st: GraphState) -> GraphState:
+        """One outermost round = ``cycles_per_epoch`` local cycles, every
+        tier exchanged at its own cadence (runs inside shard_map)."""
+        st = self._tier_round(st, 0)
+        return st.replace(epoch=st.epoch + 1)
 
     # ------------------------------------------------------------------ run
     def epoch_fn(self):
@@ -452,28 +624,43 @@ class GraphEngine:
         return self._jit_cache[key](state)
 
     def run_cycles(self, state: GraphState, n_cycles: int) -> GraphState:
-        """Advance ``ceil(n_cycles / K)`` epochs (>= n_cycles local cycles)."""
-        return self.run_epochs(state, -(-n_cycles // self.K))
+        """Advance ``ceil(n_cycles / cycles_per_epoch)`` outermost epochs
+        (>= n_cycles local cycles)."""
+        return self.run_epochs(state, -(-n_cycles // self.cycles_per_epoch))
+
+    def _done_view(self, local: GraphState):
+        """What ``run_until``'s predicate sees (the granule-local state).
+
+        Subclasses narrow the view instead of overriding ``run_until`` —
+        that keeps the public signature and the jit-cache keying defined in
+        exactly one place, so a subclass call can never silently miss the
+        cache or drift from the base signature.
+        """
+        return local
 
     def run_until(
         self,
         state: GraphState,
-        done_fn: Callable[[GraphState], jax.Array],
+        done_fn: Callable[[Any], jax.Array],
         max_epochs: int,
-        _cache_key: Any = None,
+        *,
+        cache_key: Any = None,
     ) -> GraphState:
-        """Run epochs until ``done_fn(local_state)`` holds on every granule.
+        """Run epochs until ``done_fn(self._done_view(local))`` holds on
+        every granule.
 
-        done_fn gets the granule-local (squeezed) GraphState and returns a
-        () bool; padding slots are live in ``block_states`` — mask with
+        For ``GraphEngine`` the view is the granule-local (squeezed)
+        GraphState — padding slots are live in ``block_states``, mask with
         ``local.tables.active[gi]`` when the partition is uneven.
+        ``GridEngine`` narrows the view to the cell states.
 
         The compiled loop is cached per (predicate, max_epochs).  The cache
-        pins the predicate object (``_cache_key`` if given, else ``done_fn``)
+        pins the predicate object (``cache_key`` if given, else ``done_fn``)
         so a garbage-collected function's recycled id can never alias a
-        stale compilation.
+        stale compilation; pass ``cache_key`` when the predicate is a fresh
+        lambda per call but semantically constant.
         """
-        anchor = _cache_key if _cache_key is not None else done_fn
+        anchor = cache_key if cache_key is not None else done_fn
         key = ("until", id(anchor), max_epochs)
         if key not in self._jit_cache:
 
@@ -489,7 +676,7 @@ class GraphEngine:
                 def body(carry):
                     s, _ = carry
                     s = self._epoch(s)
-                    not_done = 1 - done_fn(s).astype(jnp.int32)
+                    not_done = 1 - done_fn(self._done_view(s)).astype(jnp.int32)
                     pending = jax.lax.psum(not_done, self.axes)
                     return s, pending
 
@@ -610,14 +797,10 @@ class GridEngine(GraphEngine):
         )
         return super().init(key, group_params={0: flat})
 
-    def run_until(self, state, done_fn, max_epochs, _cache_key=None):
-        """done_fn gets the granule-local cell states, leaves (Tr*Tc, ...)."""
-        return super().run_until(
-            state,
-            lambda s: done_fn(s.block_states[0]),
-            max_epochs,
-            _cache_key=_cache_key if _cache_key is not None else done_fn,
-        )
+    def _done_view(self, local):
+        """``run_until`` predicates see the granule-local cell states,
+        leaves (Tr*Tc, ...) — not the whole GraphState."""
+        return local.block_states[0]
 
     def gather_cells(self, state: GraphState) -> PyTree:
         """Return cell states reassembled to global (R, C, ...) layout."""

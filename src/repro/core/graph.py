@@ -199,6 +199,43 @@ class ChannelGraph:
         )
 
     @classmethod
+    def _uniform_2port(
+        cls,
+        cell: Block,
+        n: int,
+        rxm: np.ndarray,
+        txm: np.ndarray,
+        chan_src: np.ndarray,
+        chan_dst: np.ndarray,
+        params: PyTree | None,
+        payload_words: int | None,
+        dtype: Any,
+        capacity: int | None,
+    ) -> "ChannelGraph":
+        """Assemble a single-group graph from prebuilt vectorized tables."""
+        import jax.numpy as jnp
+        from . import queue as qmod
+
+        group = GroupDef(
+            block=cell,
+            members=np.arange(n, dtype=np.int32),
+            names=tuple(),  # names elided at this scale
+            params=params,
+        )
+        return cls(
+            payload_words=payload_words or cell.payload_words,
+            dtype=dtype if dtype is not None else jnp.float32,
+            capacity=capacity or qmod.DEFAULT_CAPACITY,
+            groups=[group],
+            rx_idx=[rxm.astype(np.int32)],
+            tx_idx=[txm.astype(np.int32)],
+            chan_src=chan_src.astype(np.int32),
+            chan_dst=chan_dst.astype(np.int32),
+            ext_in={},
+            ext_out={},
+        )
+
+    @classmethod
     def grid(
         cls,
         cell: Block,
@@ -217,9 +254,6 @@ class ChannelGraph:
         the §IV-B manycore topology.  O(R*C) numpy, no Python per-instance
         loop, so million-core graphs stay cheap to describe.
         """
-        import jax.numpy as jnp
-        from . import queue as qmod
-
         if len(cell.in_ports) != 2 or len(cell.out_ports) != 2:
             raise ValueError("grid() needs a cell with 2 in and 2 out ports")
         n = R * C
@@ -247,23 +281,58 @@ class ChannelGraph:
         txm[:, 0] = np.where(cc < C - 1, east_of(rr, cc), NULL_TX)
         txm[:, 1] = np.where(rr < R - 1, south_of(rr, cc), NULL_TX)
 
-        group = GroupDef(
-            block=cell,
-            members=np.arange(n, dtype=np.int32),
-            names=tuple(),  # names elided at this scale
-            params=params,
+        return cls._uniform_2port(
+            cell, n, rxm, txm, chan_src, chan_dst,
+            params, payload_words, dtype, capacity,
         )
-        return cls(
-            payload_words=payload_words or cell.payload_words,
-            dtype=dtype if dtype is not None else jnp.float32,
-            capacity=capacity or qmod.DEFAULT_CAPACITY,
-            groups=[group],
-            rx_idx=[rxm.astype(np.int32)],
-            tx_idx=[txm.astype(np.int32)],
-            chan_src=chan_src.astype(np.int32),
-            chan_dst=chan_dst.astype(np.int32),
-            ext_in={},
-            ext_out={},
+
+    @classmethod
+    def torus(
+        cls,
+        cell: Block,
+        R: int,
+        C: int,
+        *,
+        params: PyTree | None = None,
+        payload_words: int | None = None,
+        dtype: Any = None,
+        capacity: int | None = None,
+    ) -> "ChannelGraph":
+        """Vectorized builder for a uniform R×C 2-D torus of ``cell``.
+
+        Same port convention as ``grid`` (east = ``out_ports[0]`` ->
+        ``in_ports[0]``, south = ``out_ports[1]`` -> ``in_ports[1]``) but
+        with wrap-around links, so every port is wired and every row/column
+        is a ring — the wafer-scale many-core topology
+        (``examples/wafer_scale.py``).  O(R*C) numpy, no per-instance loop.
+        """
+        if len(cell.in_ports) != 2 or len(cell.out_ports) != 2:
+            raise ValueError("torus() needs a cell with 2 in and 2 out ports")
+        n = R * C
+        rr, cc = np.divmod(np.arange(n, dtype=np.int64), C)
+
+        # Channel ids: east ring channels first (one per cell), then south.
+        east_of = lambda r, c: _N_SENTINELS + r * C + c  # noqa: E731
+        south_of = lambda r, c: _N_SENTINELS + n + r * C + c  # noqa: E731
+        n_channels = _N_SENTINELS + 2 * n
+
+        chan_src = np.full((n_channels,), -1, np.int64)
+        chan_dst = np.full((n_channels,), -1, np.int64)
+        chan_src[_N_SENTINELS:_N_SENTINELS + n] = rr * C + cc
+        chan_dst[_N_SENTINELS:_N_SENTINELS + n] = rr * C + (cc + 1) % C
+        chan_src[_N_SENTINELS + n:] = rr * C + cc
+        chan_dst[_N_SENTINELS + n:] = ((rr + 1) % R) * C + cc
+
+        rxm = np.empty((n, 2), np.int64)
+        txm = np.empty((n, 2), np.int64)
+        rxm[:, 0] = east_of(rr, (cc - 1) % C)
+        rxm[:, 1] = south_of((rr - 1) % R, cc)
+        txm[:, 0] = east_of(rr, cc)
+        txm[:, 1] = south_of(rr, cc)
+
+        return cls._uniform_2port(
+            cell, n, rxm, txm, chan_src, chan_dst,
+            params, payload_words, dtype, capacity,
         )
 
     # -- queries -------------------------------------------------------------
@@ -330,3 +399,169 @@ def grid_partition(R: int, C: int, Dr: int, Dc: int) -> np.ndarray:
     Tr, Tc = R // Dr, C // Dc
     rr, cc = np.divmod(np.arange(R * C, dtype=np.int64), C)
     return ((rr // Tr) * Dc + (cc // Tc)).astype(np.int32)
+
+
+# -- hierarchical partitions (DESIGN.md §3) ----------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Tier:
+    """One level of the partition tree: a group of mesh axes + a sync rate.
+
+    axes: the mesh axes this tier spans (e.g. ``("pod",)`` for the DCI tier,
+          ``("gr", "gc")`` for the intra-pod ICI tier).
+    K:    sync rate.  For the innermost tier, the number of granule-local
+          cycles per tier round; for an outer tier, the number of
+          next-inner-tier rounds per round of this tier.  A tier-t boundary
+          channel is therefore synchronized every ``prod(K_t .. K_inner)``
+          cycles (its *period*).
+    name: optional label for diagnostics.
+    """
+
+    axes: tuple[str, ...]
+    K: int = 1
+    name: str = ""
+
+    def __post_init__(self):
+        object.__setattr__(self, "axes", tuple(self.axes))
+        if self.K < 1:
+            raise ValueError(f"tier K must be >= 1, got {self.K}")
+        if not self.axes:
+            raise ValueError("tier needs at least one mesh axis")
+
+
+def normalize_tiers(tiers) -> tuple[Tier, ...]:
+    """Canonicalize a tier spec: a sequence of ``Tier`` or ``(axes, K)``
+    pairs (axes a name or tuple of names), outermost (slowest) first."""
+    out: list[Tier] = []
+    for t in tiers:
+        if isinstance(t, Tier):
+            out.append(t)
+        else:
+            axes, K = t
+            if isinstance(axes, str):
+                axes = (axes,)
+            out.append(Tier(axes=tuple(axes), K=int(K)))
+    seen: set[str] = set()
+    for t in out:
+        for a in t.axes:
+            if a in seen:
+                raise ValueError(f"mesh axis {a!r} appears in two tiers")
+            seen.add(a)
+    if not out:
+        raise ValueError("need at least one tier")
+    return tuple(out)
+
+
+class PartitionTree:
+    """Hierarchical instance -> granule assignment over tiered mesh axes.
+
+    The *leaf granule* id of an instance is the row-major flattening of its
+    per-axis device coordinates, axes ordered outermost tier first — i.e.
+    ``part`` is exactly the flat granule vector the engines consume, plus
+    the tree structure needed to classify boundary channels by the
+    outermost tier they cross and to derive per-tier sync periods.
+
+    part:       (n_instances,) int32 leaf granule ids.
+    tiers:      outermost-first ``Tier`` sequence (see ``Tier``).
+    axis_sizes: mesh-axis name -> size, for every axis named by a tier.
+    """
+
+    def __init__(self, part, tiers, axis_sizes: Mapping[str, int]):
+        self.tiers = normalize_tiers(tiers)
+        self.axes = tuple(a for t in self.tiers for a in t.axes)
+        missing = [a for a in self.axes if a not in axis_sizes]
+        if missing:
+            raise ValueError(f"axis_sizes missing sizes for axes {missing}")
+        self.dev_shape = tuple(int(axis_sizes[a]) for a in self.axes)
+        self.n_granules = int(np.prod(self.dev_shape))
+        self.part = np.asarray(part, np.int32)
+        if self.part.ndim != 1:
+            raise ValueError("part must be a 1-D granule vector")
+        if self.part.size and (
+            self.part.min() < 0 or self.part.max() >= self.n_granules
+        ):
+            raise ValueError(
+                f"part assigns granules outside [0, {self.n_granules})"
+            )
+        # tier t covers axis indices [_axis_start[t], _axis_start[t+1])
+        self._axis_start = np.cumsum([0] + [len(t.axes) for t in self.tiers])
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.tiers)
+
+    @property
+    def K_tiers(self) -> tuple[int, ...]:
+        return tuple(t.K for t in self.tiers)
+
+    def periods(self) -> tuple[int, ...]:
+        """Cycles between tier-t synchronizations: prod(K_t .. K_inner)."""
+        ps, acc = [], 1
+        for t in reversed(self.tiers):
+            acc *= t.K
+            ps.append(acc)
+        return tuple(reversed(ps))
+
+    @property
+    def cycles_per_epoch(self) -> int:
+        return self.periods()[0]
+
+    def tier_of_edges(self, src_g: np.ndarray, dst_g: np.ndarray) -> np.ndarray:
+        """Outermost tier crossed by each (src granule, dst granule) edge.
+
+        Returns (n,) int32: the smallest tier index t such that the two
+        granules differ in one of tier t's axes, or -1 when the granules
+        are identical (or either end is a host/sentinel, id < 0).
+        """
+        src_g = np.asarray(src_g, np.int64)
+        dst_g = np.asarray(dst_g, np.int64)
+        valid = (src_g >= 0) & (dst_g >= 0)
+        sc = np.stack(
+            np.unravel_index(np.clip(src_g, 0, None), self.dev_shape), axis=0
+        )  # (n_axes, n)
+        dc = np.stack(
+            np.unravel_index(np.clip(dst_g, 0, None), self.dev_shape), axis=0
+        )
+        tier = np.full(src_g.shape, -1, np.int32)
+        # innermost first so the outermost differing tier wins the overwrite
+        for t in reversed(range(self.n_tiers)):
+            lo, hi = self._axis_start[t], self._axis_start[t + 1]
+            diff = (sc[lo:hi] != dc[lo:hi]).any(axis=0)
+            tier = np.where(diff, t, tier)
+        return np.where(valid, tier, -1).astype(np.int32)
+
+    def summary(self) -> str:
+        parts = ", ".join(
+            f"{t.name or '/'.join(t.axes)}:K={t.K}" for t in self.tiers
+        )
+        return (
+            f"PartitionTree({self.part.size} instances -> {self.n_granules} "
+            f"granules, tiers [{parts}], periods {self.periods()})"
+        )
+
+
+def tiered_grid_partition(
+    R: int, C: int, tiles: Sequence[tuple[int, int]]
+) -> np.ndarray:
+    """Nested block-tiling of a row-major R×C grid, one tier per level.
+
+    ``tiles`` lists per-tier (rows, cols) device splits outermost first;
+    level t carves each level-(t-1) block into ``tr × tc`` sub-blocks.  The
+    returned (R*C,) granule vector is flattened with one mesh axis per tier
+    of size ``tr * tc`` (outermost first) — i.e. it matches a mesh of shape
+    ``tuple(tr * tc for tr, tc in tiles)``.  ``tiles=[(Dr, Dc)]`` reduces to
+    ``grid_partition`` modulo the single flattened axis.
+    """
+    rr, cc = np.divmod(np.arange(R * C, dtype=np.int64), C)
+    gid = np.zeros((R * C,), np.int64)
+    Rrem, Crem = R, C
+    for tr, tc in tiles:
+        if Rrem % tr or Crem % tc:
+            raise ValueError(
+                f"block {Rrem}x{Crem} not divisible by tier tile {tr}x{tc}"
+            )
+        br, bc = Rrem // tr, Crem // tc
+        gid = gid * (tr * tc) + (rr // br) * tc + (cc // bc)
+        rr, cc = rr % br, cc % bc
+        Rrem, Crem = br, bc
+    return gid.astype(np.int32)

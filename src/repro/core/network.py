@@ -132,7 +132,10 @@ class Network:
 
         engine="single"    -> NetworkSim (this module); no extra kwargs.
         engine="graph"     -> distributed.GraphEngine; kwargs: mesh, K,
-                              partition (instance->granule map), axes.
+                              partition (instance->granule map or a
+                              graph.PartitionTree), axes, tiers (per-tier
+                              (axes, K) pairs or graph.Tier, outermost
+                              first — hierarchical sync, DESIGN.md §3).
         engine="register"  -> fastgrid.RegisterGridEngine (systolic-grid
                               networks only); kwargs: mesh, K.
 
@@ -149,11 +152,12 @@ class Network:
 
             mesh = kw.pop("mesh")
             K = kw.pop("K", 1)
-            axes = kw.pop("axes", tuple(mesh.axis_names))
+            tiers = kw.pop("tiers", None)
+            axes = kw.pop("axes", None)  # engine defaults to mesh.axis_names
             partition = kw.pop("partition", None)
             if kw:
                 raise TypeError(f"unknown build kwargs for engine='graph': {sorted(kw)}")
-            return GraphEngine(graph, partition, mesh, K=K, axes=axes)
+            return GraphEngine(graph, partition, mesh, K=K, axes=axes, tiers=tiers)
         if engine == "register":
             from .fastgrid import RegisterGridEngine
 

@@ -63,6 +63,75 @@ def bsp_error_bound(k_epoch: int, boundary_crossings: int, n_ideal_cycles: float
     return 2.0 * k_epoch * boundary_crossings / max(n_ideal_cycles, 1.0)
 
 
+# -- tiered (hierarchical-partition) accounting, DESIGN.md §3/§5 -------------
+
+def tier_periods(k_tiers: Sequence[int]) -> list[int]:
+    """Cycles between tier-t synchronizations for a nested epoch schedule.
+
+    ``k_tiers`` lists per-tier rates outermost first (matching
+    ``graph.Tier``): the innermost rate is local cycles per innermost
+    round, each outer rate is sub-rounds per round.  Tier t's boundary
+    channels are exchanged every ``prod(k_tiers[t:])`` cycles — its T_comm.
+    """
+    periods, acc = [], 1
+    for k in reversed(list(k_tiers)):
+        acc *= int(k)
+        periods.append(acc)
+    return list(reversed(periods))
+
+
+def tiered_comm_cycles(
+    k_tiers: Sequence[int], crossings_per_tier: Sequence[int]
+) -> float:
+    """Total communication-nonideality cycles on a measured path.
+
+    A tier-t crossing waits up to ``period_t`` cycles for its exchange and
+    backpressure can reflect it once (the paper's 2*T_comm term), so each
+    contributes ``<= 2 * period_t`` cycles.
+    """
+    periods = tier_periods(k_tiers)
+    if len(crossings_per_tier) != len(periods):
+        raise ValueError(
+            f"{len(periods)} tiers but {len(crossings_per_tier)} crossing counts"
+        )
+    return sum(2.0 * p * x for p, x in zip(periods, crossings_per_tier))
+
+
+def n_meas_actual_tiered(
+    n_cycles: float,
+    f_a_wall: float,
+    f_b_wall: float,
+    k_tiers: Sequence[int],
+    crossings_per_tier: Sequence[int],
+    n_rx: int = 1,
+    n_tx: int = 1,
+) -> float:
+    """§II-C observed delay with the T_comm term split per partition tier.
+
+    The flat model folds all boundary latency into one ``2*T_comm*F_wall``
+    term; under a hierarchical partition a path may cross both fast (ICI)
+    and slow (DCI) tiers, and the slow tier's longer sync period dominates.
+    Feeding the per-tier sum through the same equation keeps the flat
+    single-tier case identical to ``n_meas_actual``.
+    """
+    ratio = f_a_wall / f_b_wall
+    comm = tiered_comm_cycles(k_tiers, crossings_per_tier)
+    return n_cycles * ratio + comm + (n_rx + n_tx) * (1.0 + ratio)
+
+
+def bsp_error_bound_tiered(
+    k_tiers: Sequence[int],
+    crossings_per_tier: Sequence[int],
+    n_ideal_cycles: float,
+) -> float:
+    """Per-tier generalization of ``bsp_error_bound``: each tier-t crossing
+    adds at most ``2 * period_t`` cycles.  Reduces to the flat bound for a
+    single tier."""
+    return tiered_comm_cycles(k_tiers, crossings_per_tier) / max(
+        n_ideal_cycles, 1.0
+    )
+
+
 def dividers_for_rates(f_sims: Sequence[float]) -> list[int]:
     """Clock dividers that realize simulated-frequency ratios exactly.
 

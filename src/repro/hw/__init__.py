@@ -7,3 +7,6 @@ cell, §IV-B); the functional "SW-model" DRAM and the piecewise-linear
 "SPICE" block live in examples/heterogeneous_soc.py (§IV-A analogue).
 """
 from .systolic import SystolicCell, SystolicParams, make_systolic_network, collect_result
+from .manycore import (
+    ManycoreCell, CoreParams, allreduce_done, expected_total, make_core_params,
+)

@@ -1,0 +1,171 @@
+"""Wafer-scale many-core fabric — message-passing mini-cores on a torus
+(paper §IV-B at its intended scale; ``examples/wafer_scale.py``).
+
+The paper's headline demo is a million RISC-V cores exchanging packets over
+latency-insensitive channels, spread over thousands of cloud cores by the
+tiered shm/TCP transport.  The analogue here is a uniform R×C **torus** of
+``ManycoreCell`` blocks — one block type, so the whole fabric steps as a
+single vmapped body regardless of core count — running a two-phase
+ring-allreduce entirely in the data plane:
+
+  phase 0 (row rings, east links):   every core circulates its value around
+          its row and accumulates the row sum;
+  phase 1 (column rings, south links): row sums circulate around each
+          column, accumulating the global sum.
+
+When a core's ``phase`` reaches 2, ``total`` holds the sum of every core's
+``value`` — a global invariant that checks end-to-end packet delivery
+across every granule and tier boundary with one equality.  All traffic is
+ready/valid handshaked, so results are **bit-exact for any partition and
+any per-tier sync rate** (the property ``tests/test_tiered.py`` leans on).
+
+Protocol per ring of length L (phase 0: L = C, phase 1: L = R): a core
+sends ``L-1`` packets — its own contribution first, then the first ``L-2``
+values it receives, forwarded in arrival order through a 1-deep elastic
+register — and accumulates the ``L-1`` values it receives.  A value
+occupies one buffer (queue slot or forward register) at a time and each
+ring holds L live values against >= 2L buffer slots, so the rings cannot
+deadlock even at queue capacity 2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.block import Block
+from ..core.struct import pytree_dataclass
+
+PAYLOAD_WORDS = 2  # [value, hop tag]
+
+
+@pytree_dataclass
+class CoreState:
+    value: jax.Array   # () f32 — this core's contribution (from params)
+    own: jax.Array     # () f32 — value this core injects in the current phase
+    acc: jax.Array     # () f32 — running accumulator for the current phase
+    total: jax.Array   # () f32 — global sum (valid once phase == 2)
+    phase: jax.Array   # () int32: 0 = row ring, 1 = column ring, 2 = done
+    sent: jax.Array    # () int32 packets sent this phase
+    rcvd: jax.Array    # () int32 packets received this phase
+    fwd: jax.Array     # () f32 — 1-deep forward register
+    fwd_v: jax.Array   # () bool
+    fires: jax.Array   # () int32 — total handshakes (perf counter, §II-C)
+
+
+@pytree_dataclass
+class CoreParams:
+    """Per-instance parameters (stacked leading dim by the builders)."""
+
+    value: jax.Array  # () f32
+
+
+class ManycoreCell(Block):
+    """Message-passing mini-core for an R×C torus (ports match
+    ``ChannelGraph.torus``: west/north in, east/south out)."""
+
+    in_ports = ("w_in", "n_in")
+    out_ports = ("e_out", "s_out")
+    payload_words = PAYLOAD_WORDS
+
+    def __init__(self, R: int, C: int):
+        self.R = int(R)
+        self.C = int(C)
+
+    def init_state(self, key: jax.Array, params: CoreParams | None = None) -> CoreState:
+        if params is None:
+            raise ValueError("ManycoreCell requires per-instance params")
+        v = jnp.asarray(params.value, jnp.float32)
+        zero_i = jnp.zeros((), jnp.int32)
+        return CoreState(
+            value=v, own=v, acc=v,
+            total=jnp.zeros((), jnp.float32),
+            phase=zero_i, sent=zero_i, rcvd=zero_i,
+            fwd=jnp.zeros((), jnp.float32),
+            fwd_v=jnp.zeros((), bool),
+            fires=zero_i,
+        )
+
+    def step(self, state: CoreState, rx, tx_ready):
+        (w_pay, w_valid) = rx["w_in"]
+        (n_pay, n_valid) = rx["n_in"]
+        in_row = state.phase == 0  # else column ring (or done)
+        live = state.phase < 2
+        # packets to send == packets to receive this phase: ring length - 1
+        need = jnp.where(in_row, self.C - 1, self.R - 1).astype(jnp.int32)
+
+        in_val = jnp.where(in_row, w_pay[0], n_pay[0])
+        in_valid = live & jnp.where(in_row, w_valid, n_valid)
+        out_ready = jnp.where(in_row, tx_ready["e_out"], tx_ready["s_out"])
+
+        # ---- send: own value first, then forwards, in arrival order
+        out_val = jnp.where(state.sent == 0, state.own, state.fwd)
+        can_send = live & (state.sent < need) & ((state.sent == 0) | state.fwd_v)
+        did_send = can_send & out_ready
+        fwd_freed = did_send & (state.sent > 0)
+
+        # ---- receive: accept unless the forward register is (still) busy
+        will_fwd = state.rcvd < need - 1  # the last arrival is not re-sent
+        may_accept = live & (state.rcvd < need) & (
+            ~will_fwd | ~state.fwd_v | fwd_freed
+        )
+        accept = may_accept & in_valid
+
+        sent = state.sent + did_send.astype(jnp.int32)
+        rcvd = state.rcvd + accept.astype(jnp.int32)
+        acc = state.acc + jnp.where(accept, in_val, 0.0)
+        fwd_v = (state.fwd_v & ~fwd_freed) | (accept & will_fwd)
+        fwd = jnp.where(accept & will_fwd, in_val, state.fwd)
+
+        # ---- phase transition: all sent and all received => ring complete
+        done_phase = live & (sent == need) & (rcvd == need)
+        finishing = done_phase & (state.phase == 1)
+        new_phase = state.phase + done_phase.astype(jnp.int32)
+
+        payload = jnp.stack([out_val, state.sent.astype(jnp.float32)])
+        tx = {
+            "e_out": (payload, did_send & in_row),
+            "s_out": (payload, did_send & ~in_row),
+        }
+        rx_ready = {
+            "w_in": may_accept & in_row,
+            "n_in": may_accept & ~in_row,
+        }
+        new_state = CoreState(
+            value=state.value,
+            own=jnp.where(done_phase, acc, state.own),
+            acc=acc,
+            total=jnp.where(finishing, acc, state.total),
+            phase=new_phase,
+            sent=jnp.where(done_phase, 0, sent),
+            rcvd=jnp.where(done_phase, 0, rcvd),
+            fwd=fwd,
+            fwd_v=fwd_v,
+            fires=state.fires
+            + did_send.astype(jnp.int32)
+            + accept.astype(jnp.int32),
+        )
+        return new_state, rx_ready, tx
+
+
+def make_core_params(values: np.ndarray) -> CoreParams:
+    """Stacked per-core params from an (R, C) value array (row-major)."""
+    v = np.asarray(values, np.float32)
+    return CoreParams(value=jnp.asarray(v.reshape(-1)))
+
+
+def allreduce_done(cell_states: CoreState, active=None) -> jax.Array:
+    """() bool — every (active) core finished both ring phases.
+
+    ``active`` masks padding slots when the partition is uneven (pass
+    ``local.tables.active[0]`` from a ``run_until`` predicate).
+    """
+    done = cell_states.phase >= 2
+    if active is not None:
+        done = done | ~active
+    return done.all()
+
+
+def expected_total(values: np.ndarray) -> float:
+    """The invariant every core must converge to: the global sum."""
+    return float(np.asarray(values, np.float64).sum())

@@ -1,0 +1,428 @@
+"""Tiered-exchange property tests (DESIGN.md §3; ISSUE 2 acceptance).
+
+The hierarchical-partition contract: boundary channels are classified by
+the outermost tier they cross, each tier's routes are edge-colored into the
+König-optimal number of exchange classes, and the nested epoch schedule
+(tier t exchanged every ``prod(K_t .. K_inner)`` cycles) leaves handshaked
+dataflow **bit-exact** for any hierarchical partition and any
+(K_inner, K_outer) — cycle-accurate when every K is 1.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChannelGraph, Network, PartitionTree, Tier, normalize_tiers,
+    tiered_grid_partition,
+)
+from repro.core import perfmodel
+from repro.core.distributed import GraphEngine, GridEngine, edge_color_routes
+from repro.hw.manycore import (
+    ManycoreCell, allreduce_done, expected_total, make_core_params,
+)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+EXAMPLES = os.path.join(os.path.dirname(__file__), "..", "examples")
+
+
+def _run_subprocess(code: str, devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+# ------------------------------------------------------------ IR-level units
+def test_torus_builder_matches_manual_wiring():
+    """Vectorized ChannelGraph.torus == per-instance Network wiring (up to
+    channel renumbering, compared via endpoint pairs with multiplicity)."""
+    R, C = 3, 4
+    cell = ManycoreCell(R, C)
+    net = Network(payload_words=2, capacity=4)
+    insts = [[net.instantiate(cell, name=f"c{r}_{c}") for c in range(C)]
+             for r in range(R)]
+    for r in range(R):
+        for c in range(C):
+            net.connect(insts[r][c]["e_out"], insts[r][(c + 1) % C]["w_in"])
+            net.connect(insts[r][c]["s_out"], insts[(r + 1) % R][c]["n_in"])
+    g_net = net.graph()
+    g_torus = ChannelGraph.torus(cell, R, C, capacity=4)
+
+    def pairs(g):
+        return sorted(
+            (int(s), int(d))
+            for cid, (s, d) in enumerate(zip(g.chan_src, g.chan_dst))
+            if cid >= 2
+        )
+
+    assert g_net.n_channels == g_torus.n_channels == 2 + 2 * R * C
+    assert pairs(g_net) == pairs(g_torus)
+    # every port is wired on a torus — no sentinel fan-in/out
+    assert (g_torus.rx_idx[0] >= 2).all() and (g_torus.tx_idx[0] >= 2).all()
+
+
+def test_tiered_grid_partition_nesting():
+    # outer split of rows into 2 pods, inner 2x2 per pod -> 8 granules:
+    # granule id = pod * 4 + inner block index, row-major within the pod
+    part = tiered_grid_partition(4, 4, [(2, 1), (2, 2)])
+    expect = np.array(
+        [[0, 0, 1, 1],
+         [2, 2, 3, 3],
+         [4, 4, 5, 5],
+         [6, 6, 7, 7]]
+    )
+    np.testing.assert_array_equal(part.reshape(4, 4), expect)
+    # single-level tiling matches grid_partition up to the flat axis
+    from repro.core import grid_partition
+
+    np.testing.assert_array_equal(
+        tiered_grid_partition(6, 4, [(3, 2)]), grid_partition(6, 4, 3, 2)
+    )
+    with pytest.raises(ValueError, match="not divisible"):
+        tiered_grid_partition(4, 4, [(3, 1)])
+
+
+def test_partition_tree_tier_classification():
+    tree = PartitionTree(
+        np.zeros((1,), np.int32),
+        [Tier(("pod",), K=4), Tier(("gr", "gc"), K=8)],
+        {"pod": 2, "gr": 2, "gc": 2},
+    )
+    assert tree.dev_shape == (2, 2, 2) and tree.n_granules == 8
+    assert tree.periods() == (32, 8) and tree.cycles_per_epoch == 32
+    # granule ids are row-major (pod, gr, gc): 5 = (1,0,1), 1 = (0,0,1)
+    src = np.array([0, 0, 0, 1, 3, -1])
+    dst = np.array([0, 1, 5, 5, 7, 2])
+    #               same inner pod  pod  pod  host
+    np.testing.assert_array_equal(
+        tree.tier_of_edges(src, dst), [-1, 1, 0, 0, 0, -1]
+    )
+
+
+def test_tier_spec_validation():
+    with pytest.raises(ValueError, match="two tiers"):
+        normalize_tiers([(("a",), 2), (("a", "b"), 1)])
+    with pytest.raises(ValueError, match="K must be >= 1"):
+        Tier(("a",), K=0)
+    with pytest.raises(ValueError, match="at least one tier"):
+        normalize_tiers([])
+
+
+def test_perfmodel_tiered_reduces_to_flat():
+    assert perfmodel.tier_periods([4, 8]) == [32, 8]
+    # single tier == the flat §II-C equation
+    flat = perfmodel.n_meas_actual(1000, 2.0, 1.0, t_comm=8.0)
+    tiered = perfmodel.n_meas_actual_tiered(
+        1000, 2.0, 1.0, k_tiers=[16], crossings_per_tier=[1]
+    )
+    assert flat == pytest.approx(tiered)
+    # slow-tier crossings dominate the bound
+    b = perfmodel.bsp_error_bound_tiered([4, 8], [1, 3], 1000.0)
+    assert b == pytest.approx((2 * 32 * 1 + 2 * 8 * 3) / 1000.0)
+    with pytest.raises(ValueError, match="crossing counts"):
+        perfmodel.tiered_comm_cycles([4, 8], [1])
+
+
+# ------------------------------------------------- König coloring properties
+def _check_coloring(pairs, G):
+    classes = edge_color_routes(pairs, G)
+    # every class is a partial permutation of granules
+    for cls in classes:
+        srcs = [s for s, _ in cls]
+        dsts = [d for _, d in cls]
+        assert len(set(srcs)) == len(srcs), "granule sends twice in a class"
+        assert len(set(dsts)) == len(dsts), "granule receives twice in a class"
+    # exact cover of the route set
+    flat = sorted(p for cls in classes for p in cls)
+    assert flat == sorted(pairs)
+    # König: class count == max in/out-degree (optimal, not just bounded)
+    out_deg = np.bincount([s for s, _ in pairs], minlength=G)
+    in_deg = np.bincount([d for _, d in pairs], minlength=G)
+    delta = max(out_deg.max(), in_deg.max())
+    assert len(classes) == delta, (len(classes), delta)
+    return classes
+
+
+def test_edge_coloring_konig_bound_random_dense():
+    """Random all-to-all-ish digraphs: class count equals the König bound
+    (max granule in/out-degree) and every class is a partial permutation."""
+    for seed in range(40):
+        rng = np.random.RandomState(seed)
+        G = rng.randint(2, 12)
+        density = rng.uniform(0.15, 1.0)
+        mask = rng.rand(G, G) < density
+        np.fill_diagonal(mask, False)  # boundary routes never self-loop
+        pairs = [(int(s), int(d)) for s, d in zip(*np.nonzero(mask))]
+        if not pairs:
+            assert edge_color_routes(pairs, G) == []
+            continue
+        _check_coloring(pairs, G)
+
+
+def test_edge_coloring_structured_topologies():
+    # full bipartite all-to-all on 2x3 granules: Δ = 3
+    pairs = [(s, d) for s in (0, 1) for d in (2, 3, 4)]
+    assert len(_check_coloring(pairs, 5)) == 3
+    # a directed ring: Δ = 1 — one class moves every route at once
+    ring = [(i, (i + 1) % 6) for i in range(6)]
+    assert len(_check_coloring(ring, 6)) == 1
+    # nearest-neighbor grid (east+south over 2x2 granules): Δ = 2
+    grid = [(0, 1), (2, 3), (0, 2), (1, 3)]
+    assert len(_check_coloring(grid, 4)) == 2
+
+
+def test_engine_tier_classification_covers_all_boundaries():
+    """End-to-end host-side lowering: every boundary channel of a random
+    hierarchical partition lands in exactly one class of its crossing
+    tier, and per-tier class counts meet the König bound."""
+    for seed in range(8):
+        rng = np.random.RandomState(seed)
+        R, C = 4, 6
+        g = ChannelGraph.torus(
+            ManycoreCell(R, C), R, C,
+            params=make_core_params(np.ones((R, C), np.float32)),
+        )
+        tree = PartitionTree(
+            rng.randint(0, 8, size=R * C).astype(np.int32),
+            [Tier(("pod",), 3), Tier(("gx",), 2)],
+            {"pod": 2, "gx": 4},
+        )
+        src_g, dst_g = g.channel_granules(tree.part)
+        tier_of = tree.tier_of_edges(src_g, dst_g)
+        for t in range(tree.n_tiers):
+            chans = np.nonzero(tier_of == t)[0]
+            pairs = sorted({(int(src_g[c]), int(dst_g[c])) for c in chans})
+            if pairs:
+                _check_coloring(pairs, tree.n_granules)
+
+
+# ------------------------------------------------------- engine-level (1 dev)
+def test_manycore_allreduce_single_netlist():
+    R, C = 3, 5
+    rng = np.random.RandomState(1)
+    vals = rng.randint(1, 50, size=(R, C)).astype(np.float32)
+    g = ChannelGraph.torus(
+        ManycoreCell(R, C), R, C, params=make_core_params(vals), capacity=4
+    )
+    from repro.core import NetworkSim
+
+    sim = NetworkSim(g)
+    st = sim.init(jax.random.key(0))
+    st = sim.run(st, 200)
+    cells = st.block_states[0]
+    assert bool(allreduce_done(cells))
+    np.testing.assert_array_equal(
+        np.asarray(cells.total), np.full((R * C,), expected_total(vals))
+    )
+
+
+def test_run_until_signature_unified():
+    """GridEngine must not override run_until (the historical signature
+    drift) — it narrows ``_done_view`` instead, so the public signature and
+    the jit-cache keying live in exactly one place."""
+    assert "run_until" not in vars(GridEngine)
+    assert "_done_view" in vars(GridEngine)
+
+
+def test_run_until_cache_key_shares_compilation():
+    """Fresh lambdas with the same ``cache_key`` reuse one compiled loop."""
+    from repro.core.compat import make_mesh
+    from repro.hw.manycore import ManycoreCell
+
+    R, C = 2, 3
+    vals = np.ones((R, C), np.float32)
+    g = ChannelGraph.torus(
+        ManycoreCell(R, C), R, C, params=make_core_params(vals), capacity=4
+    )
+    eng = GraphEngine(g, None, make_mesh((1,), ("gx",)), K=2)
+    st = eng.init(jax.random.key(0))
+    for _ in range(3):  # distinct lambda objects, one semantic predicate
+        st2 = eng.run_until(
+            st, lambda s: (s.block_states[0].phase >= 2).all(), 1000,
+            cache_key="done",
+        )
+    until_keys = [k for k in eng._jit_cache if k[0] == "until"]
+    assert len(until_keys) == 1
+    assert bool(np.asarray(eng.gather_group(st2, 0).phase >= 2).all())
+
+
+@pytest.mark.parametrize("tiers", [
+    [(("gx",), 1)],
+    [(("gx",), 5)],
+    [(("pod",), 1), (("gx",), 1)],
+    [(("pod",), 3), (("gx",), 2)],
+])
+def test_tiered_single_granule_degenerates_to_netlist(tiers):
+    """With every instance on granule 0 the tier structure is latency only:
+    results must equal the single netlist bit-for-bit for any rates."""
+    R, C = 3, 4
+    rng = np.random.RandomState(2)
+    vals = rng.randint(1, 20, size=(R, C)).astype(np.float32)
+
+    from repro.core.compat import make_mesh
+
+    mesh = make_mesh((1, 1), ("pod", "gx"))
+    g = ChannelGraph.torus(
+        ManycoreCell(R, C), R, C, params=make_core_params(vals), capacity=4
+    )
+    eng = GraphEngine(g, None, mesh, tiers=tiers)
+    st = eng.init(jax.random.key(0))
+    st = eng.run_until(
+        st, lambda s: allreduce_done(s.block_states[0], s.tables.active[0]),
+        5000, cache_key="done",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(eng.gather_group(st, 0).total),
+        np.full((R * C,), expected_total(vals)),
+    )
+
+
+# ----------------------------------------------- multi-granule (subprocess)
+def test_tiered_bit_exact_random_hier_partitions_multidevice():
+    """THE acceptance property: for random hierarchical partitions and any
+    (K_inner, K_outer), the tiered engine's handshaked results are
+    bit-exact vs the flat GraphEngine and vs NetworkSim."""
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from repro.core import ChannelGraph, NetworkSim
+        from repro.core.compat import make_mesh
+        from repro.core.distributed import GraphEngine
+        from repro.hw.manycore import (
+            ManycoreCell, allreduce_done, expected_total, make_core_params)
+
+        R, C = 4, 6
+        rng = np.random.RandomState(11)
+        vals = rng.randint(1, 30, size=(R, C)).astype(np.float32)
+
+        def torus():
+            return ChannelGraph.torus(
+                ManycoreCell(R, C), R, C,
+                params=make_core_params(vals), capacity=4)
+
+        sim = NetworkSim(torus())
+        st = sim.init(jax.random.key(0))
+        st = sim.run(st, 400)
+        truth = np.asarray(st.block_states[0].total)
+        assert (truth == expected_total(vals)).all()
+
+        mesh = make_mesh((2, 2), ('pod', 'gx'))
+        done = lambda s: allreduce_done(s.block_states[0], s.tables.active[0])
+        for seed in (0, 1, 2):
+            part = np.random.RandomState(seed).randint(0, 4, size=R * C)
+            for (ko, ki) in ((1, 1), (2, 3), (4, 4), (3, 1)):
+                eng = GraphEngine(
+                    torus(), part, mesh,
+                    tiers=[(('pod',), ko), (('gx',), ki)])
+                s = eng.place(eng.init(jax.random.key(0)))
+                s = eng.run_until(s, done, 100000, cache_key='done')
+                got = np.asarray(eng.gather_group(s, 0).total)
+                np.testing.assert_array_equal(got, truth)
+            # flat engine over the same leaf granules agrees too
+            eng = GraphEngine(torus(), part, mesh, K=3)
+            s = eng.place(eng.init(jax.random.key(0)))
+            s = eng.run_until(s, done, 100000, cache_key='done')
+            np.testing.assert_array_equal(
+                np.asarray(eng.gather_group(s, 0).total), truth)
+        print('TIERED-BIT-EXACT-OK')
+    """)
+    assert "TIERED-BIT-EXACT-OK" in _run_subprocess(code)
+
+
+def test_tiered_cycle_accurate_at_k1_multidevice():
+    """At K_inner = K_outer = 1 every tier exchanges every cycle, so the
+    tiered engine is cycle-accurate — bit-identical even on the hetero
+    SoC's latency-*sensitive* free-running analog path, with the three
+    blocks split across both tiers of a (pod, gx) mesh."""
+    code = textwrap.dedent("""
+        import sys, numpy as np, jax
+        sys.path.insert(0, {examples!r})
+        import heterogeneous_soc as soc
+        from repro.core.compat import make_mesh
+
+        cycles = 120
+        truth = soc.run_single(cycles)
+        net, cpu = soc.build_soc()
+        mesh = make_mesh((2, 2), ('pod', 'gx'))
+        # cpu/dram share a pod (gx-crossing -> inner tier); adc sits in the
+        # other pod (pod-crossing -> outer tier), so both tiers carry traffic
+        eng = net.build(
+            engine='graph', mesh=mesh,
+            partition={{'cpu': 0, 'dram': 1, 'adc': 2}},
+            tiers=[(('pod',), 1), (('gx',), 1)])
+        assert {{c.tier for c in eng.classes}} == {{0, 1}}
+        st = eng.place(eng.init(jax.random.key(0)))
+        st = eng.run_epochs(st, cycles)
+        got = eng.group_state(st, cpu)
+        assert int(got.n_done) == soc.N_REQ
+        np.testing.assert_array_equal(
+            np.asarray(got.results), np.asarray(truth.results))
+        print('TIERED-CYCLE-ACCURATE-OK')
+    """).format(examples=EXAMPLES)
+    assert "TIERED-CYCLE-ACCURATE-OK" in _run_subprocess(code)
+
+
+def test_tiered_systolic_bit_exact_multidevice():
+    """Handshaked systolic dataflow under a *hierarchical block* partition:
+    pod splits rows, inner granules split columns (the wafer layout)."""
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from repro.core import tiered_grid_partition
+        from repro.core.compat import make_mesh
+        from repro.hw.systolic import (
+            collect_result, cycles_needed, make_systolic_network)
+
+        rng = np.random.RandomState(7)
+        M, K, N = 6, 4, 4
+        A = rng.randn(M, K).astype(np.float32)
+        B = rng.randn(K, N).astype(np.float32)
+        net, grid = make_systolic_network(A, B)
+        sim = net.build()
+        s1 = sim.init(jax.random.key(0))
+        s1 = sim.run(s1, cycles_needed(M, K, N))
+        Y1 = collect_result(sim, s1, grid)
+
+        mesh = make_mesh((2, 2), ('pod', 'gx'))
+        part = tiered_grid_partition(K, N, [(2, 1), (1, 2)])
+        for (ko, ki) in ((1, 1), (2, 4), (5, 2)):
+            net2, _ = make_systolic_network(A, B)
+            eng = net2.build(
+                engine='graph', mesh=mesh, partition=part,
+                tiers=[(('pod',), ko), (('gx',), ki)])
+            st = eng.place(eng.init(jax.random.key(0)))
+            st = eng.run_until(
+                st,
+                lambda s: ((~s.block_states[0].is_south)
+                           | (s.block_states[0].y_idx >= M)).all(),
+                100000, cache_key='done')
+            flat = eng.gather_group(st, 0)
+            Y2 = np.stack([flat.y_buf[(K - 1) * N + c] for c in range(N)], axis=1)
+            np.testing.assert_allclose(Y1, Y2, atol=0)
+        print('TIERED-SYSTOLIC-OK')
+    """)
+    assert "TIERED-SYSTOLIC-OK" in _run_subprocess(code)
+
+
+def test_wafer_scale_example_end_to_end():
+    """examples/wafer_scale.py (shrunk torus for CI) runs the full tiered
+    stack and proves the allreduce invariant across both tiers."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # the example forces its own device count
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, os.path.join(EXAMPLES, "wafer_scale.py"),
+         "--rows", "32", "--cols", "32"],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "converged to the global sum" in out.stdout
+    assert "OK — tiered exchange" in out.stdout
