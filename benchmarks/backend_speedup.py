@@ -2,9 +2,16 @@
 
 The paper put RTL on FPGAs for ~8,000x over RTL simulation.  Our analogue:
 the same systolic-cell network simulated by (a) an interpreted pure-Python
-cycle loop ("RTL simulator") and (b) the compiled vmapped engine ("FPGA"),
-with identical latency-insensitive semantics — results are bit-identical,
-only the backend changes.
+cycle loop ("RTL simulator"), (b) the compiled single-netlist engine,
+(c) the distributed GraphEngine and (d) the fused-epoch engine — identical
+latency-insensitive semantics, bit-identical results, only the backend
+changes.
+
+The compiled backend is ASSERTED to beat the interpreted one (PR 2's
+BENCH_PR2.json recorded it at 0x — root cause: the XLA:CPU thunk runtime's
+per-op dispatch overhead inside compiled loops, now disabled at
+``repro.core`` import by ``compat.tune_cpu_runtime``).  Wall times are
+min-of-N to shed scheduler noise.
 """
 import time
 
@@ -66,6 +73,17 @@ def python_reference_sim(A, B, cycles):
     return np.array([y[K - 1][c] for c in range(N)]).T
 
 
+def _best_of(fn, n: int = 3):
+    """(min wall time of fn() over n runs, last result); 1st call warms."""
+    fn()
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
 def bench(smoke: bool = False):
     rng = np.random.RandomState(0)
     M, K, N = (6, 4, 4) if smoke else (12, 8, 8)
@@ -74,47 +92,56 @@ def bench(smoke: bool = False):
     cycles = cycles_needed(M, K, N)
 
     # interpreted backend
-    t0 = time.perf_counter()
-    Y_py = python_reference_sim(A, B, cycles)
-    t_py = time.perf_counter() - t0
+    t_py, Y_py = _best_of(lambda: python_reference_sim(A, B, cycles), n=2)
     hz_py = cycles / t_py
 
     # All compiled backends hang off the unified build(engine=...) API —
-    # same Network description, different engine, identical results.
+    # same Network description, different engine, identical results.  The
+    # initial state is built once: only the compiled run is timed.
     net, grid = make_systolic_network(A, B)
     sim = net.build()  # engine="single"
-    state = sim.init(jax.random.key(0))
-    state = sim.run(state, cycles)  # warmup = build
-    state = sim.init(jax.random.key(0))
-    t0 = time.perf_counter()
-    state = jax.block_until_ready(sim.run(state, cycles))
-    t_jit = time.perf_counter() - t0
+    state0 = jax.block_until_ready(sim.init(jax.random.key(0)))
+    t_jit, end = _best_of(lambda: jax.block_until_ready(sim.run(state0, cycles)))
     hz_jit = cycles / t_jit
-    Y = collect_result(sim, state, grid)
+    Y = collect_result(sim, end, grid)
 
     from repro.core.compat import make_mesh
 
     k_epoch = 4
-    eng = net.build(engine="graph", mesh=make_mesh((1,), ("gx",)), K=k_epoch)
     n_epochs = -(-cycles // k_epoch)
-    gstate = eng.run_epochs(eng.init(jax.random.key(0)), n_epochs)  # warmup
-    gstate = eng.init(jax.random.key(0))
-    t0 = time.perf_counter()
-    gstate = jax.block_until_ready(eng.run_epochs(gstate, n_epochs))
-    t_graph = time.perf_counter() - t0
+    mesh = make_mesh((1,), ("gx",))
+
+    def run_engine(engine):
+        eng = net.build(engine=engine, mesh=mesh, K=k_epoch)
+        st0 = jax.block_until_ready(eng.init(jax.random.key(0)))
+        t, st = _best_of(lambda: jax.block_until_ready(
+            eng.run_epochs(st0, n_epochs, donate=False)))
+        flat = eng.gather_group(st, 0)
+        Y_e = np.stack([flat.y_buf[(K - 1) * N + c] for c in range(N)], axis=1)
+        return t, Y_e
+
+    t_graph, Y_g = run_engine("graph")
     hz_graph = cycles / t_graph
-    flat = eng.gather_group(gstate, 0)
-    Y_g = np.stack([flat.y_buf[(K - 1) * N + c] for c in range(N)], axis=1)
+    t_fused, Y_f = run_engine("fused")
+    hz_fused = cycles / t_fused
 
     np.testing.assert_allclose(Y, A @ B, rtol=1e-4)
     np.testing.assert_allclose(Y_py, A @ B, rtol=1e-4)
     np.testing.assert_allclose(Y_g, A @ B, rtol=1e-4)
+    np.testing.assert_allclose(Y_f, A @ B, rtol=1e-4)
     emit("backend_interpreted", t_py / cycles * 1e6, f"{hz_py:.0f} Hz sim clock")
     emit("backend_compiled", t_jit / cycles * 1e6,
          f"{hz_jit:.0f} Hz sim clock, {hz_jit/hz_py:.0f}x speedup "
          f"(paper Table I: 7300-8900x FPGA vs RTL)")
     emit("backend_graph_engine", t_graph / cycles * 1e6,
          f"{hz_graph:.0f} Hz sim clock via build(engine='graph'), K={k_epoch}")
+    emit("backend_fused_engine", t_fused / cycles * 1e6,
+         f"{hz_fused:.0f} Hz sim clock via build(engine='fused'), K={k_epoch}")
+    # ISSUE 3 regression gate: compiled must never lose to interpreted again
+    assert hz_jit >= hz_py, (
+        f"compiled single-netlist backend ({hz_jit:.0f} Hz) slower than the "
+        f"interpreted reference ({hz_py:.0f} Hz) — thunk-runtime regression?"
+    )
 
 
 if __name__ == "__main__":

@@ -4,31 +4,40 @@ Prints ``name,us_per_call,derived`` CSV rows (see DESIGN.md §6 for the
 paper-artifact mapping):
 
     queue_perf         §III-B  queue throughput / RTT
-    backend_speedup    Table I compiled vs interpreted backend
-    engine_speedup     §Perf   queue engine vs kernel-fused register engine
+    backend_speedup    Table I compiled vs interpreted backend (asserted
+                       compiled >= interpreted; all four engines)
+    engine_speedup     §Perf   queue engine vs kernel-fused engines
     task_latency       Table II high-level task duration
     timing_breakdown   Table IV build/setup/run split
     build_time         Fig. 13 monolithic vs modular build scaling
     sim_throughput     Fig. 14 throughput vs design size
     accuracy_vs_rate   Fig. 15 measurement error vs sync rate (K)
     wafer_scale        Fig. 14/15 tiered many-core torus: size + (K_inner,
-                       K_outer) schedule sweep vs the flat single-K engine
+                       K_outer) sweep + GraphEngine-vs-FusedEngine rows
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only name] [--smoke]
+Run: PYTHONPATH=src python -m benchmarks.run [--only name] [--smoke|--full]
                                              [--json PATH]
 
 --smoke shrinks every suite to a tiny cycle budget (CPU-friendly) so the
 whole harness doubles as a per-PR engine-regression gate (scripts/ci.sh);
 the numbers are meaningless in that mode, only pass/fail matters.
+--full additionally runs the non-smoke wafer engine-comparison tier (the
+ISSUE 3 perf-trajectory numbers: sim-clock Hz for every engine on the
+wafer scenario at equal (K_inner, K_outer)).
 
 Every run also writes a machine-readable summary (default
-``BENCH_PR2.json``): ``{"schema", "git_rev", "smoke", "argv", "failed",
-"suites": {suite: [{"name", "us_per_call", "derived"}, ...]}}`` — the same
-schema in smoke and full mode, so the perf trajectory can be tracked and
-diffed PR over PR.
+``BENCH_PR3.json``): ``{"schema", "git_rev", "smoke", "full", "argv",
+"failed", "baseline", "suites": {suite: [{"name", "us_per_call",
+"derived"}, ...]}}`` — the same schema in every mode, so the perf
+trajectory can be tracked and diffed PR over PR.  ``baseline`` embeds the
+PR 2 reference rows (git rev + the wafer/backend suites of
+``BENCH_PR2.json``) so speedups-vs-last-PR stay auditable even if the old
+file disappears.
 """
 import argparse
+import inspect
 import json
+import os
 import subprocess
 import sys
 import traceback
@@ -38,7 +47,10 @@ from . import (
     queue_perf, sim_throughput, task_latency, timing_breakdown, wafer_scale,
 )
 
-BENCH_JSON = "BENCH_PR2.json"
+BENCH_JSON = "BENCH_PR3.json"
+SMOKE_JSON = "BENCH_SMOKE.json"
+BASELINE_JSON = "BENCH_PR2.json"
+BASELINE_SUITES = ("wafer_scale", "backend_speedup", "engine_speedup")
 SCHEMA = "repro-bench-v1"
 
 SUITES = [
@@ -64,14 +76,50 @@ def _git_rev() -> str:
         return "unknown"
 
 
+def _baseline() -> dict:
+    """The PR 2 reference rows this PR's speedups are measured against.
+
+    ``BENCH_PR2.json`` is untracked (it predates the committed-trajectory
+    convention), so on a fresh clone the baseline is recovered from the
+    copy already embedded in the committed ``BENCH_PR3.json`` — the
+    embedded rows are the canonical record either way.
+    """
+    root = os.path.join(os.path.dirname(__file__), "..")
+    try:
+        with open(os.path.join(root, BASELINE_JSON)) as f:
+            pr2 = json.load(f)
+    except (OSError, ValueError):
+        try:
+            with open(os.path.join(root, BENCH_JSON)) as f:
+                return json.load(f)["baseline"]
+        except (OSError, ValueError, KeyError):
+            return {"ref": BASELINE_JSON, "missing": True}
+    return {
+        "ref": BASELINE_JSON,
+        "git_rev": pr2.get("git_rev", "unknown"),
+        "smoke": pr2.get("smoke"),
+        "suites": {
+            name: pr2.get("suites", {}).get(name, [])
+            for name in BASELINE_SUITES
+        },
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny cycle budgets; pass/fail only (CI)")
-    ap.add_argument("--json", default=BENCH_JSON, metavar="PATH",
-                    help=f"machine-readable summary (default {BENCH_JSON})")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--smoke", action="store_true",
+                      help="tiny cycle budgets; pass/fail only (CI)")
+    mode.add_argument("--full", action="store_true",
+                      help="non-smoke tier incl. the wafer engine comparison")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help=f"machine-readable summary (default {BENCH_JSON}; "
+                         f"--smoke defaults to {SMOKE_JSON} so a smoke run "
+                         f"can never clobber the committed trajectory)")
     args = ap.parse_args()
+    if args.json is None:
+        args.json = SMOKE_JSON if args.smoke else BENCH_JSON
     if args.only and args.only not in {n for n, _ in SUITES}:
         ap.error(f"unknown benchmark {args.only!r}; "
                  f"choose from {', '.join(n for n, _ in SUITES)}")
@@ -82,8 +130,11 @@ def main() -> None:
             continue
         print(f"# --- {name} ---", flush=True)
         common.begin_suite(name)
+        kw = {"smoke": args.smoke}
+        if "full" in inspect.signature(fn).parameters:
+            kw["full"] = args.full
         try:
-            fn(smoke=args.smoke)
+            fn(**kw)
         except Exception:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()
@@ -92,8 +143,10 @@ def main() -> None:
         "schema": SCHEMA,
         "git_rev": _git_rev(),
         "smoke": bool(args.smoke),
+        "full": bool(args.full),
         "argv": sys.argv[1:],
         "failed": failed,
+        "baseline": _baseline(),
         "suites": common.records(),
     }
     with open(args.json, "w") as f:

@@ -54,7 +54,8 @@ from repro.hw.manycore import (  # noqa: E402
 
 
 def build_engine(R: int, C: int, k_inner: int, k_outer: int,
-                 capacity: int = WAFER.queue_capacity) -> tuple[GraphEngine, np.ndarray]:
+                 capacity: int = WAFER.queue_capacity,
+                 engine: str = "graph") -> tuple[GraphEngine, np.ndarray]:
     """Torus fabric on a (2 pods) x (2x2 granules/pod) tiered mesh."""
     values = (np.arange(R * C, dtype=np.int64) % 97 + 1).astype(np.float32)
     cell = ManycoreCell(R, C)
@@ -64,7 +65,11 @@ def build_engine(R: int, C: int, k_inner: int, k_outer: int,
     )
     mesh = make_mesh((2, 2, 2), ("pod", "gr", "gc"))
     part = tiered_grid_partition(R, C, [(2, 1), (2, 2)])
-    eng = GraphEngine(
+    if engine == "fused":
+        from repro.core.fused import FusedEngine as Engine
+    else:
+        Engine = GraphEngine
+    eng = Engine(
         graph, part, mesh,
         tiers=[(("pod",), k_outer), ((("gr", "gc")), k_inner)],
     )
@@ -77,12 +82,16 @@ def main() -> None:
     ap.add_argument("--cols", type=int, default=WAFER.grid_cols)
     ap.add_argument("--k-inner", type=int, default=WAFER.k_inner)
     ap.add_argument("--k-outer", type=int, default=WAFER.k_outer)
+    ap.add_argument("--engine", choices=("graph", "fused"), default="graph",
+                    help="queue interpreter or the fused-epoch fast path "
+                         "(identical results; see DESIGN.md §Perf)")
     args = ap.parse_args()
     R, C = args.rows, args.cols
 
     print(f"wafer-scale fabric: {R}x{C} torus = {R * C} cores, "
-          f"{len(jax.devices())} devices")
-    eng, values = build_engine(R, C, args.k_inner, args.k_outer)
+          f"{len(jax.devices())} devices, engine={args.engine}")
+    eng, values = build_engine(R, C, args.k_inner, args.k_outer,
+                               engine=args.engine)
     periods = eng.periods
     print(f"  partition: {eng.ptree.summary()}")
     print(f"  exchange classes/tier: "

@@ -14,12 +14,18 @@ engine backend.
   graph       channel-graph IR + PartitionTree shared by every backend
               (DESIGN.md §1, §3)
   distributed epoch-batched shard_map GraphEngine (tiered per-tier sync
-              rates) + GridEngine preset
+              rates, batched per-tier exchange) + GridEngine preset
+  fused       fused-epoch fast path for ANY topology: depth-1 register
+              channels + one compiled K-cycle epoch body (§Perf)
   perfmodel   rate control + N_meas error model (§II-C)
-  fastgrid    kernel-fused register-channel engine (§Perf optimized backend)
+  fastgrid    hand-specialized systolic Pallas preset of the fused family
   pipeline    LM pipeline parallelism on the same channel semantics
   compat      version-tolerant jax.make_mesh / jax.shard_map wrappers
 """
+from .compat import tune_cpu_runtime as _tune_cpu_runtime
+
+_tune_cpu_runtime()  # before any backend init — see compat.tune_cpu_runtime
+
 from .block import Block
 from .network import Network, NetworkSim, NetworkState
 from .graph import (
@@ -27,7 +33,11 @@ from .graph import (
     normalize_tiers, tiered_grid_partition,
 )
 from .queue import QueueArray, make_queues, DEFAULT_CAPACITY
-from .distributed import GraphEngine, GraphState, GridEngine, edge_color_routes
+from .distributed import (
+    GraphEngine, GraphState, GridEngine, edge_color_routes,
+    merge_compatible_classes, route_shift_groups,
+)
 from .fastgrid import RegisterGridEngine
+from .fused import FusedEngine, FusedState
 from .pipeline import Pipeline
 from . import packet, perfmodel

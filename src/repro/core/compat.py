@@ -13,11 +13,38 @@ dropping/renaming keywords the installed JAX does not know about.
 from __future__ import annotations
 
 import inspect
+import os
 from typing import Any, Callable, Sequence
 
 import jax
 
-__all__ = ["make_mesh", "shard_map"]
+__all__ = ["make_mesh", "shard_map", "tune_cpu_runtime"]
+
+
+def tune_cpu_runtime() -> None:
+    """Disable the XLA:CPU *thunk* runtime for this process (perf, §Perf).
+
+    The thunk runtime this jaxlib ships pays a per-op dispatch cost inside
+    compiled while-loops that dwarfs the actual work of cycle-stepped
+    simulation (tiny tensors, many ops per cycle): the single-netlist
+    engine ran ~4x slower than with the legacy emitter — the
+    "compiled backend at 0x speedup" regression in BENCH_PR2.json.
+    Measured on ``benchmarks.backend_speedup``: 30.2 -> 7.5 us/cycle.
+
+    Must run before the CPU backend initializes — XLA reads the flags at
+    client creation, so if user code ran a jax computation before
+    importing ``repro.core`` the mutation is set but has NO effect for
+    that process (import ``repro.core`` first, or export the flag in the
+    environment).  Called at ``repro.core`` import; a no-op if the user
+    already pinned the flag in ``XLA_FLAGS`` (either value).  TPU/GPU
+    lowering ignores the flag entirely.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_cpu_use_thunk_runtime" in flags:
+        return
+    os.environ["XLA_FLAGS"] = (
+        flags + " --xla_cpu_use_thunk_runtime=false"
+    ).strip()
 
 
 def _supports_kwarg(fn: Callable, name: str) -> bool:

@@ -46,10 +46,27 @@ on at most one route and receives on at most one route per class).  One
 König construction (regularize to a Δ-regular bipartite multigraph, peel
 off Δ perfect matchings), so the class count *equals* the maximum granule
 in/out-degree of the tier — property-tested in ``tests/test_tiered.py``.
-A nearest-neighbor grid needs exactly two classes (east, south) — the
+``merge_compatible_classes`` then guards the invariant that the class
+count never exceeds the number of distinct granule shifts of the tier (a
+fixed coordinate delta is injective, hence one ``ppermute``) — a no-op on
+König's optimal output, load-bearing for any other decomposition fed
+through the table builder.  A
+nearest-neighbor grid needs exactly two classes (east, south) — the
 historical ``GridEngine`` schedule falls out as a special case, and
 ``GridEngine`` below is now just a partition-map preset over
 ``GraphEngine``.
+
+**Batched tier exchange** (§Perf): a tier's classes are concatenated into
+one ``(slots, E_t, W)`` slab table at build time, so an exchange is ONE
+bulk ``drain`` of every egress queue in the tier, one ``ppermute`` per
+remaining class (= per distinct shift), and ONE bulk ``fill`` of every
+ingress queue — instead of a drain/permute/fill/credit chain per class.
+Credits are carried per tier over the same concatenated slot axis.  Since
+every egress/ingress queue belongs to exactly one channel of exactly one
+class, the batched schedule is bit-identical to the per-class chain.
+``run_epochs``/``run_until`` donate the engine state into the compiled
+loop (``jax.jit(..., donate_argnums=0)``), so an epoch updates the wafer
+state in place instead of copying it through HBM.
 
 Credit protocol (DESIGN.md §3): the receiver of a boundary channel
 advertises ``free(ingress)`` after each fill; the sender drains at most
@@ -83,16 +100,19 @@ class GraphTables:
     """Per-granule lookup tables (device-varying, constant over time).
 
     All leaves carry the leading device dims; index values are *local*
-    queue ids (0 = NULL_RX sentinel, 1 = NULL_TX sentinel).
+    queue ids (0 = NULL_RX sentinel, 1 = NULL_TX sentinel).  The exchange
+    tables are concatenated per *tier* (batched exchange): slot ``j`` of
+    tier ``t`` belongs to the class whose ``[col0, col0+cmax)`` column
+    window contains ``j``.
     """
 
     rx_idx: tuple  # per group: (dev..., n_slot, n_in) int32
     tx_idx: tuple  # per group: (dev..., n_slot, n_out) int32
     active: tuple  # per group: (dev..., n_slot) bool — padding slots False
-    send_idx: tuple  # per class: (dev..., Cmax) int32 local egress queue ids
-    send_mask: tuple  # per class: (dev..., Cmax) bool
-    recv_idx: tuple  # per class: (dev..., Cmax) int32 local ingress queue ids
-    recv_mask: tuple  # per class: (dev..., Cmax) bool
+    send_idx: tuple  # per tier: (dev..., S_t) int32 local egress queue ids
+    send_mask: tuple  # per tier: (dev..., S_t) bool
+    recv_idx: tuple  # per tier: (dev..., S_t) int32 local ingress queue ids
+    recv_mask: tuple  # per tier: (dev..., S_t) bool
 
 
 @pytree_dataclass
@@ -101,7 +121,7 @@ class GraphState:
 
     queues: qmod.QueueArray  # (dev..., n_local, ...) granule-local queues
     block_states: tuple  # per group: leaves (dev..., n_slot, ...)
-    credits: tuple  # per class: (dev..., Cmax) int32 send credits
+    credits: tuple  # per tier: (dev..., S_t) int32 send credits
     cycle: jax.Array  # (dev...,) int32 local cycle counters
     epoch: jax.Array  # (dev...,) int32
     tables: GraphTables
@@ -115,6 +135,36 @@ class _ExchangeClass:
     cmax: int = static_field(default=0)  # max channels on any route
     tier: int = static_field(default=0)  # which tier's exchange runs this class
     depth: int = static_field(default=1)  # slab depth E = min(period, cap-1)
+    col0: int = static_field(default=0)  # column offset in the tier slab
+
+
+def _dealias_for_donation(tree: PyTree) -> PyTree:
+    """Copy pytree leaves that share a device buffer with an earlier leaf.
+
+    XLA refuses to donate the same buffer twice, and block ``init_state``
+    implementations legitimately reuse one array for several state fields
+    (e.g. ``CoreState(value=v, own=v, acc=v)``).  Donating entry points
+    route their input through this first; leaves already distinct (the
+    steady state, since compiled-loop *outputs* never alias) pass through
+    untouched.
+    """
+    seen: set[int] = set()
+
+    def fix(x):
+        if isinstance(x, jax.Array):
+            try:
+                key = x.unsafe_buffer_pointer()
+            except Exception:  # sharded: key on the first local shard
+                try:
+                    key = x.addressable_shards[0].data.unsafe_buffer_pointer()
+                except Exception:
+                    key = id(x)
+            if key in seen:
+                return jnp.copy(x)
+            seen.add(key)
+        return x
+
+    return jax.tree.map(fix, tree)
 
 
 def _sq(tree: PyTree, nd: int) -> PyTree:
@@ -220,6 +270,65 @@ def edge_color_routes(
             classes.append(cls)
     assert real.sum() == 0, "edge coloring failed to cover every route"
     return classes
+
+
+def merge_compatible_classes(
+    classes: Sequence[Sequence[tuple[int, int]]]
+) -> list[list[tuple[int, int]]]:
+    """Merge exchange classes that compose into one granule permutation.
+
+    Two classes are *compatible* when no granule sends in both and no
+    granule receives in both — their union is then still a partial
+    permutation, i.e. one ``ppermute``.  Identical (duplicate) classes are
+    collapsed outright: exchanging the same permutation twice per sync is
+    never needed, the slab depth already covers the traffic.  Greedy,
+    deterministic, order-preserving.
+
+    NOTE: on the König coloring the engine uses this is a *guard*, not an
+    optimization — König already emits the optimal Δ classes, and the
+    granule realizing Δ appears in every one of them, so nothing merges.
+    It exists so ANY class decomposition fed through the table builder
+    (hand-written schedules, future colorings) keeps the invariant that
+    the class count never exceeds the distinct granule shifts
+    (``route_shift_groups``) — asserted at build time.
+    """
+    merged: list[dict[int, int]] = []  # src -> dst maps
+    for cls in classes:
+        cmap = dict(cls)
+        for m in merged:
+            if m == cmap:  # duplicate permutation: plain dedup
+                break
+            if not (m.keys() & cmap.keys()) and not (
+                set(m.values()) & set(cmap.values())
+            ):
+                m.update(cmap)
+                break
+        else:
+            merged.append(cmap)
+    return [sorted(m.items()) for m in merged]
+
+
+def route_shift_groups(
+    pairs: Sequence[tuple[int, int]], dev_shape: Sequence[int]
+) -> dict[tuple[int, ...], list[tuple[int, int]]]:
+    """Group directed granule routes by their coordinate *shift*.
+
+    The shift of a route is the plain per-axis difference of the granule
+    coordinates (no modular wrap), so a 2-D torus tiling has exactly four:
+    east, east-wrap, south, south-wrap.  A fixed shift is injective, hence
+    every group is automatically a partial permutation — one ``ppermute``.
+    The distinct-shift count therefore upper-bounds the class count any
+    decomposition needs, and lower-bounds nothing: König (max in/out
+    degree) is always <= it, which ``GraphEngine`` asserts at build time.
+    """
+    dev_shape = tuple(int(s) for s in dev_shape)
+    groups: dict[tuple[int, ...], list[tuple[int, int]]] = {}
+    for s, d in pairs:
+        sc = np.unravel_index(int(s), dev_shape)
+        dc = np.unravel_index(int(d), dev_shape)
+        shift = tuple(int(b) - int(a) for a, b in zip(sc, dc))
+        groups.setdefault(shift, []).append((int(s), int(d)))
+    return groups
 
 
 class GraphEngine:
@@ -350,6 +459,9 @@ class GraphEngine:
         tx_local[NTX], rx_local[NRX] = NTX, NRX
         self._tx_local, self._rx_local = tx_local, rx_local
         self._chan_owner = owner
+        # entity table (granule, channel, kind 0=local 1=egress 2=ingress,
+        # local queue id) — FusedEngine re-lowers it onto registers + queues
+        self._ent = (ent_g.astype(np.int64), ent_c, ent_kind, lid)
 
         # Per-group member placement + local port tables (padded to n_slot).
         rx_t, tx_t, act_t = [], [], []
@@ -386,33 +498,60 @@ class GraphEngine:
             key = (int(chan_tier[c]), int(src_g[c]), int(dst_g[c]))
             routes.setdefault(key, []).append(int(c))
 
+        # Per tier: König classes, then compatible-permutation merging, then
+        # concatenation into ONE (G, S_t) slab table — the batched exchange.
         self.classes: list[_ExchangeClass] = []
+        self.tier_classes: list[list[_ExchangeClass]] = []
         send_i, send_m, recv_i, recv_m = [], [], [], []
         for t in range(len(self.tiers)):
             pairs = sorted((s, d) for tt, s, d in routes if tt == t)
-            for color in edge_color_routes(pairs, G):
-                cmax = max(len(routes[(t, s, d)]) for s, d in color)
-                si = np.zeros((G, cmax), np.int64)
-                sm = np.zeros((G, cmax), bool)
-                ri = np.zeros((G, cmax), np.int64)
-                rm = np.zeros((G, cmax), bool)
+            colors = merge_compatible_classes(edge_color_routes(pairs, G))
+            if pairs:
+                # a fixed shift is one permutation, so no decomposition ever
+                # needs more classes than distinct shifts (König: fewer)
+                n_shifts = len(route_shift_groups(pairs, self.dev_shape))
+                assert len(colors) <= n_shifts, (len(colors), n_shifts)
+            cmaxes = [
+                max(len(routes[(t, s, d)]) for s, d in color) for color in colors
+            ]
+            S_t = sum(cmaxes)
+            si = np.zeros((G, S_t), np.int64)
+            sm = np.zeros((G, S_t), bool)
+            ri = np.zeros((G, S_t), np.int64)
+            rm = np.zeros((G, S_t), bool)
+            cls_t: list[_ExchangeClass] = []
+            col0 = 0
+            for color, cmax in zip(colors, cmaxes):
                 for s, d in color:
                     chans = routes[(t, s, d)]
                     k = len(chans)
-                    si[s, :k] = tx_local[chans]
-                    sm[s, :k] = True
-                    ri[d, :k] = rx_local[chans]
-                    rm[d, :k] = True
-                self.classes.append(_ExchangeClass(
+                    si[s, col0:col0 + k] = tx_local[chans]
+                    sm[s, col0:col0 + k] = True
+                    ri[d, col0:col0 + k] = rx_local[chans]
+                    rm[d, col0:col0 + k] = True
+                cls = _ExchangeClass(
                     perm=tuple(color), cmax=cmax, tier=t,
-                    depth=self.E_tiers[t],
-                ))
-                send_i.append(si.astype(np.int32))
-                send_m.append(sm)
-                recv_i.append(ri.astype(np.int32))
-                recv_m.append(rm)
+                    depth=self.E_tiers[t], col0=col0,
+                )
+                cls_t.append(cls)
+                self.classes.append(cls)
+                col0 += cmax
+            self.tier_classes.append(cls_t)
+            send_i.append(si.astype(np.int32))
+            send_m.append(sm)
+            recv_i.append(ri.astype(np.int32))
+            recv_m.append(rm)
         self._send_idx, self._send_mask = send_i, send_m
         self._recv_idx, self._recv_mask = recv_i, recv_m
+
+        # Trailing tiers with NO exchange classes never synchronize, so
+        # their loop nesting is pure overhead: tiers >= _fold_from run as
+        # one contiguous inner-cycle block of prod(K_t..K_inner) cycles.
+        # (A single-granule engine folds the whole epoch into one loop.)
+        f = len(self.tiers)
+        while f > 0 and not self.tier_classes[f - 1]:
+            f -= 1
+        self._fold_from = f
 
     def _dev(self, arr: np.ndarray) -> jax.Array:
         """(G, ...) host table -> (dev_shape..., ...) device array."""
@@ -430,11 +569,11 @@ class GraphEngine:
         )
 
     # ------------------------------------------------------------------ init
-    def init(self, key: jax.Array, group_params: dict[int, PyTree] | None = None) -> GraphState:
-        """Initial state.  ``group_params[gi]`` overrides the IR's stacked
-        per-member params for group ``gi`` (leading dim = n_members, in
-        global instantiation order — the same order ``NetworkSim`` uses, so
-        per-member init is bit-identical across engines)."""
+    def _init_block_states(
+        self, key: jax.Array, group_params: dict[int, PyTree] | None
+    ) -> list[PyTree]:
+        """Per-group stacked block states in granule layout (shared by
+        ``FusedEngine.init`` so per-member init stays engine-invariant)."""
         states = []
         for gi, grp in enumerate(self.graph.groups):
             blk = grp.block
@@ -456,15 +595,22 @@ class GraphEngine:
             else:
                 st = init(keys_l)
             states.append(st)
+        return states
 
+    def init(self, key: jax.Array, group_params: dict[int, PyTree] | None = None) -> GraphState:
+        """Initial state.  ``group_params[gi]`` overrides the IR's stacked
+        per-member params for group ``gi`` (leading dim = n_members, in
+        global instantiation order — the same order ``NetworkSim`` uses, so
+        per-member init is bit-identical across engines)."""
+        states = self._init_block_states(key, group_params)
         q = qmod.make_queues(self.n_local, self.W, self.capacity, self.dtype)
         queues = jax.tree.map(
             lambda x: jnp.broadcast_to(x, self.dev_shape + x.shape), q
         )
         cap1 = self.capacity - 1
         credits = tuple(
-            jnp.full(self.dev_shape + (cl.cmax,), cap1, jnp.int32)
-            for cl in self.classes
+            jnp.full(self.dev_shape + (si.shape[1],), cap1, jnp.int32)
+            for si in self._send_idx
         )
         return GraphState(
             queues=queues,
@@ -544,50 +690,71 @@ class GraphEngine:
         return jax.lax.ppermute(x, self.axes, list(perm))
 
     def _exchange_tier(self, st: GraphState, t: int) -> GraphState:
-        """Run tier t's exchange classes (runs inside shard_map).
+        """Run tier t's batched exchange (runs inside shard_map).
 
-        Drains each class's egress queues into a packet slab (bounded by the
-        receiver's advertised credit), moves the slab with one ``ppermute``
-        per class, fills the ingress queues, and returns fresh credits to
-        the sender on the reverse permutation.  Classes of other tiers —
-        and their credit windows — are untouched.
+        ONE bulk ``drain`` empties every egress queue of the tier into the
+        concatenated ``(S_t, E_t, W)`` slab (each slot bounded by the
+        receiver's advertised credit), one ``ppermute`` per class moves
+        that class's column window, ONE bulk ``fill`` lands everything in
+        the ingress queues, and fresh credits return to the senders on the
+        reverse permutations.  Egress/ingress queues are disjoint across
+        classes, so this is bit-identical to the historical per-class
+        drain/permute/fill chain — with ~1/#classes of the gather/scatter
+        traffic.  Other tiers' queues and credit windows are untouched.
         """
+        cls_t = self.tier_classes[t]
+        if not cls_t:
+            return st
         q = st.queues
         tb = st.tables
+        sidx, smask = tb.send_idx[t], tb.send_mask[t]
+        ridx, rmask = tb.recv_idx[t], tb.recv_mask[t]
+        # drain all egress queues of the tier, bounded by receiver credit
+        sub = qmod.QueueArray(
+            buf=q.buf[sidx], head=q.head[sidx], tail=q.tail[sidx],
+            capacity=q.capacity,
+        )
+        limit = jnp.where(smask, st.credits[t], 0)
+        sub2, slab, cnt = qmod.drain(sub, self.E_tiers[t], limit=limit)
+        q = q.replace(tail=q.tail.at[sidx].set(sub2.tail))
+        # one hop per class (each a partial permutation of granules)
+        def per_class(x, rev: bool = False):
+            parts = []
+            for cl in cls_t:
+                perm = tuple((d, s) for s, d in cl.perm) if rev else cl.perm
+                parts.append(self._pshift(x[cl.col0:cl.col0 + cl.cmax], perm))
+            return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+
+        slab_in = per_class(slab)
+        cnt_in = jnp.where(rmask, per_class(cnt), 0)
+        q = qmod_fill_at(q, ridx, slab_in, cnt_in)
+        # receivers advertise new free space; returns to the senders on the
+        # reverse permutations
+        cred = jnp.where(rmask, jnp.take(qmod.free(q), ridx), 0)
         new_credits = list(st.credits)
-        for r, cl in enumerate(self.classes):
-            if cl.tier != t:
-                continue
-            sidx, smask = tb.send_idx[r], tb.send_mask[r]
-            ridx, rmask = tb.recv_idx[r], tb.recv_mask[r]
-            # drain egress queues (rows sidx), bounded by receiver credit
-            sub = qmod.QueueArray(
-                buf=q.buf[sidx], head=q.head[sidx], tail=q.tail[sidx],
-                capacity=q.capacity,
-            )
-            limit = jnp.where(smask, st.credits[r], 0)
-            sub2, slab, cnt = qmod.drain(sub, cl.depth, limit=limit)
-            q = q.replace(tail=q.tail.at[sidx].set(sub2.tail))
-            # one hop for the whole class (a partial permutation of granules)
-            slab_in = self._pshift(slab, cl.perm)
-            cnt_in = jnp.where(rmask, self._pshift(cnt, cl.perm), 0)
-            q = qmod_fill_at(q, ridx, slab_in, cnt_in)
-            # receiver advertises new free space; returns to the sender on
-            # the reverse permutation
-            cred = jnp.where(rmask, jnp.take(qmod.free(q), ridx), 0)
-            rev = tuple((d, s) for s, d in cl.perm)
-            new_credits[r] = self._pshift(cred, rev)
+        new_credits[t] = per_class(cred, rev=True)
         return st.replace(queues=q, credits=tuple(new_credits))
+
+    def _inner_cycles(self, st: GraphState, K: int) -> GraphState:
+        """K granule-local cycles — the innermost hot loop.  ``FusedEngine``
+        overrides this with the fused-epoch kernel."""
+        return jax.lax.scan(
+            lambda s, _: (self._local_cycle(s), None), st, None, length=K
+        )[0]
 
     def _tier_round(self, st: GraphState, t: int) -> GraphState:
         """One round of tier t: K_t sub-rounds (granule-local cycles at the
         innermost tier, tier-(t+1) rounds otherwise), then tier t's
-        exchange — so tier t synchronizes every ``periods[t]`` cycles."""
+        exchange — so tier t synchronizes every ``periods[t]`` cycles.
+        Exchange-free trailing tiers are folded into one contiguous
+        inner-cycle block (no loop nesting, no no-op exchanges)."""
+        if t >= self._fold_from:
+            return self._inner_cycles(st, int(np.prod(self.K_tiers[t:])))
         if t == len(self.tiers) - 1:
-            body = lambda s, _: (self._local_cycle(s), None)  # noqa: E731
+            st = self._inner_cycles(st, self.tiers[t].K)
         else:
             body = lambda s, _: (self._tier_round(s, t + 1), None)  # noqa: E731
-        st = jax.lax.scan(body, st, None, length=self.tiers[t].K)[0]
+            st = jax.lax.scan(body, st, None, length=self.tiers[t].K)[0]
         return self._exchange_tier(st, t)
 
     def _epoch(self, st: GraphState) -> GraphState:
@@ -607,8 +774,18 @@ class GraphEngine:
             run, mesh=self.mesh, in_specs=self._spec, out_specs=self._spec
         )
 
-    def run_epochs(self, state: GraphState, n_epochs: int) -> GraphState:
-        key = ("run", n_epochs)
+    def run_epochs(
+        self, state: GraphState, n_epochs: int, *, donate: bool = True
+    ) -> GraphState:
+        """Advance ``n_epochs`` outermost epochs.
+
+        ``donate=True`` (default) donates the state buffers into the
+        compiled loop (``jax.jit(..., donate_argnums=0)``): the wafer state
+        is updated in place instead of being copied through HBM on every
+        call, and the *input* state must not be reused afterwards.  Pass
+        ``donate=False`` to keep the input alive.
+        """
+        key = ("run", n_epochs, donate)
         if key not in self._jit_cache:
 
             def run(state):
@@ -619,8 +796,11 @@ class GraphEngine:
                 return _unsq(out, self.nd)
 
             self._jit_cache[key] = jax.jit(
-                shard_map(run, mesh=self.mesh, in_specs=self._spec, out_specs=self._spec)
+                shard_map(run, mesh=self.mesh, in_specs=self._spec, out_specs=self._spec),
+                donate_argnums=(0,) if donate else (),
             )
+        if donate:
+            state = _dealias_for_donation(state)
         return self._jit_cache[key](state)
 
     def run_cycles(self, state: GraphState, n_cycles: int) -> GraphState:
@@ -645,6 +825,7 @@ class GraphEngine:
         max_epochs: int,
         *,
         cache_key: Any = None,
+        donate: bool = True,
     ) -> GraphState:
         """Run epochs until ``done_fn(self._done_view(local))`` holds on
         every granule.
@@ -659,9 +840,13 @@ class GraphEngine:
         so a garbage-collected function's recycled id can never alias a
         stale compilation; pass ``cache_key`` when the predicate is a fresh
         lambda per call but semantically constant.
+
+        ``donate=True`` (default) donates the state buffers into the
+        compiled loop — see ``run_epochs``; the input state must not be
+        reused afterwards.
         """
         anchor = cache_key if cache_key is not None else done_fn
-        key = ("until", id(anchor), max_epochs)
+        key = ("until", id(anchor), max_epochs, donate)
         if key not in self._jit_cache:
 
             def run(state):
@@ -688,9 +873,12 @@ class GraphEngine:
             self._jit_cache[key] = (
                 anchor,  # strong ref: keeps the keyed id alive
                 jax.jit(
-                    shard_map(run, mesh=self.mesh, in_specs=self._spec, out_specs=self._spec)
+                    shard_map(run, mesh=self.mesh, in_specs=self._spec, out_specs=self._spec),
+                    donate_argnums=(0,) if donate else (),
                 ),
             )
+        if donate:
+            state = _dealias_for_donation(state)
         return self._jit_cache[key][1](state)
 
     # ------------------------------------------------------- host utilities

@@ -1,4 +1,14 @@
-"""Register-channel grid engine — the kernel-fused fast backend (§Perf).
+"""Register-channel grid engine — the hand-specialized systolic preset of
+the fused-backend family (§Perf).
+
+The general fused fast path is ``core.fused.FusedEngine``: it lowers ANY
+partitioned channel graph to depth-1 register channels + a fused K-cycle
+epoch, and subsumes this engine — on XLA:CPU it now measures *faster*
+than this preset (BENCH_PR3 ``engine_speedup``).  What this preset keeps
+is the hand-written Pallas kernel that fuses the MAC *block semantics*
+(not just the channel plumbing) for TPU.  Use ``engine="fused"`` for
+arbitrary topologies; ``engine="register"`` remains the systolic-grid
+Pallas-kernel reference.
 
 The queue engine (``distributed.GridEngine``) is paper-faithful: 62-slot
 SPSC queues updated cycle by cycle with ~10 XLA ops per cycle.  This engine
@@ -276,8 +286,15 @@ class RegisterGridEngine:
         return shard_map(run, mesh=self.mesh, in_specs=self._spec,
                          out_specs=self._spec, check_vma=False)
 
-    def run_until_done(self, state: RegGridState, max_epochs: int) -> RegGridState:
-        key = ("until", max_epochs)
+    def run_until_done(
+        self, state: RegGridState, max_epochs: int, *, donate: bool = True
+    ) -> RegGridState:
+        """Run epochs until every south cell collected all M outputs.
+
+        ``donate=True`` (default) donates the state into the compiled loop
+        (no per-call state copy); the input must not be reused after.
+        """
+        key = ("until", max_epochs, donate)
         if key not in self._cache:
             M = self.M
 
@@ -303,8 +320,13 @@ class RegisterGridEngine:
 
             self._cache[key] = jax.jit(
                 shard_map(run, mesh=self.mesh, in_specs=self._spec,
-                          out_specs=self._spec, check_vma=False)
+                          out_specs=self._spec, check_vma=False),
+                donate_argnums=(0,) if donate else (),
             )
+        if donate:
+            from .distributed import _dealias_for_donation
+
+            state = _dealias_for_donation(state)
         return self._cache[key](state)
 
     def result(self, state: RegGridState) -> np.ndarray:

@@ -1,0 +1,432 @@
+"""Fused-epoch engine — the kernel-fused fast path for ANY channel graph
+(§Perf; the generalization of ``fastgrid`` promised by DESIGN.md).
+
+``GraphEngine`` interprets a granule cycle over deep SPSC queues: every
+cycle peeks, steps, pushes and pops a ``(n_local, capacity, W)`` buffer —
+~10 XLA ops of full-buffer traffic per simulated cycle.  This engine
+lowers the same partitioned ``ChannelGraph`` to a *fused* per-granule
+epoch instead:
+
+  * **intra-granule channels are depth-1 elastic registers** — a
+    (value, valid) pair per channel, the same legal latency-insensitive
+    refinement ``fastgrid`` uses.  The per-cycle state shrinks from
+    ``(n_local, capacity, W)`` to ``(n_reg, W)`` — 8-62x less data
+    touched per cycle — and the ring arithmetic disappears;
+  * **boundary + external channels stay real queues** (a small
+    ``(n_q, capacity, W)`` array, typically ~10% of channels for a good
+    partition), so the batched tier exchange, slab depths and credit
+    protocol are *bit-identical* to ``GraphEngine`` — the two engines
+    interoperate with the same sync schedule and the same partition tree;
+  * the whole ``K_inner``-cycle tier-inner epoch executes as ONE fused
+    body (``kernels.granule_step.epoch_loop``): fully unrolled straight-
+    line XLA for small K, a ``fori_loop`` for large K, or one Pallas
+    kernel with the granule state resident in VMEM on TPU.
+
+Correctness contract (property-tested in ``tests/test_fused.py``):
+
+  * handshaked results are **bit-exact** vs ``GraphEngine``/``NetworkSim``
+    for any topology, any hierarchical partition and any per-tier rates —
+    channel depth is latency the handshakes tolerate by construction;
+  * with ``capacity=2`` the depth-1 registers are *cycle-identical* to the
+    SPSC queues (a capacity-2 ring holds exactly one packet with the same
+    pre-cycle snapshot semantics), so at K=(1,1) the fused engine is
+    additionally cycle-accurate vs the single netlist;
+  * the network must be deadlock-free at channel depth 1 (true for every
+    latency-insensitive design shipped here; a design that *requires*
+    deeper elastic buffering should run on ``GraphEngine``).
+
+Select it with ``Network.build(engine="fused", ...)``; ``FusedEngine.grid``
+is the uniform-grid preset (the ``GridEngine`` analogue).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from . import queue as qmod
+from .block import Block
+from .distributed import GraphEngine, _rank_within
+from .graph import ChannelGraph, grid_partition
+from .struct import pytree_dataclass
+from ..kernels import granule_step
+
+PyTree = Any
+
+
+@pytree_dataclass
+class FusedTables:
+    """Fused-engine lookup tables (device-varying, constant over time).
+
+    Extends the ``GraphTables`` port/exchange tables with the *inverse*
+    port maps: because channels are SPSC, every combined channel id has at
+    most one local producer and one local consumer, so the per-cycle
+    drive/commit step is three static **gathers** (producer payload,
+    producer valid, consumer ready) instead of scatters — the XLA-CPU/TPU
+    friendly formulation.
+    """
+
+    rx_idx: tuple  # per group: (dev..., n_slot, n_in) int32 combined ids
+    tx_idx: tuple  # per group: (dev..., n_slot, n_out) int32 combined ids
+    active: tuple  # per group: (dev..., n_slot) bool
+    send_idx: tuple  # per tier: (dev..., S_t) int32 queue rows
+    send_mask: tuple  # per tier: (dev..., S_t) bool
+    recv_idx: tuple  # per tier: (dev..., S_t) int32 queue rows
+    recv_mask: tuple  # per tier: (dev..., S_t) bool
+    inv_tx: jax.Array  # (dev..., n_reg + n_q) int32 flat producer index
+    inv_tx_mask: jax.Array  # (dev..., n_reg + n_q) bool
+    inv_rx: jax.Array  # (dev..., n_reg + n_q) int32 flat consumer index
+    inv_rx_mask: jax.Array  # (dev..., n_reg + n_q) bool
+
+
+@pytree_dataclass
+class FusedState:
+    """All leaves carry leading device dims, sharded over the granule axes.
+
+    ``reg_val``/``reg_v`` are the depth-1 intra-granule channel registers
+    (ids 0/1 are the NULL_RX / NULL_TX sentinels: ``reg_v`` is pinned
+    False there, so 0 never reads valid and 1 always looks free).
+    ``queues`` holds only boundary egress/ingress + external channels.
+    """
+
+    reg_val: jax.Array  # (dev..., n_reg, W)
+    reg_v: jax.Array  # (dev..., n_reg) bool
+    queues: qmod.QueueArray  # (dev..., n_q, capacity, W)
+    block_states: tuple  # per group: leaves (dev..., n_slot, ...)
+    credits: tuple  # per tier: (dev..., S_t) int32 send credits
+    cycle: jax.Array  # (dev...,) int32
+    epoch: jax.Array  # (dev...,) int32
+    tables: FusedTables
+
+
+class FusedEngine(GraphEngine):
+    """Fused-epoch distributed engine over an arbitrary partitioned graph.
+
+    Accepts everything ``GraphEngine`` accepts, plus:
+
+    fuse:    epoch-body strategy — "auto" (one Pallas kernel on TPU, one
+             ``fori_loop`` body elsewhere), or explicitly "xla" |
+             "unroll" | "pallas" (see ``kernels.granule_step``).
+    pallas_interpret: run the Pallas path in interpret mode (CPU CI).
+    """
+
+    def __init__(
+        self,
+        graph: ChannelGraph,
+        partition,
+        mesh: Mesh,
+        K: int = 1,
+        axes: Sequence[str] | None = None,
+        tiers: Sequence | None = None,
+        *,
+        fuse: str = "auto",
+        pallas_interpret: bool = False,
+    ):
+        self.fuse = fuse
+        self.pallas_interpret = bool(pallas_interpret)
+        super().__init__(graph, partition, mesh, K=K, axes=axes, tiers=tiers)
+        self._build_fused_tables()
+
+    # ---------------------------------------------------- uniform-grid preset
+    @classmethod
+    def grid(
+        cls,
+        cell: Block,
+        R: int,
+        C: int,
+        mesh: Mesh,
+        K: int,
+        payload_words: int = 2,
+        capacity: int = qmod.DEFAULT_CAPACITY,
+        dtype: Any = jnp.float32,
+        axis_r: str = "gr",
+        axis_c: str = "gc",
+        **kw,
+    ) -> "FusedEngine":
+        """Uniform R×C grid preset — the fused ``GridEngine`` analogue."""
+        Dr, Dc = mesh.shape[axis_r], mesh.shape[axis_c]
+        graph = ChannelGraph.grid(
+            cell, R, C, payload_words=payload_words, dtype=dtype,
+            capacity=capacity,
+        )
+        return cls(
+            graph, grid_partition(R, C, Dr, Dc), mesh, K=K,
+            axes=(axis_r, axis_c), **kw,
+        )
+
+    # ------------------------------------------------- host-side compilation
+    def _build_fused_tables(self) -> None:
+        """Re-lower the granule-local queue id space onto registers + queues.
+
+        Every (granule, local queue) entity becomes either a depth-1
+        register (intra-granule channels) or a row of the small boundary
+        queue array (egress/ingress/external).  Combined addressing keeps
+        one flat id space for the port tables: ids ``[0, n_reg)`` are
+        registers (0/1 the sentinels), ``[n_reg, n_reg + n_q)`` queues.
+        """
+        G = self.G
+        g = self.graph
+        ent_g, ent_c, ent_kind, lid = self._ent
+        # external channels (host-facing) need real multi-packet queues
+        ext = (g.chan_src[ent_c] < 0) | (g.chan_dst[ent_c] < 0)
+        is_reg = (ent_kind == 0) & ~ext
+
+        reg_rank, reg_counts = _rank_within(ent_g[is_reg], G)
+        q_rank, q_counts = _rank_within(ent_g[~is_reg], G)
+        self.n_reg = int(2 + (reg_counts.max() if reg_counts.size else 0))
+        # queue row 0 is a scratch sentinel: exchange-table *padding* points
+        # there, so masked slots can never scatter stale head/tail/buf
+        # copies over a real channel's row (rows are written back whole)
+        self.n_q = int(1 + (q_counts.max() if q_counts.size else 0))
+
+        lid2comb = np.zeros((G, self.n_local), np.int64)
+        lid2comb[:, 1] = 1
+        lid2comb[ent_g[is_reg], lid[is_reg]] = 2 + reg_rank
+        lid2comb[ent_g[~is_reg], lid[~is_reg]] = self.n_reg + 1 + q_rank
+        self._lid2comb = lid2comb
+
+        gi = np.arange(G)[:, None, None]
+        self._rx_tables_f = [
+            lid2comb[gi, rxm].astype(np.int32) for rxm in self._rx_tables
+        ]
+        self._tx_tables_f = [
+            lid2comb[gi, txm].astype(np.int32) for txm in self._tx_tables
+        ]
+
+        # exchange tables move from local-queue-id space to queue-row space
+        gq = np.arange(G)[:, None]
+
+        def to_qrow(idx, mask):
+            comb = lid2comb[gq, idx]
+            assert (comb[mask] >= self.n_reg).all(), (
+                "boundary channel lowered to a register"
+            )
+            return np.where(mask, comb - self.n_reg, 0).astype(np.int32)
+
+        self._send_idx_f = [
+            to_qrow(si, sm) for si, sm in zip(self._send_idx, self._send_mask)
+        ]
+        self._recv_idx_f = [
+            to_qrow(ri, rm) for ri, rm in zip(self._recv_idx, self._recv_mask)
+        ]
+
+        # Inverse port maps: channel -> (unique) flat producer/consumer slot.
+        # SPSC guarantees uniqueness for real channels; the sentinels (many
+        # writers/readers, all dropped) and remotely-driven channels
+        # (ingress: producer on the peer granule; egress: consumer there)
+        # are masked out.
+        n_tot = self.n_reg + self.n_q
+        inv_tx = np.zeros((G, n_tot), np.int64)
+        inv_tx_m = np.zeros((G, n_tot), bool)
+        inv_rx = np.zeros((G, n_tot), np.int64)
+        inv_rx_m = np.zeros((G, n_tot), bool)
+        garange = np.arange(G)[:, None]
+        off = 0
+        for txm in self._tx_tables_f:
+            _, n_slot, n_out = txm.shape
+            flat = np.broadcast_to(
+                off + np.arange(n_slot * n_out), (G, n_slot * n_out)
+            )
+            inv_tx[garange, txm.reshape(G, -1)] = flat
+            inv_tx_m[garange, txm.reshape(G, -1)] = True
+            off += n_slot * n_out
+        off = 0
+        for rxm in self._rx_tables_f:
+            _, n_slot, n_in = rxm.shape
+            flat = np.broadcast_to(
+                off + np.arange(n_slot * n_in), (G, n_slot * n_in)
+            )
+            inv_rx[garange, rxm.reshape(G, -1)] = flat
+            inv_rx_m[garange, rxm.reshape(G, -1)] = True
+            off += n_slot * n_in
+        inv_tx_m[:, :2] = False  # sentinels never drive/commit anything
+        inv_rx_m[:, :2] = False
+        self._inv_tx, self._inv_tx_mask = inv_tx.astype(np.int32), inv_tx_m
+        self._inv_rx, self._inv_rx_mask = inv_rx.astype(np.int32), inv_rx_m
+
+    def tables(self) -> FusedTables:
+        return FusedTables(
+            rx_idx=tuple(self._dev(t) for t in self._rx_tables_f),
+            tx_idx=tuple(self._dev(t) for t in self._tx_tables_f),
+            active=tuple(self._dev(t) for t in self._act_tables),
+            send_idx=tuple(self._dev(t) for t in self._send_idx_f),
+            send_mask=tuple(self._dev(t) for t in self._send_mask),
+            recv_idx=tuple(self._dev(t) for t in self._recv_idx_f),
+            recv_mask=tuple(self._dev(t) for t in self._recv_mask),
+            inv_tx=self._dev(self._inv_tx),
+            inv_tx_mask=self._dev(self._inv_tx_mask),
+            inv_rx=self._dev(self._inv_rx),
+            inv_rx_mask=self._dev(self._inv_rx_mask),
+        )
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array, group_params: dict[int, PyTree] | None = None) -> FusedState:
+        """Initial state — same per-member block init as every other engine
+        (bit-identical results), fused channel representation."""
+        states = self._init_block_states(key, group_params)
+        q = qmod.make_queues(self.n_q, self.W, self.capacity, self.dtype)
+        queues = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, self.dev_shape + x.shape), q
+        )
+        cap1 = self.capacity - 1
+        credits = tuple(
+            jnp.full(self.dev_shape + (si.shape[1],), cap1, jnp.int32)
+            for si in self._send_idx
+        )
+        return FusedState(
+            reg_val=jnp.zeros(self.dev_shape + (self.n_reg, self.W), self.dtype),
+            reg_v=jnp.zeros(self.dev_shape + (self.n_reg,), bool),
+            queues=queues,
+            block_states=tuple(states),
+            credits=credits,
+            cycle=jnp.zeros(self.dev_shape, jnp.int32),
+            epoch=jnp.zeros(self.dev_shape, jnp.int32),
+            tables=self.tables(),
+        )
+
+    # ----------------------------------------------------------- local cycle
+    @staticmethod
+    def _tables6(tb: FusedTables):
+        """The (loop-invariant) table leaves the cycle body actually reads —
+        passed to the epoch kernel as read-only consts, NOT loop carry."""
+        return (
+            tb.rx_idx, tb.tx_idx,
+            tb.inv_tx, tb.inv_tx_mask, tb.inv_rx, tb.inv_rx_mask,
+        )
+
+    def _local_cycle(self, st: FusedState) -> FusedState:
+        """One granule-local cycle on registers + boundary queues."""
+        carry = (st.reg_val, st.reg_v, st.queues, st.block_states, st.cycle)
+        out = self._cycle_body(carry, self._tables6(st.tables))
+        return st.replace(
+            reg_val=out[0], reg_v=out[1], queues=out[2],
+            block_states=out[3], cycle=out[4],
+        )
+
+    def _cycle_body(self, carry, tables6):
+        """One granule-local cycle on registers + boundary queues.
+
+        Same pre-cycle snapshot semantics as ``NetworkSim.step`` /
+        ``GraphEngine._local_cycle`` — fronts, valids and readies are all
+        taken before any block steps — with channel storage split between
+        the register file and the small boundary queue array.  Pure in
+        its explicit arguments (no captured engine state), so the epoch
+        kernel can run it inside ``pallas_call``.
+        """
+        reg_val_in, reg_v_in, q, block_states, cycle = carry
+        rx_tbl, tx_tbl, inv_tx, inv_tx_mask, inv_rx, inv_rx_mask = tables6
+        n_reg, W = self.n_reg, self.W
+        # n_q == 1 means only the scratch row exists: this granule set has no
+        # boundary/external channels, so the queue machinery vanishes from
+        # the compiled body entirely (host-static decision).
+        have_q = self.n_q > 1
+
+        if have_q:
+            qsize = (q.head - q.tail) % q.capacity
+            qfronts = jnp.take_along_axis(
+                q.buf, q.tail[:, None, None], axis=1
+            )[:, 0, :]
+            # combined channel views: registers first, queue rows after
+            fronts = jnp.concatenate([reg_val_in, qfronts], axis=0)
+            valids = jnp.concatenate([reg_v_in, qsize > 0], axis=0)
+            readies = jnp.concatenate([~reg_v_in, qsize < q.capacity - 1], axis=0)
+        else:
+            fronts, valids, readies = reg_val_in, reg_v_in, ~reg_v_in
+
+        new_states = []
+        pay_parts, val_parts, rr_parts = [], [], []
+        for gi, grp in enumerate(self.graph.groups):
+            blk = grp.block
+            rxm, txm = rx_tbl[gi], tx_tbl[gi]
+            f_all = fronts[rxm]  # (n_slot, n_in, W) — one gather per group
+            v_all = valids[rxm]
+            r_all = readies[txm]
+            rx = {
+                port: (f_all[:, p], v_all[:, p])
+                for p, port in enumerate(blk.in_ports)
+            }
+            tx_ready = {port: r_all[:, p] for p, port in enumerate(blk.out_ports)}
+            bst = block_states[gi]
+            new_st, rx_ready, tx = jax.vmap(blk.step)(bst, rx, tx_ready)
+
+            if blk.clock_divider > 1:
+                en = (cycle % blk.clock_divider) == 0
+                new_st = jax.tree.map(lambda n, o: jnp.where(en, n, o), new_st, bst)
+                rx_ready = {k: v & en for k, v in rx_ready.items()}
+                tx = {k: (p, v & en) for k, (p, v) in tx.items()}
+            new_states.append(new_st)
+
+            if blk.in_ports:
+                rr_parts.append(
+                    jnp.stack([rx_ready[p] for p in blk.in_ports], 1).reshape(-1)
+                )
+            if blk.out_ports:
+                pay_parts.append(
+                    jnp.stack([tx[p][0] for p in blk.out_ports], 1)
+                    .reshape(-1, W).astype(self.dtype)
+                )
+                val_parts.append(
+                    jnp.stack([tx[p][1] for p in blk.out_ports], 1).reshape(-1)
+                )
+
+        def _cat(parts, empty):
+            if not parts:
+                return empty
+            return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+
+        pay_all = _cat(pay_parts, jnp.zeros((1, W), self.dtype))
+        val_all = _cat(val_parts, jnp.zeros((1,), bool))
+        rr_all = _cat(rr_parts, jnp.zeros((1,), bool))
+
+        # SPSC: the static inverse maps pick each channel's unique producer
+        # and consumer — gathers only, no scatters anywhere in the cycle.
+        # Gather straight into the register/queue halves (no full-width
+        # intermediate to slice).
+        inv_tx_r, inv_rx_r = inv_tx[:n_reg], inv_rx[:n_reg]
+
+        # registers: depth-1 elastic commit (push into empty, pop drains)
+        do_push_r = val_all[inv_tx_r] & inv_tx_mask[:n_reg] & ~reg_v_in
+        do_pop_r = rr_all[inv_rx_r] & inv_rx_mask[:n_reg] & reg_v_in
+        reg_val = jnp.where(do_push_r[:, None], pay_all[inv_tx_r], reg_val_in)
+        reg_v = (reg_v_in & ~do_pop_r) | do_push_r
+
+        if have_q:
+            # boundary/external queues: the standard ring handshake
+            q2, _, _ = qmod.cycle(
+                q,
+                pay_all[inv_tx[n_reg:]],
+                val_all[inv_tx[n_reg:]] & inv_tx_mask[n_reg:],
+                rr_all[inv_rx[n_reg:]] & inv_rx_mask[n_reg:],
+            )
+        else:
+            q2 = q
+        return (reg_val, reg_v, q2, tuple(new_states), cycle + 1)
+
+    # ------------------------------------------------------------ fused epoch
+    def _inner_cycles(self, st: FusedState, K: int) -> FusedState:
+        """The K_inner hot loop as ONE fused epoch body (the tentpole).
+
+        Only the mutating leaves ride the loop carry; port tables enter as
+        read-only consts, and the exchange tables/credits/epoch counter
+        never touch the kernel at all.
+        """
+        carry = (st.reg_val, st.reg_v, st.queues, st.block_states, st.cycle)
+        out = granule_step.epoch_loop(
+            self._cycle_body, carry, K,
+            consts=self._tables6(st.tables),
+            mode=self.fuse, interpret=self.pallas_interpret,
+        )
+        return st.replace(
+            reg_val=out[0], reg_v=out[1], queues=out[2],
+            block_states=out[3], cycle=out[4],
+        )
+
+    # ------------------------------------------------- host-side external I/O
+    def _ext_loc(self, cid: int) -> tuple[tuple[int, ...], int]:
+        gid = int(self._chan_owner[cid])
+        didx = tuple(int(i) for i in np.unravel_index(gid, self.dev_shape))
+        lid = int(max(self._rx_local[cid], self._tx_local[cid]))
+        return didx, int(self._lid2comb[gid, lid]) - self.n_reg

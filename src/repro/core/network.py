@@ -136,33 +136,54 @@ class Network:
                               graph.PartitionTree), axes, tiers (per-tier
                               (axes, K) pairs or graph.Tier, outermost
                               first — hierarchical sync, DESIGN.md §3).
+        engine="fused"     -> fused.FusedEngine — the kernel-fused fast
+                              path for arbitrary topologies (§Perf):
+                              same kwargs as "graph" plus fuse /
+                              pallas_interpret (epoch-body strategy).
         engine="register"  -> fastgrid.RegisterGridEngine (systolic-grid
                               networks only); kwargs: mesh, K.
 
-        (The uniform-grid preset ``distributed.GridEngine`` is constructed
-        directly — it builds its own grid IR without a Network.)
+        (The uniform-grid presets ``distributed.GridEngine`` and
+        ``fused.FusedEngine.grid`` are constructed directly — they build
+        their own grid IR without a Network.)
         """
         graph = self.graph()
         if engine == "single":
             if kw:
                 raise TypeError(f"engine='single' takes no kwargs, got {sorted(kw)}")
             return NetworkSim(graph)
-        if engine == "graph":
-            from .distributed import GraphEngine
+        if engine in ("graph", "fused"):
+            if engine == "graph":
+                from .distributed import GraphEngine as Engine
 
+                extra = {}
+            else:
+                from .fused import FusedEngine as Engine
+
+                extra = {
+                    k: kw.pop(k)
+                    for k in ("fuse", "pallas_interpret")
+                    if k in kw
+                }
             mesh = kw.pop("mesh")
             K = kw.pop("K", 1)
             tiers = kw.pop("tiers", None)
             axes = kw.pop("axes", None)  # engine defaults to mesh.axis_names
             partition = kw.pop("partition", None)
             if kw:
-                raise TypeError(f"unknown build kwargs for engine='graph': {sorted(kw)}")
-            return GraphEngine(graph, partition, mesh, K=K, axes=axes, tiers=tiers)
+                raise TypeError(
+                    f"unknown build kwargs for engine={engine!r}: {sorted(kw)}"
+                )
+            return Engine(
+                graph, partition, mesh, K=K, axes=axes, tiers=tiers, **extra
+            )
         if engine == "register":
             from .fastgrid import RegisterGridEngine
 
             return RegisterGridEngine.from_graph(graph, **kw)
-        raise ValueError(f"unknown engine {engine!r} (single | graph | register)")
+        raise ValueError(
+            f"unknown engine {engine!r} (single | graph | fused | register)"
+        )
 
 
 class NetworkSim:
@@ -183,10 +204,10 @@ class NetworkSim:
         self.payload_words = graph.payload_words
         self.dtype = graph.dtype
         self.capacity = graph.capacity
-        # Compiled-run cache lives on the instance (keyed by n_cycles), so a
-        # collected simulator releases its executables and a recycled id can
-        # never alias a stale compilation.
-        self._jit_cache: dict[int, Callable] = {}
+        # Compiled-run cache lives on the instance (keyed by n_cycles and
+        # donation), so a collected simulator releases its executables and a
+        # recycled id can never alias a stale compilation.
+        self._jit_cache: dict[tuple[int, bool], Callable] = {}
 
     # -- state ---------------------------------------------------------------
     def init(self, key: jax.Array) -> NetworkState:
@@ -206,13 +227,13 @@ class NetworkSim:
         queues = qmod.make_queues(
             self.n_channels, self.payload_words, self.capacity, self.dtype
         )
-        zero = jnp.zeros((self.n_channels,), jnp.int32)
+        # distinct buffers (not one shared `zero`): donation-friendly
         return NetworkState(
             queues=queues,
             block_states=tuple(states),
             cycle=jnp.zeros((), jnp.int32),
-            push_count=zero,
-            pop_count=zero,
+            push_count=jnp.zeros((self.n_channels,), jnp.int32),
+            pop_count=jnp.zeros((self.n_channels,), jnp.int32),
         )
 
     # -- one network cycle ----------------------------------------------------
@@ -269,17 +290,30 @@ class NetworkSim:
             pop_count=state.pop_count + did_pop.astype(jnp.int32),
         )
 
-    def run(self, state: NetworkState, n_cycles: int) -> NetworkState:
-        """Advance ``n_cycles`` with a jitted scan (compiled once per length)."""
-        if n_cycles not in self._jit_cache:
+    def run(
+        self, state: NetworkState, n_cycles: int, *, donate: bool = False
+    ) -> NetworkState:
+        """Advance ``n_cycles`` with a jitted scan (compiled once per length).
+
+        ``donate=True`` reuses the input state's buffers for the output
+        (no copy through HBM); the input must not be used afterwards.
+        """
+        key = (n_cycles, donate)
+        if key not in self._jit_cache:
 
             def impl(st):
                 return jax.lax.scan(
                     lambda s, _: (self.step(s), None), st, None, length=n_cycles
                 )[0]
 
-            self._jit_cache[n_cycles] = jax.jit(impl)
-        return self._jit_cache[n_cycles](state)
+            self._jit_cache[key] = jax.jit(
+                impl, donate_argnums=(0,) if donate else ()
+            )
+        if donate:
+            from .distributed import _dealias_for_donation
+
+            state = _dealias_for_donation(state)
+        return self._jit_cache[key](state)
 
     # -- host-side external port access (PySbTx / PySbRx analogue) -----------
     def push_external(self, state: NetworkState, name: str, payload) -> tuple[NetworkState, jax.Array]:
