@@ -11,6 +11,7 @@ from .common import emit, run_subprocess
 
 CODE = """
 import numpy as np, jax, jax.numpy as jnp
+from repro.core import Simulation
 from repro.core.compat import make_mesh
 from repro.core.distributed import GridEngine
 from repro.hw.systolic import SystolicCell, make_cell_params
@@ -22,13 +23,14 @@ mesh = make_mesh((2, 2), ('gr','gc'))
 rows = []
 truth = None
 for K in {sweep}:
-    eng = GridEngine(SystolicCell(m_stream=M), Kd, N, mesh, K=K, capacity=62)
-    st = eng.place(eng.init(jax.random.key(0), make_cell_params(A, B)))
-    st = eng.run_until(
-        st, lambda c: ((~c.is_south) | (c.y_idx >= M)).all(), 1000000)
-    cells = eng.gather_cells(st)
+    sim = Simulation(
+        GridEngine(SystolicCell(m_stream=M), Kd, N, mesh, K=K, capacity=62))
+    sim.reset(jax.random.key(0), cell_params=make_cell_params(A, B))
+    sim.run(until=lambda c: ((~c.is_south) | (c.y_idx >= M)).all(),
+            max_epochs=1000000, cache_key='done')
+    cells = sim.engine.gather_cells(sim.state)
     np.testing.assert_allclose(cells.y_buf[Kd-1].T, A @ B, rtol=1e-4)
-    cyc = int(np.asarray(st.cycle)[0, 0])
+    cyc = sim.cycle
     if truth is None:
         truth = cyc  # K=1 ~ per-cycle sync = ground-truth timing
     rows.append((K, cyc, 100.0 * (cyc - truth) / truth))

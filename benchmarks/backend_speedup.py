@@ -95,15 +95,17 @@ def bench(smoke: bool = False):
     t_py, Y_py = _best_of(lambda: python_reference_sim(A, B, cycles), n=2)
     hz_py = cycles / t_py
 
-    # All compiled backends hang off the unified build(engine=...) API —
-    # same Network description, different engine, identical results.  The
-    # initial state is built once: only the compiled run is timed.
+    # All compiled backends hang off the unified build(engine=...) session
+    # API — same Network description, different engine, identical results.
+    # reset() happens once: only the compiled run is timed (the session
+    # donates its state, so timed calls measure the in-place loop).
     net, grid = make_systolic_network(A, B)
-    sim = net.build()  # engine="single"
-    state0 = jax.block_until_ready(sim.init(jax.random.key(0)))
-    t_jit, end = _best_of(lambda: jax.block_until_ready(sim.run(state0, cycles)))
+    sim = net.build()  # engine="single" session
+    sim.reset(jax.random.key(0)).block_until_ready()
+    t_jit, _ = _best_of(lambda: sim.run(cycles=cycles).block_until_ready())
     hz_jit = cycles / t_jit
-    Y = collect_result(sim, end, grid)
+    # the stream is exhausted by then: extra timed runs leave y_buf fixed
+    Y = collect_result(sim.engine, sim.state, grid)
 
     from repro.core.compat import make_mesh
 
@@ -112,11 +114,12 @@ def bench(smoke: bool = False):
     mesh = make_mesh((1,), ("gx",))
 
     def run_engine(engine):
-        eng = net.build(engine=engine, mesh=mesh, K=k_epoch)
-        st0 = jax.block_until_ready(eng.init(jax.random.key(0)))
-        t, st = _best_of(lambda: jax.block_until_ready(
-            eng.run_epochs(st0, n_epochs, donate=False)))
-        flat = eng.gather_group(st, 0)
+        esim = net.build(engine=engine, mesh=mesh, K=k_epoch)
+        esim.reset(jax.random.key(0)).block_until_ready()
+        t, _ = _best_of(
+            lambda: esim.run(epochs=n_epochs).block_until_ready()
+        )
+        flat = esim.engine.gather_group(esim.state, 0)
         Y_e = np.stack([flat.y_buf[(K - 1) * N + c] for c in range(N)], axis=1)
         return t, Y_e
 

@@ -41,10 +41,10 @@ def build_monolithic(A, B):
 
 
 def _compile_time(sim):
-    state = sim.init(jax.random.key(0))
-    sim._jit_cache.clear()  # per-instance compiled-run cache
+    sim.reset(jax.random.key(0))
+    sim.engine._jit_cache.clear()  # per-instance compiled-run cache
     t0 = time.perf_counter()
-    jax.block_until_ready(sim.run(state, 1))
+    sim.run(cycles=1).block_until_ready()
     return time.perf_counter() - t0
 
 

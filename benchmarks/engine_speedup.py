@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .common import emit
+from repro.core import Simulation
 from repro.core.compat import make_mesh
 from repro.core.distributed import GridEngine
 from repro.core.fastgrid import RegisterGridEngine
@@ -38,12 +39,14 @@ def bench(smoke: bool = False):
     mesh = make_mesh((1, 1), ("gr", "gc"))
 
     # warm up with the SAME epoch count so the timed section measures the
-    # compiled loop, not a fresh trace+compile
-    qeng = GridEngine(SystolicCell(m_stream=M), R, C, mesh, K=K, capacity=62)
-    qs = qeng.place(qeng.init(jax.random.key(0), make_cell_params(A, B)))
-    qs = jax.block_until_ready(qeng.run_epochs(qs, n_ep, donate=False))
+    # compiled loop, not a fresh trace+compile; all three engines ride the
+    # uniform Simulation session (which owns/donates the state)
+    qsim = Simulation(GridEngine(SystolicCell(m_stream=M), R, C, mesh, K=K,
+                                 capacity=62))
+    qsim.reset(jax.random.key(0), cell_params=make_cell_params(A, B))
+    qsim.run(epochs=n_ep).block_until_ready()
     t0 = time.perf_counter()
-    qs = jax.block_until_ready(qeng.run_epochs(qs, n_ep, donate=False))
+    qsim.run(epochs=n_ep).block_until_ready()
     tq = time.perf_counter() - t0
 
     feng = FusedEngine.grid(SystolicCell(m_stream=M), R, C, mesh, K=K)
@@ -51,31 +54,37 @@ def bench(smoke: bool = False):
         lambda x: jnp.reshape(jnp.asarray(x), (R * C,) + jnp.shape(x)[2:]),
         make_cell_params(A, B),
     )}
-    fs = feng.place(feng.init(jax.random.key(0), group_params=fparams))
-    fs = jax.block_until_ready(feng.run_epochs(fs, n_ep, donate=False))
+    fsim = Simulation(feng).reset(jax.random.key(0), group_params=fparams)
+    fsim.run(epochs=n_ep).block_until_ready()
     t0 = time.perf_counter()
-    fs = jax.block_until_ready(feng.run_epochs(fs, n_ep, donate=False))
+    fsim.run(epochs=n_ep).block_until_ready()
     tf = time.perf_counter() - t0
 
-    reng = RegisterGridEngine(R, C, mesh, K=K, m_stream=M)
-    ep = jax.jit(reng.epoch_fn())
-    rs = ep(ep(reng.init(A, B)))
+    # the register preset, timed per-epoch (one jit call per epoch, the
+    # historical dispatch pattern) through the same session surface
+    rsim = Simulation(RegisterGridEngine(R, C, mesh, K=K, m_stream=M))
+    rsim.reset(A=A, B=B)
+    rsim.run(epochs=1).run(epochs=1).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(n_ep):
-        rs = ep(rs)
-    jax.block_until_ready(rs.cycle)
+        rsim.run(epochs=1)
+    rsim.block_until_ready()
     tr = time.perf_counter() - t0
 
     # correctness: both fast engines still compute A@B exactly
-    done = reng.run_until_done(reng.init(A, B), 100_000)
-    np.testing.assert_allclose(reng.result(done), A @ B, rtol=1e-5)
-    fdone = feng.run_until(
-        feng.init(jax.random.key(0), group_params=fparams),
-        lambda s: ((~s.block_states[0].is_south)
-                   | (s.block_states[0].y_idx >= M)).all(),
-        100_000, cache_key="done",
-    )
-    Y_f = np.asarray(feng.gather_group(fdone, 0).y_buf).reshape(R, C, M)
+    rsim.reset(A=A, B=B)
+    rsim.run(until=lambda cell: ((~cell["is_south"])
+                                 | (cell["y_idx"] >= M)).all(),
+             max_epochs=100_000, cache_key="done")
+    np.testing.assert_allclose(rsim.engine.result(rsim.state), A @ B,
+                               rtol=1e-5)
+    fsim.reset(jax.random.key(0), group_params=fparams)
+    fsim.run(until=lambda s: ((~s.block_states[0].is_south)
+                              | (s.block_states[0].y_idx >= M)).all(),
+             max_epochs=100_000, cache_key="done")
+    Y_f = np.asarray(
+        fsim.engine.gather_group(fsim.state, 0).y_buf
+    ).reshape(R, C, M)
     np.testing.assert_allclose(Y_f[-1].transpose(1, 0), A @ B, rtol=1e-5)
 
     cyc = K * n_ep * R * C

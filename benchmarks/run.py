@@ -44,14 +44,15 @@ import traceback
 
 from . import (
     accuracy_vs_rate, backend_speedup, build_time, common, engine_speedup,
-    queue_perf, sim_throughput, task_latency, timing_breakdown, wafer_scale,
+    queue_perf, schema as schema_mod, sim_throughput, task_latency,
+    timing_breakdown, wafer_scale,
 )
 
 BENCH_JSON = "BENCH_PR3.json"
 SMOKE_JSON = "BENCH_SMOKE.json"
 BASELINE_JSON = "BENCH_PR2.json"
 BASELINE_SUITES = ("wafer_scale", "backend_speedup", "engine_speedup")
-SCHEMA = "repro-bench-v1"
+SCHEMA = schema_mod.SCHEMA
 
 SUITES = [
     ("queue_perf", queue_perf.bench),
@@ -149,10 +150,12 @@ def main() -> None:
         "baseline": _baseline(),
         "suites": common.records(),
     }
+    schema_errs = schema_mod.validate(summary)
+    assert not schema_errs, f"summary violates {SCHEMA}: {schema_errs}"
     with open(args.json, "w") as f:
         json.dump(summary, f, indent=2, sort_keys=True)
         f.write("\n")
-    print(f"# wrote {args.json}")
+    print(f"# wrote {args.json} (validated against {SCHEMA})")
 
     if failed:
         print(f"# FAILED: {failed}")

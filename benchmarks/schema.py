@@ -1,0 +1,130 @@
+"""repro-bench-v1 schema validation + per-PR perf gates.
+
+The machine-readable benchmark summaries (``BENCH_*.json``, written by
+``benchmarks.run``) all share one schema so the perf trajectory can be
+diffed PR over PR.  This module is the single source of truth for that
+schema: ``benchmarks.run`` validates every summary before writing it, and
+``scripts/ci.sh`` re-validates the files (plus the perf gates) from the
+command line:
+
+    python -m benchmarks.schema BENCH_SMOKE.json --gates smoke
+    python -m benchmarks.schema BENCH_PR3.json  --gates trajectory
+
+Structure (schema "repro-bench-v1")::
+
+    {"schema": "repro-bench-v1", "git_rev": str, "smoke": bool,
+     "failed": [suite...], "baseline": {...},
+     "suites": {suite: [{"name", "us_per_call", "derived"}, ...]}}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SCHEMA = "repro-bench-v1"
+REQUIRED_KEYS = ("schema", "git_rev", "smoke", "failed", "baseline", "suites")
+ROW_KEYS = {"name", "us_per_call", "derived"}
+
+
+def validate(summary: dict) -> list[str]:
+    """Structural schema check.  Returns a list of problems (empty = OK)."""
+    errs: list[str] = []
+    for key in REQUIRED_KEYS:
+        if key not in summary:
+            errs.append(f"missing top-level key {key!r}")
+    if summary.get("schema") != SCHEMA:
+        errs.append(f"schema is {summary.get('schema')!r}, want {SCHEMA!r}")
+    suites = summary.get("suites")
+    if not isinstance(suites, dict):
+        errs.append("suites must be a dict of suite -> row list")
+        return errs
+    for name, rows in suites.items():
+        if not isinstance(rows, list):
+            errs.append(f"suite {name!r} is not a row list")
+            continue
+        for r in rows:
+            if not (isinstance(r, dict) and ROW_KEYS <= set(r)):
+                errs.append(f"suite {name!r} row missing {ROW_KEYS}: {r}")
+                break
+    return errs
+
+
+def _rows(summary: dict, suite: str) -> dict[str, dict]:
+    return {r["name"]: r for r in summary.get("suites", {}).get(suite, [])}
+
+
+def gate_smoke(summary: dict) -> str:
+    """Per-PR smoke perf gates (the ISSUE 3 regressions stay dead):
+    fused >= graph on the smoke wafer, compiled >= interpreted backend."""
+    assert summary["baseline"].get("ref") == "BENCH_PR2.json", \
+        summary["baseline"]
+    rows = _rows(summary, "wafer_scale")
+    assert any(n.startswith("wafer_tiered_") for n in rows), "no tiered rows"
+    assert any(n.startswith("wafer_engine_fused_") for n in rows), \
+        "no fused-engine wafer rows recorded"
+    # fused >= graph on the smoke wafer config (hot loop: strict; the tiny
+    # distributed config is collective-bound on fake devices: 20% tolerance)
+    hot = rows["wafer_fused_speedup_hotloop"]["us_per_call"]
+    assert hot >= 1.0, f"fused slower than GraphEngine on smoke wafer: {hot}x"
+    dist = rows["wafer_fused_speedup_Ko4_Ki8"]["us_per_call"]
+    assert dist >= 0.8, f"fused regressed vs GraphEngine (distributed): {dist}x"
+    # compiled single-netlist backend must beat the interpreted reference
+    bs = _rows(summary, "backend_speedup")
+    us_jit = bs["backend_compiled"]["us_per_call"]
+    us_py = bs["backend_interpreted"]["us_per_call"]
+    assert us_jit <= us_py, f"compiled {us_jit} us/cyc vs interpreted {us_py}"
+    n = sum(len(r) for r in summary["suites"].values())
+    return (f"{n} rows across {len(summary['suites'])} suites "
+            f"@ {summary['git_rev'][:12]}; fused/graph hotloop {hot:.2f}x, "
+            f"distributed {dist:.2f}x, "
+            f"compiled/interpreted {us_py / us_jit:.1f}x")
+
+
+def gate_trajectory(summary: dict) -> str:
+    """Gates for the committed full-tier trajectory file (BENCH_PR3.json):
+    the >=5x fused-vs-GraphEngine wafer row must survive."""
+    assert summary["baseline"].get("ref") == "BENCH_PR2.json"
+    assert summary["baseline"].get("suites", {}).get("wafer_scale"), \
+        "baseline must embed the PR 2 wafer rows"
+    rows = _rows(summary, "wafer_scale")
+    speedups = {n: r["us_per_call"] for n, r in rows.items()
+                if n.startswith("wafer_fused_speedup_")}
+    assert speedups, "no fused-vs-graph speedup rows"
+    assert max(speedups.values()) >= 5.0, (
+        f"perf trajectory lost the >=5x fused-vs-GraphEngine wafer row: "
+        f"{speedups}")
+    bs = _rows(summary, "backend_speedup")
+    assert bs["backend_compiled"]["us_per_call"] <= \
+        bs["backend_interpreted"]["us_per_call"], \
+        "compiled backend < interpreted"
+    return (f"fused/graph best {max(speedups.values()):.2f}x "
+            f"({max(speedups, key=speedups.get)})")
+
+
+GATES = {"smoke": gate_smoke, "trajectory": gate_trajectory, "none": None}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", help="BENCH_*.json summary to validate")
+    ap.add_argument("--gates", choices=sorted(GATES), default="none",
+                    help="perf gates to enforce on top of the schema check")
+    args = ap.parse_args(argv)
+    with open(args.path) as f:
+        summary = json.load(f)
+    errs = validate(summary)
+    if errs:
+        for e in errs:
+            print(f"SCHEMA ERROR: {e}", file=sys.stderr)
+        return 1
+    msg = f"{args.path} conforms to {SCHEMA}"
+    gate = GATES[args.gates]
+    if gate is not None:
+        msg += f"; gates[{args.gates}] OK: {gate(summary)}"
+    print(msg)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,6 +10,7 @@ import jax
 import numpy as np
 
 from .common import emit
+from repro.core import Simulation
 from repro.hw.systolic import make_systolic_network, make_cell_params, SystolicCell
 from repro.core.compat import make_mesh
 from repro.core.distributed import GridEngine
@@ -22,12 +23,14 @@ def bench(smoke: bool = False):
         A = rng.randn(M, n).astype(np.float32)
         B = rng.randn(n, n).astype(np.float32)
         mesh = make_mesh((1, 1), ("gr", "gc"))
-        eng = GridEngine(SystolicCell(m_stream=M), n, n, mesh, K=16, capacity=8)
-        state = eng.init(jax.random.key(0), make_cell_params(A, B))
-        state = eng.run_epochs(state, 2)  # warmup/compile
+        sim = Simulation(
+            GridEngine(SystolicCell(m_stream=M), n, n, mesh, K=16, capacity=8)
+        )
+        sim.reset(jax.random.key(0), cell_params=make_cell_params(A, B))
+        sim.run(epochs=2).block_until_ready()  # warmup/compile
         cycles = 16 * 8
         t0 = time.perf_counter()
-        state = jax.block_until_ready(eng.run_epochs(state, 8))
+        sim.run(epochs=8).block_until_ready()
         t = time.perf_counter() - t0
         rate = n * n * cycles / t
         emit(f"sim_throughput_{n}x{n}", t / cycles * 1e6,

@@ -12,6 +12,7 @@ import jax
 import numpy as np
 
 from .common import emit
+from repro.core import Simulation
 from repro.core.compat import make_mesh
 from repro.core.distributed import GridEngine
 from repro.hw.systolic import SystolicCell, make_cell_params
@@ -24,20 +25,24 @@ def bench(smoke: bool = False):
     A = rng.randn(M, K).astype(np.float32)
     B = rng.randn(K, N).astype(np.float32)
     mesh = make_mesh((1, 1), ("gr", "gc"))
-    eng = GridEngine(SystolicCell(m_stream=M), K, N, mesh, K=16, capacity=62)
+    sim = Simulation(
+        GridEngine(SystolicCell(m_stream=M), K, N, mesh, K=16, capacity=62)
+    )
 
     def done(c):
         return ((~c.is_south) | (c.y_idx >= M)).all()
 
-    state = eng.init(jax.random.key(0), make_cell_params(A, B))
-    state = eng.run_until(state, done, max_epochs=100_000)  # warmup+compile
-    state = eng.init(jax.random.key(0), make_cell_params(A, B))
+    params = make_cell_params(A, B)
+    sim.reset(jax.random.key(0), cell_params=params)
+    sim.run(until=done, max_epochs=100_000, cache_key="done")  # warm+compile
+    sim.reset(jax.random.key(0), cell_params=params)
     t0 = time.perf_counter()
-    state = jax.block_until_ready(eng.run_until(state, done, max_epochs=100_000))
+    sim.run(until=done, max_epochs=100_000, cache_key="done")
+    sim.block_until_ready()
     t_task = time.perf_counter() - t0
-    cycles = int(np.asarray(state.cycle)[0, 0])
+    cycles = sim.cycle
     np.testing.assert_allclose(
-        eng.gather_cells(state).y_buf[K - 1].T, A @ B, rtol=1e-4
+        sim.engine.gather_cells(sim.state).y_buf[K - 1].T, A @ B, rtol=1e-4
     )
 
     # projected interpreted time: measure a short interpreted run, extrapolate

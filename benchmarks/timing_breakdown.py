@@ -10,6 +10,7 @@ from .common import emit, run_subprocess
 
 CODE = """
 import time, numpy as np, jax
+from repro.core import Simulation
 from repro.core.compat import make_mesh
 from repro.core.distributed import GridEngine
 from repro.hw.systolic import SystolicCell, make_cell_params
@@ -18,16 +19,17 @@ M, Kd, N = {dims}
 A = rng.randn(M, Kd).astype(np.float32)
 B = rng.randn(Kd, N).astype(np.float32)
 mesh = make_mesh((2, 2), ('gr','gc'))
-eng = GridEngine(SystolicCell(m_stream=M), Kd, N, mesh, K=16, capacity=62)
+sim = Simulation(
+    GridEngine(SystolicCell(m_stream=M), Kd, N, mesh, K=16, capacity=62))
 t0 = time.perf_counter()
-st = eng.place(eng.init(jax.random.key(0), make_cell_params(A, B)))
-jax.block_until_ready(st.block_states[0].b)
+sim.reset(jax.random.key(0), cell_params=make_cell_params(A, B))
+sim.block_until_ready()
 t_setup = time.perf_counter() - t0
 t0 = time.perf_counter()
-st2 = jax.block_until_ready(eng.run_epochs(st, 1))   # includes compile
+sim.run(epochs=1).block_until_ready()   # includes compile
 t_build = time.perf_counter() - t0
 t0 = time.perf_counter()
-st3 = jax.block_until_ready(eng.run_epochs(st2, 8))
+sim.run(epochs=8).block_until_ready()
 t_run = time.perf_counter() - t0
 print(f'BREAKDOWN {t_build:.3f} {t_setup:.3f} {t_run:.3f}')
 """

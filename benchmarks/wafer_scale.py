@@ -37,7 +37,7 @@ from .common import emit, run_subprocess
 CODE = """
 import time
 import numpy as np, jax
-from repro.core import ChannelGraph, tiered_grid_partition
+from repro.core import ChannelGraph, Simulation, tiered_grid_partition
 from repro.core.compat import make_mesh
 from repro.core.distributed import GraphEngine
 from repro.hw.manycore import (
@@ -58,18 +58,19 @@ def build(tiers, R=None, C=None):
 
 def complete(eng, values):
     done = lambda s: allreduce_done(s.block_states[0], s.tables.active[0])
-    st = eng.place(eng.init(jax.random.key(0)))
-    st = jax.block_until_ready(
-        eng.run_until(st, done, max_epochs=100000, cache_key='done'))
-    totals = np.asarray(eng.gather_group(st, 0).total)
+    sim = Simulation(eng).reset(jax.random.key(0))
+    sim.run(until=done, max_epochs=100000, cache_key='done')
+    sim.block_until_ready()
+    totals = np.asarray(eng.gather_group(sim.state, 0).total)
     assert np.array_equal(totals, np.full_like(totals, expected_total(values)))
-    # timed second run reuses the compiled loop
-    st2 = eng.place(eng.init(jax.random.key(0)))
+    cyc = sim.cycle
+    # timed second run reuses the compiled loop (same session, fresh reset)
+    sim.reset(jax.random.key(0))
     t0 = time.perf_counter()
-    jax.block_until_ready(
-        eng.run_until(st2, done, max_epochs=100000, cache_key='done'))
+    sim.run(until=done, max_epochs=100000, cache_key='done')
+    sim.block_until_ready()
     wall = time.perf_counter() - t0
-    return int(np.asarray(st.cycle).ravel()[0]), wall
+    return cyc, wall
 
 inner_axes = {mesh_axes}[1:]
 
@@ -103,7 +104,7 @@ for label, tiers in [
 ENGINE_CODE = """
 import time
 import numpy as np, jax
-from repro.core import ChannelGraph, FusedEngine, tiered_grid_partition
+from repro.core import ChannelGraph, FusedEngine, Simulation, tiered_grid_partition
 from repro.core.compat import make_mesh
 from repro.core.distributed import GraphEngine
 from repro.hw.manycore import (
@@ -118,51 +119,50 @@ def build(cls, R, C, mesh_shape, mesh_axes, tiles, tiers, **kw):
         params=make_core_params(values.reshape(R, C)), capacity=CAP)
     mesh = make_mesh(mesh_shape, mesh_axes)
     part = tiered_grid_partition(R, C, tiles) if tiles else None
-    return cls(graph, part, mesh, tiers=tiers, **kw), values
+    return Simulation(cls(graph, part, mesh, tiers=tiers, **kw)), values
 
-def verify(eng, values):
+def verify(sim, values):
     done = lambda s: allreduce_done(s.block_states[0], s.tables.active[0])
-    st = eng.place(eng.init(jax.random.key(0)))
-    st = jax.block_until_ready(
-        eng.run_until(st, done, max_epochs=100000, cache_key='done'))
-    totals = np.asarray(eng.gather_group(st, 0).total)
+    sim.reset(jax.random.key(0))
+    sim.run(until=done, max_epochs=100000, cache_key='done')
+    sim.block_until_ready()
+    totals = np.asarray(sim.engine.gather_group(sim.state, 0).total)
     assert np.array_equal(totals, np.full_like(totals, expected_total(values)))
-    return st
 
 for sched, R, C, mesh_shape, mesh_axes, tiles, tiers, n_rounds, n_epochs in {grp_configs}:
-    ge, values = build(GraphEngine, R, C, mesh_shape, mesh_axes, tiles, tiers)
-    fe, _ = build(FusedEngine, R, C, mesh_shape, mesh_axes, tiles, tiers)
-    cpe = ge.cycles_per_epoch
+    gsim, values = build(GraphEngine, R, C, mesh_shape, mesh_axes, tiles, tiers)
+    fsim, _ = build(FusedEngine, R, C, mesh_shape, mesh_axes, tiles, tiers)
+    cpe = gsim.engine.cycles_per_epoch
     # correctness first: both engines prove the allreduce invariant
-    verify(ge, values)
-    verify(fe, values)
+    verify(gsim, values)
+    verify(fsim, values)
     # Interleaved A/B rounds, order alternating per round, with a cooldown
     # sleep before every timing so one engine's long round cannot dump
     # CFS-quota throttling debt onto the other's measurement.  The
     # reported ratio compares each engine's BEST round (both engines' best
     # rounds face the same machine); the median per-round ratio is a
     # secondary robustness check.
-    gs = ge.place(ge.init(jax.random.key(0)))
-    fs = fe.place(fe.init(jax.random.key(0)))
+    gsim.reset(jax.random.key(0))
+    fsim.reset(jax.random.key(0))
     # warm with the SAME epoch count (compile) + one shakeout run each:
     # the first post-compile invocation is reliably a cold-cache outlier
-    gs = jax.block_until_ready(ge.run_epochs(ge.run_epochs(gs, n_epochs), n_epochs))
-    fs = jax.block_until_ready(fe.run_epochs(fe.run_epochs(fs, n_epochs), n_epochs))
+    gsim.run(epochs=n_epochs).run(epochs=n_epochs).block_until_ready()
+    fsim.run(epochs=n_epochs).run(epochs=n_epochs).block_until_ready()
 
-    def timed(eng, st):
+    def timed(sim):
         time.sleep(0.8)  # let the cgroup CPU budget refill
         t0 = time.perf_counter()
-        st = jax.block_until_ready(eng.run_epochs(st, n_epochs))
-        return time.perf_counter() - t0, st
+        sim.run(epochs=n_epochs).block_until_ready()
+        return time.perf_counter() - t0
 
     ratios, tgs, tfs = [], [], []
     for r in range(n_rounds):
         if r % 2 == 0:
-            tg, gs = timed(ge, gs)
-            tf, fs = timed(fe, fs)
+            tg = timed(gsim)
+            tf = timed(fsim)
         else:
-            tf, fs = timed(fe, fs)
-            tg, gs = timed(ge, gs)
+            tf = timed(fsim)
+            tg = timed(gsim)
         ratios.append(tg / tf); tgs.append(tg); tfs.append(tf)
     cyc = n_epochs * cpe
     med = sorted(ratios)[len(ratios) // 2]

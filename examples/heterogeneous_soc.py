@@ -175,23 +175,22 @@ def run_single(cycles: int = 120):
     """Single-netlist ground truth (cycle-accurate)."""
     net, cpu = build_soc()
     sim = net.build()
-    state = sim.init(jax.random.key(0))
-    state = sim.run(state, cycles)
-    return sim.group_state(state, cpu)
+    sim.reset(jax.random.key(0)).run(cycles=cycles)
+    return sim.probe(cpu)
 
 
 def run_distributed(K: int = 1, cycles: int = 120):
-    """The same SoC partitioned one-block-per-device on a granule mesh."""
+    """The same SoC partitioned one-block-per-device on a granule mesh —
+    the SAME session lifecycle as the single netlist, only build() differs."""
     from repro.core.compat import make_mesh
 
     net, cpu = build_soc()
     n_dev = len(jax.devices())
     mesh = make_mesh((n_dev,), ("gx",))
     partition = {"cpu": 0, "dram": 1 % n_dev, "adc": 2 % n_dev}
-    eng = net.build(engine="graph", mesh=mesh, partition=partition, K=K)
-    st = eng.place(eng.init(jax.random.key(0)))
-    st = eng.run_epochs(st, -(-cycles // K))
-    return eng.group_state(st, cpu), eng
+    sim = net.build(engine="graph", mesh=mesh, partition=partition, K=K)
+    sim.reset(jax.random.key(0)).run(cycles=cycles)
+    return sim.probe(cpu), sim.engine
 
 
 def main() -> None:

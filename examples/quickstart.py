@@ -1,8 +1,10 @@
 """Quickstart — the paper's Listing 1/2 loopback example, in JAX.
 
 A block receives an SB packet, increments its data word, and retransmits.
-The host builds the simulator, sends a packet in, and receives the result —
-the exact workflow of Switchboard's PySbTx/PySbRx example.
+The host builds a ``Simulation`` session, sends a packet through a
+``TxPort`` queue handle, and receives the result from an ``RxPort`` —
+the exact workflow of Switchboard's PySbTx/PySbRx example, uniform across
+every engine backend (DESIGN.md §4).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -51,19 +53,31 @@ def main() -> None:
     dut = net.instantiate(IncrementDut(), name="dut")
     net.external_in(dut["to_rtl"], "to_rtl.q")    # tx = PySbTx('to_rtl.q')
     net.external_out(dut["from_rtl"], "from_rtl.q")  # rx = PySbRx('from_rtl.q')
-    sim = net.build()                              # prebuilt block simulator
-    state = sim.init(jax.random.key(0))
+
+    sim = net.build()              # Simulation session (single-netlist engine)
+    sim.reset(jax.random.key(0))
+    tx = sim.tx("to_rtl.q")        # "tx = PySbTx('to_rtl.q')"
+    rx = sim.rx("from_rtl.q")      # "rx = PySbRx('from_rtl.q')"
 
     # "txp = PySbPacket(data=...); tx.send(txp)"
-    state, ok = sim.push_external(state, "to_rtl.q", jnp.array([41.0, 1.0]))
-    print(f"sent packet (ok={bool(ok)}): data=41")
+    ok = tx.send([41.0, 1.0])
+    print(f"sent packet (ok={ok}): data=41")
 
-    state = sim.run(state, 4)  # let the simulation advance a few cycles
+    sim.run(cycles=4)  # let the simulation advance a few cycles
 
     # "print(rx.recv())"
-    state, payload, valid = sim.pop_external(state, "from_rtl.q")
-    print(f"received (valid={bool(valid)}): data={float(payload[0])}")
-    assert bool(valid) and float(payload[0]) == 42.0
+    payload = rx.recv()
+    print(f"received: data={None if payload is None else float(payload[0])}")
+    assert payload is not None and float(payload[0]) == 42.0
+
+    # live probe + handshake counters — the PyMonitor side of the paper
+    dut_state = sim.probe(dut)
+    stats = sim.stats()
+    assert int(dut_state.handshakes) == 1
+    assert stats["ports"]["tx"]["to_rtl.q"]["sent"] == 1
+    assert stats["ports"]["rx"]["from_rtl.q"]["received"] == 1
+    print(f"probe: dut fired {int(dut_state.handshakes)}x at cycle "
+          f"{stats['cycle']}")
     print("quickstart OK — the DUT incremented the packet through SPSC queues")
 
 

@@ -21,6 +21,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
+from repro.core import Simulation
 from repro.core.compat import make_mesh
 from repro.core.distributed import GridEngine
 from repro.hw.systolic import SystolicCell, make_cell_params
@@ -46,17 +47,17 @@ def main() -> None:
 
     print(f"{'K':>4} {'epochs':>7} {'cycles':>7} {'err':>10} {'wall_s':>7} {'core-cyc/s':>11}")
     for K in (1, 4, 16, 62):
-        eng = GridEngine(SystolicCell(m_stream=M), R, C, mesh, K=K)
-        state = eng.init(jax.random.key(0), make_cell_params(A, B))
+        sim = Simulation(GridEngine(SystolicCell(m_stream=M), R, C, mesh, K=K))
+        sim.reset(jax.random.key(0), cell_params=make_cell_params(A, B))
         t0 = time.time()
-        state = eng.run_until(state, done, max_epochs=1_000_000)
+        sim.run(until=done, max_epochs=1_000_000, cache_key="done")
         wall = time.time() - t0
-        cells = eng.gather_cells(state)
+        cells = sim.engine.gather_cells(sim.state)
         Y = cells.y_buf[R - 1, :, :].T
         err = np.abs(Y - A @ B).max()
-        cycles = int(np.asarray(state.cycle)[0, 0])
+        cycles, epochs = sim.cycle, sim.epoch
         rate = R * C * cycles / wall
-        print(f"{K:4d} {int(np.asarray(state.epoch)[0,0]):7d} {cycles:7d} "
+        print(f"{K:4d} {epochs:7d} {cycles:7d} "
               f"{err:10.2e} {wall:7.2f} {rate:11.3e}")
     print("\nResults exact for every K; measured cycles grow with K —")
     print("the paper's Fig. 15 accuracy/rate trade-off, deterministically.")

@@ -23,16 +23,37 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_pipeline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + few steps (CI-friendly)")
     args = ap.parse_args()
+    if args.smoke:
+        args.steps = min(args.steps, 8)
+        args.batch = 2
+        args.seq = 32
+        args.ckpt_dir = args.ckpt_dir + "_smoke"
+        # a stale checkpoint at/past the final step would leave zero steps
+        # to run (and nothing to assert on) — smoke runs start fresh
+        import shutil
 
-    # ~100M-parameter llama-family config (d=512, 8 layers, 32k vocab).
+        shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+
+    # ~100M-parameter llama-family config (d=512, 8 layers, 32k vocab);
+    # --smoke shrinks it to a ~1M-parameter toy with the same topology.
     import repro.configs.llama3_2_1b as base
-    cfg100m = dataclasses.replace(
-        base.CONFIG,
-        name="llama-100m", n_layers=8, d_model=512, n_heads=8, n_kv_heads=4,
-        head_dim=64, d_ff=2048, vocab=32768, dtype="float32",
-        use_kernels=False,
-    )
+    if args.smoke:
+        cfg100m = dataclasses.replace(
+            base.CONFIG,
+            name="llama-smoke", n_layers=2, d_model=64, n_heads=4,
+            n_kv_heads=2, head_dim=16, d_ff=128, vocab=512, dtype="float32",
+            use_kernels=False,
+        )
+    else:
+        cfg100m = dataclasses.replace(
+            base.CONFIG,
+            name="llama-100m", n_layers=8, d_model=512, n_heads=8, n_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab=32768, dtype="float32",
+            use_kernels=False,
+        )
     n = cfg100m.param_count() / 1e6
     print(f"training {cfg100m.name}: {n:.0f}M params, {args.steps} steps, "
           f"crash injected at step {args.steps//2}")

@@ -44,7 +44,7 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.configs.manycore import WAFER  # noqa: E402
-from repro.core import tiered_grid_partition  # noqa: E402
+from repro.core import Simulation, tiered_grid_partition  # noqa: E402
 from repro.core.compat import make_mesh  # noqa: E402
 from repro.core.distributed import GraphEngine  # noqa: E402
 from repro.core.graph import ChannelGraph  # noqa: E402
@@ -100,19 +100,18 @@ def main() -> None:
           f"rarer than intra-pod)")
 
     t0 = time.perf_counter()
-    state = eng.place(eng.init(jax.random.key(0)))
+    sim = Simulation(eng).reset(jax.random.key(0))
     done = lambda s: allreduce_done(s.block_states[0], s.tables.active[0])  # noqa: E731
-    state = jax.block_until_ready(
-        eng.run_until(state, done, max_epochs=100_000, cache_key="allreduce")
-    )
+    sim.run(until=done, max_epochs=100_000, cache_key="allreduce")
+    sim.block_until_ready()
     wall = time.perf_counter() - t0
 
-    totals = np.asarray(eng.gather_group(state, 0).total)
+    totals = np.asarray(eng.gather_group(sim.state, 0).total)
     want = expected_total(values)
     assert np.array_equal(totals, np.full_like(totals, want)), (
         f"allreduce mismatch: {np.unique(totals)[:5]} != {want}"
     )
-    cycles = int(np.asarray(state.cycle).ravel()[0])
+    cycles = sim.cycle
     print(f"  all {R * C} cores converged to the global sum {want:.0f}")
     print(f"  {cycles} simulated cycles in {wall:.2f}s wall "
           f"(incl. compile) = {R * C * cycles / wall:.3e} core-cycles/s")

@@ -1,14 +1,17 @@
 #!/usr/bin/env bash
-# Per-PR gate: tier-1 tests + smoke benchmarks + the distributed examples.
+# Per-PR gate: tier-1 tests + smoke benchmarks + every example in smoke mode.
 #
 #   scripts/ci.sh            # everything
 #   scripts/ci.sh tests      # tier-1 tests only
 #   scripts/ci.sh smoke      # smoke benchmarks only
+#   scripts/ci.sh examples   # all examples, smoke-sized, via the session API
 #
 # The smoke benchmarks run every suite (all four engines, the batched
 # tiered exchange, the subprocess multi-device paths) on a tiny cycle
 # budget, so engine regressions are caught per-PR even where the full
-# benchmark numbers would take too long.  Perf gates enforced here:
+# benchmark numbers would take too long.  BENCH_*.json summaries are
+# validated against the repro-bench-v1 schema by ``benchmarks.schema``,
+# which also enforces the perf gates:
 #   * compiled single-netlist backend >= interpreted reference
 #     (asserted inside benchmarks.backend_speedup AND re-checked from the
 #     JSON rows — the PR 2 "0x speedup" regression can't come back);
@@ -36,67 +39,24 @@ if [[ "$stage" == "all" || "$stage" == "smoke" ]]; then
         -k "modes or contract or lowering or chain or capacity"
     echo "=== smoke benchmarks (incl. tiered wafer-scale + engines) ==="
     python -m benchmarks.run --smoke --json BENCH_SMOKE.json
-    echo "=== BENCH_SMOKE.json well-formedness + perf gates ==="
-    python - <<'EOF'
-import json
+    echo "=== BENCH json schema + perf gates (benchmarks.schema) ==="
+    python -m benchmarks.schema BENCH_SMOKE.json --gates smoke
+    python -m benchmarks.schema BENCH_PR3.json --gates trajectory
+fi
 
-with open("BENCH_SMOKE.json") as f:
-    bench = json.load(f)
-for key in ("schema", "git_rev", "smoke", "failed", "baseline", "suites"):
-    assert key in bench, f"bench json missing {key!r}"
-assert bench["schema"] == "repro-bench-v1", bench["schema"]
-assert bench["baseline"].get("ref") == "BENCH_PR2.json", bench["baseline"]
-suites = bench["suites"]
-assert "wafer_scale" in suites, "wafer-scale smoke suite missing"
-rows = {r["name"]: r for r in suites["wafer_scale"]}
-assert any(n.startswith("wafer_tiered_") for n in rows), "no tiered rows"
-assert any(n.startswith("wafer_engine_fused_") for n in rows), \
-    "no fused-engine wafer rows recorded"
-# fused >= graph on the smoke wafer config (hot loop: strict; the tiny
-# distributed config is collective-bound on fake devices: 20% tolerance)
-hot = rows["wafer_fused_speedup_hotloop"]["us_per_call"]
-assert hot >= 1.0, f"fused slower than GraphEngine on smoke wafer: {hot}x"
-dist = rows["wafer_fused_speedup_Ko4_Ki8"]["us_per_call"]
-assert dist >= 0.8, f"fused regressed vs GraphEngine (distributed): {dist}x"
-# compiled single-netlist backend must beat the interpreted reference
-bs = {r["name"]: r for r in suites["backend_speedup"]}
-us_jit = bs["backend_compiled"]["us_per_call"]
-us_py = bs["backend_interpreted"]["us_per_call"]
-assert us_jit <= us_py, f"compiled {us_jit} us/cyc vs interpreted {us_py}"
-for name, rws in suites.items():
-    for r in rws:
-        assert {"name", "us_per_call", "derived"} <= set(r), (name, r)
-print(f"BENCH_SMOKE.json OK: {sum(len(r) for r in suites.values())} rows "
-      f"across {len(suites)} suites @ {bench['git_rev'][:12]}; "
-      f"fused/graph hotloop {hot:.2f}x, distributed {dist:.2f}x, "
-      f"compiled/interpreted {us_py / us_jit:.1f}x")
-EOF
-    echo "=== committed BENCH_PR3.json well-formedness ==="
-    python - <<'EOF'
-import json
-
-with open("BENCH_PR3.json") as f:  # the committed full-tier trajectory
-    bench = json.load(f)
-assert bench["schema"] == "repro-bench-v1"
-assert bench["baseline"].get("ref") == "BENCH_PR2.json"
-assert bench["baseline"].get("suites", {}).get("wafer_scale"), \
-    "baseline must embed the PR 2 wafer rows"
-rows = {r["name"]: r for r in bench["suites"]["wafer_scale"]}
-speedups = {n: r["us_per_call"] for n, r in rows.items()
-            if n.startswith("wafer_fused_speedup_")}
-assert speedups, "no fused-vs-graph speedup rows in BENCH_PR3.json"
-assert max(speedups.values()) >= 5.0, (
-    f"perf trajectory lost the >=5x fused-vs-GraphEngine wafer row: "
-    f"{speedups}")
-bs = {r["name"]: r for r in bench["suites"]["backend_speedup"]}
-assert bs["backend_compiled"]["us_per_call"] <= \
-    bs["backend_interpreted"]["us_per_call"], "compiled backend < interpreted"
-print(f"BENCH_PR3.json OK: fused/graph best {max(speedups.values()):.2f}x "
-      f"({max(speedups, key=speedups.get)})")
-EOF
-    echo "=== distributed heterogeneous-SoC example (4 fake devices) ==="
+if [[ "$stage" == "all" || "$stage" == "examples" ]]; then
+    # Every example, smoke-sized, through the Simulation session API.
+    echo "=== example: quickstart (session Tx/Rx ports) ==="
+    python examples/quickstart.py
+    echo "=== example: heterogeneous SoC (4 fake devices) ==="
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         python examples/heterogeneous_soc.py
+    echo "=== example: systolic matmul (session run_until sweep) ==="
+    python examples/systolic_matmul.py --rows 4 --cols 4 --m 6
+    echo "=== example: wafer-scale tiered torus (8 fake devices) ==="
+    python examples/wafer_scale.py --rows 16 --cols 16
+    echo "=== example: train pipeline (tiny config, crash/restore) ==="
+    python examples/train_pipeline.py --smoke
 fi
 
 echo "CI OK"

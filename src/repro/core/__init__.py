@@ -11,6 +11,9 @@ engine backend.
   queue       SPSC ring buffers, single-cycle + epoch bulk ops (§III-B)
   block       ready/valid Block protocol + bridge semantics (§II-A)
   network     SbNetwork analogue; build(engine=...) entry point (§III-F)
+  session     Simulation facade: one reset/run/probe/tx/rx/save lifecycle
+              over every engine, host TxPort/RxPort queue handles,
+              monitors, checkpoints (DESIGN.md §4)
   graph       channel-graph IR + PartitionTree shared by every backend
               (DESIGN.md §1, §3)
   distributed epoch-batched shard_map GraphEngine (tiered per-tier sync
@@ -39,5 +42,8 @@ from .distributed import (
 )
 from .fastgrid import RegisterGridEngine
 from .fused import FusedEngine, FusedState
+from .session import (
+    DonatedStateError, Monitor, RxPort, Simulation, TxPort,
+)
 from .pipeline import Pipeline
 from . import packet, perfmodel

@@ -76,6 +76,7 @@ the sender's own future sends.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, Sequence
 
 import jax
@@ -350,6 +351,8 @@ class GraphEngine:
                ``prod(K_t .. K_inner)`` cycles.  Default: one tier spanning
                ``axes`` with rate ``K`` — the flat engine.
     """
+
+    engine_kind = "graph"
 
     def __init__(
         self,
@@ -828,7 +831,9 @@ class GraphEngine:
         donate: bool = True,
     ) -> GraphState:
         """Run epochs until ``done_fn(self._done_view(local))`` holds on
-        every granule.
+        every granule, or at most ``max_epochs`` MORE epochs from the
+        input state (a relative budget: the compiled loop is reusable
+        from any starting epoch, so interactive callers never retrace).
 
         For ``GraphEngine`` the view is the granule-local (squeezed)
         GraphState — padding slots are live in ``block_states``, mask with
@@ -851,12 +856,13 @@ class GraphEngine:
 
             def run(state):
                 local = _sq(state, self.nd)
+                e0 = local.epoch
 
                 # The global done flag is computed in the *body* and carried,
                 # so the while condition itself contains no collectives.
                 def cond(carry):
                     s, pending = carry
-                    return (pending > 0) & (s.epoch < max_epochs)
+                    return (pending > 0) & (s.epoch - e0 < max_epochs)
 
                 def body(carry):
                     s, _ = carry
@@ -865,9 +871,13 @@ class GraphEngine:
                     pending = jax.lax.psum(not_done, self.axes)
                     return s, pending
 
-                out, _ = jax.lax.while_loop(
-                    cond, body, (local, jnp.ones((), jnp.int32))
+                # An already-done state runs zero epochs, so chunked callers
+                # (the session's monitor cadence) can re-enter safely.
+                pending0 = jax.lax.psum(
+                    1 - done_fn(self._done_view(local)).astype(jnp.int32),
+                    self.axes,
                 )
+                out, _ = jax.lax.while_loop(cond, body, (local, pending0))
                 return _unsq(out, self.nd)
 
             self._jit_cache[key] = (
@@ -905,36 +915,63 @@ class GraphEngine:
         )
 
     # ---------------------- host-side external ports (PySbTx/PySbRx analogue)
+    # External channels are *homed* on the granule that owns their simulated
+    # endpoint (``ChannelGraph.ext_home``): host I/O touches only that
+    # granule's queue slab, wherever it sits on the mesh.  ``host_push``/
+    # ``host_pop`` (+ batched ``_many``) are the primitives the session's
+    # Tx/Rx ports drive at epoch boundaries; ``push_external``/
+    # ``pop_external`` remain as deprecation shims.
     def _ext_loc(self, cid: int) -> tuple[tuple[int, ...], int]:
         g = int(self._chan_owner[cid])
         didx = tuple(int(i) for i in np.unravel_index(g, self.dev_shape))
         lid = int(max(self._rx_local[cid], self._tx_local[cid]))
         return didx, lid
 
-    def push_external(self, state: GraphState, name: str, payload):
-        cid = self.graph.ext_in[name]
-        didx, lid = self._ext_loc(cid)
-        idx = didx + (lid,)
-        q = state.queues
-        buf, head, ok = qmod.push_single(
-            q.buf[idx], q.head[idx], q.tail[idx], q.capacity,
+    def _ext_idx(self, table: dict, name: str) -> tuple:
+        didx, lid = self._ext_loc(table[name])
+        return didx + (lid,)
+
+    def host_push(self, state: GraphState, name: str, payload):
+        q2, ok = qmod.host_push(
+            state.queues, self._ext_idx(self.graph.ext_in, name),
             jnp.asarray(payload, self.dtype),
         )
-        new_q = q.replace(
-            buf=q.buf.at[idx].set(buf), head=q.head.at[idx].set(head)
+        return state.replace(queues=q2), ok
+
+    def host_pop(self, state: GraphState, name: str):
+        q2, front, valid = qmod.host_pop(
+            state.queues, self._ext_idx(self.graph.ext_out, name)
         )
-        return state.replace(queues=new_q), ok
+        return state.replace(queues=q2), front, valid
+
+    def host_push_many(self, state: GraphState, name: str, payloads):
+        payloads = jnp.asarray(payloads, self.dtype).reshape(-1, self.W)
+        q2, n = qmod.host_push_many(
+            state.queues, self._ext_idx(self.graph.ext_in, name), payloads
+        )
+        return state.replace(queues=q2), n
+
+    def host_pop_many(self, state: GraphState, name: str, max_n: int):
+        q2, pays, cnt = qmod.host_pop_many(
+            state.queues, self._ext_idx(self.graph.ext_out, name), max_n
+        )
+        return state.replace(queues=q2), pays, cnt
+
+    def push_external(self, state: GraphState, name: str, payload):
+        warnings.warn(
+            "push_external is deprecated; use the Simulation session's "
+            "tx(name).send(...) (or engine.host_push)",
+            DeprecationWarning, stacklevel=2,
+        )
+        return self.host_push(state, name, payload)
 
     def pop_external(self, state: GraphState, name: str):
-        cid = self.graph.ext_out[name]
-        didx, lid = self._ext_loc(cid)
-        idx = didx + (lid,)
-        q = state.queues
-        front, tail, valid = qmod.pop_single(
-            q.buf[idx], q.head[idx], q.tail[idx], q.capacity
+        warnings.warn(
+            "pop_external is deprecated; use the Simulation session's "
+            "rx(name).recv() (or engine.host_pop)",
+            DeprecationWarning, stacklevel=2,
         )
-        new_q = q.replace(tail=q.tail.at[idx].set(tail))
-        return state.replace(queues=new_q), front, valid
+        return self.host_pop(state, name)
 
 
 class GridEngine(GraphEngine):

@@ -92,6 +92,8 @@ def _compact(slab, cnt, consumed, arrived, arrived_cnt):
 class RegisterGridEngine:
     """Drop-in alternative to GridEngine for the systolic app."""
 
+    engine_kind = "register"
+
     def __init__(self, R: int, C: int, mesh: Mesh, K: int, m_stream: int,
                  axis_r: str = "gr", axis_c: str = "gc"):
         self.R, self.C = R, C
@@ -226,6 +228,10 @@ class RegisterGridEngine:
         sh = NamedSharding(self.mesh, self._spec)
         return jax.tree.map(lambda x: jax.device_put(x, sh), state)
 
+    @property
+    def cycles_per_epoch(self) -> int:
+        return self.K
+
     # ----------------------------------------------------------------- epoch
     def _epoch(self, st: RegGridState) -> RegGridState:
         Tr, Tc, K = self.Tr, self.Tc, self.K
@@ -286,36 +292,24 @@ class RegisterGridEngine:
         return shard_map(run, mesh=self.mesh, in_specs=self._spec,
                          out_specs=self._spec, check_vma=False)
 
-    def run_until_done(
-        self, state: RegGridState, max_epochs: int, *, donate: bool = True
+    def run_epochs(
+        self, state: RegGridState, n_epochs: int, *, donate: bool = True
     ) -> RegGridState:
-        """Run epochs until every south cell collected all M outputs.
+        """Advance ``n_epochs`` epochs (K cycles each) — the uniform engine
+        entry point the ``Simulation`` session drives.
 
         ``donate=True`` (default) donates the state into the compiled loop
         (no per-call state copy); the input must not be reused after.
         """
-        key = ("until", max_epochs, donate)
+        key = ("epochs", n_epochs, donate)
         if key not in self._cache:
-            M = self.M
 
             def run(state):
                 local = _sq(state)
-
-                def cond(carry):
-                    s, pending = carry
-                    return (pending > 0) & (s.epoch < max_epochs)
-
-                def body(carry):
-                    s, _ = carry
-                    s = self._epoch(s)
-                    done = ((~s.cell["is_south"]) | (s.cell["y_idx"] >= M)).all()
-                    pending = jax.lax.psum(
-                        jax.lax.psum(1 - done.astype(jnp.int32), self.axis_r),
-                        self.axis_c,
-                    )
-                    return s, pending
-
-                out, _ = jax.lax.while_loop(cond, body, (local, jnp.ones((), jnp.int32)))
+                out = jax.lax.scan(
+                    lambda s, _: (self._epoch(s), None), local, None,
+                    length=n_epochs,
+                )[0]
                 return _unsq(out)
 
             self._cache[key] = jax.jit(
@@ -328,6 +322,91 @@ class RegisterGridEngine:
 
             state = _dealias_for_donation(state)
         return self._cache[key](state)
+
+    def run_until(
+        self,
+        state: RegGridState,
+        done_fn,
+        max_epochs: int,
+        *,
+        cache_key=None,
+        donate: bool = True,
+    ) -> RegGridState:
+        """Run epochs until ``done_fn(cell)`` holds on every granule (the
+        predicate sees the granule-local cell dict, leaves (Tr, Tc, ...)),
+        or at most ``max_epochs`` MORE epochs from the input state — the
+        same relative-budget contract as ``GraphEngine.run_until``.  An
+        already-done state runs zero epochs, so chunked (session) callers
+        can re-enter."""
+        anchor = cache_key if cache_key is not None else done_fn
+        key = ("until", id(anchor), max_epochs, donate)
+        if key not in self._cache:
+
+            def run(state):
+                local = _sq(state)
+                e0 = local.epoch
+
+                def pending_of(s):
+                    not_done = 1 - done_fn(s.cell).astype(jnp.int32)
+                    return jax.lax.psum(
+                        jax.lax.psum(not_done, self.axis_r), self.axis_c
+                    )
+
+                def cond(carry):
+                    s, pending = carry
+                    return (pending > 0) & (s.epoch - e0 < max_epochs)
+
+                def body(carry):
+                    s, _ = carry
+                    s = self._epoch(s)
+                    return s, pending_of(s)
+
+                out, _ = jax.lax.while_loop(cond, body, (local, pending_of(local)))
+                return _unsq(out)
+
+            self._cache[key] = (
+                anchor,  # strong ref: keeps the keyed id alive
+                jax.jit(
+                    shard_map(run, mesh=self.mesh, in_specs=self._spec,
+                              out_specs=self._spec, check_vma=False),
+                    donate_argnums=(0,) if donate else (),
+                ),
+            )
+        if donate:
+            from .distributed import _dealias_for_donation
+
+            state = _dealias_for_donation(state)
+        return self._cache[key][1](state)
+
+    def run_until_done(
+        self, state: RegGridState, max_epochs: int, *, donate: bool = True
+    ) -> RegGridState:
+        """Run epochs until every south cell collected all M outputs."""
+        M = self.M
+        return self.run_until(
+            state,
+            lambda cell: ((~cell["is_south"]) | (cell["y_idx"] >= M)).all(),
+            max_epochs,
+            cache_key="y_done",
+            donate=donate,
+        )
+
+    # -------------------------------------------------------- host utilities
+    def group_state(self, state: RegGridState, inst) -> dict:
+        """One cell's (unstacked) state leaves — the uniform probe surface
+        (``Simulation.probe``).  ``inst`` is the row-major instance id of
+        the cell (or an ``Instance``), matching the IR numbering every
+        other engine uses for the same grid."""
+        inst_id = inst if isinstance(inst, int) else inst.inst_id
+        r, c = divmod(int(inst_id), self.C)
+        didx = (r // self.Tr, c // self.Tc)
+        lr, lc = r % self.Tr, c % self.Tc
+        cell = jax.device_get(state.cell)
+        return {
+            k: v[didx + (lr, lc)]
+            for k, v in cell.items()
+            if np.ndim(v) >= 4  # per-cell leaves carry (Dr, Dc, Tr, Tc, ...)
+        }
 
     def result(self, state: RegGridState) -> np.ndarray:
         """Gather Y (M, C) from south-edge cells."""

@@ -113,6 +113,8 @@ class FusedEngine(GraphEngine):
     pallas_interpret: run the Pallas path in interpret mode (CPU CI).
     """
 
+    engine_kind = "fused"
+
     def __init__(
         self,
         graph: ChannelGraph,

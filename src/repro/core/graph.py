@@ -348,6 +348,31 @@ class ChannelGraph:
         dst_g = np.where(self.chan_dst >= 0, part[np.clip(self.chan_dst, 0, None)], -1)
         return src_g.astype(np.int32), dst_g.astype(np.int32)
 
+    def ext_ports(self) -> dict[str, tuple[int, bool]]:
+        """Unified external-port table: name -> (channel id, is_input).
+
+        ``is_input`` means the *host pushes* (an ``external_in`` port); the
+        session layer builds its Tx/Rx queue handles from this table so
+        every engine exposes the same host-port namespace.
+        """
+        ports = {name: (cid, True) for name, cid in self.ext_in.items()}
+        ports.update({name: (cid, False) for name, cid in self.ext_out.items()})
+        return ports
+
+    def ext_home(self, partition: np.ndarray) -> dict[str, int]:
+        """Granule that *homes* each external port under ``partition``.
+
+        An external channel has exactly one simulated endpoint (the other
+        end is the host, granule -1); its queue lives with that endpoint's
+        granule, so host I/O touches only the owning granule's slab — the
+        homing rule every distributed engine shares.
+        """
+        src_g, dst_g = self.channel_granules(partition)
+        owner = np.where(src_g >= 0, src_g, dst_g)
+        return {
+            name: int(owner[cid]) for name, (cid, _) in self.ext_ports().items()
+        }
+
     def summary(self) -> str:
         return (
             f"ChannelGraph({self.n_instances} instances in {len(self.groups)} "

@@ -8,9 +8,11 @@ Usage mirrors the paper's Listing 5::
     net.connect(a["out"], b["in"])          # internal channel
     host_in = net.external_in(a["in"])      # host -> network
     host_out = net.external_out(b["out"])   # network -> host
-    sim = net.build()                       # "single-netlist" simulator
-    state = sim.init(jax.random.key(0))
-    state = sim.run(state, 1000)            # jitted lax.scan over cycles
+    sim = net.build()                       # Simulation session (single engine)
+    sim.reset(jax.random.key(0))
+    sim.tx(host_in).send([1.0, 0.0])        # host queue handles (PySbTx/PySbRx)
+    sim.run(cycles=1000)                    # session owns + donates the state
+    print(sim.rx(host_out).recv())
 
 Key properties carried over from the paper:
 
@@ -25,12 +27,19 @@ Key properties carried over from the paper:
     sleep-based controller).
 
 The builder lowers to the **channel-graph IR** (``repro.core.graph``), and
-``build(engine=...)`` hands that IR to any backend (DESIGN.md §1):
+``build(engine=...)`` hands that IR to any backend (DESIGN.md §1, §4):
 
-    sim = net.build()                          # single-netlist NetworkSim
-    eng = net.build(engine="graph",            # distributed GraphEngine
+    sim = net.build()                          # single-netlist session
+    sim = net.build(engine="graph",            # distributed GraphEngine
                     mesh=mesh, partition=part, K=8)
-    eng = net.build(engine="register", ...)    # kernel-fused fast backend
+    sim = net.build(engine="register", ...)    # kernel-fused fast backend
+
+Every variant returns a ``session.Simulation`` facade with ONE lifecycle
+(``reset`` / ``run`` / ``probe`` / ``tx`` / ``rx`` / ``save`` / ``load``)
+regardless of the engine; the raw engine stays reachable as
+``sim.engine`` (or ``build(..., session=False)``), and the legacy
+``init(key)``/``run(state, n)``/``push_external`` surface keeps working
+through deprecation shims on the facade.
 
 ``NetworkSim`` (engine="single") interprets the whole IR as one pure
 ``step`` function, suitable for ``lax.scan`` and used as the cycle-accurate
@@ -39,6 +48,7 @@ ground truth for accuracy studies (Fig. 15).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -127,8 +137,12 @@ class Network:
         """Lower the builder state to the engine-agnostic channel-graph IR."""
         return ChannelGraph.from_network(self)
 
-    def build(self, engine: str = "single", **kw):
+    def build(self, engine: str = "single", session: bool = True, **kw):
         """Lower to the IR and construct the selected backend (DESIGN.md §4).
+
+        Returns a ``session.Simulation`` facade over the engine (the
+        uniform ``reset``/``run``/``probe``/``tx``/``rx``/``save``/``load``
+        lifecycle); pass ``session=False`` for the raw engine object.
 
         engine="single"    -> NetworkSim (this module); no extra kwargs.
         engine="graph"     -> distributed.GraphEngine; kwargs: mesh, K,
@@ -148,6 +162,14 @@ class Network:
         their own grid IR without a Network.)
         """
         graph = self.graph()
+        eng = self._build_engine(graph, engine, kw)
+        if session:
+            from .session import Simulation
+
+            return Simulation(eng)
+        return eng
+
+    def _build_engine(self, graph: ChannelGraph, engine: str, kw: dict):
         if engine == "single":
             if kw:
                 raise TypeError(f"engine='single' takes no kwargs, got {sorted(kw)}")
@@ -191,6 +213,9 @@ class NetworkSim:
 
     The step function is pure; ``run`` wraps it in ``jax.jit(lax.scan)``.
     """
+
+    engine_kind = "single"
+    cycles_per_epoch = 1  # host-sync granularity: every cycle is a boundary
 
     def __init__(self, graph: ChannelGraph):
         self.graph = graph
@@ -315,26 +340,99 @@ class NetworkSim:
             state = _dealias_for_donation(state)
         return self._jit_cache[key](state)
 
+    def run_until(
+        self,
+        state: NetworkState,
+        done_fn: Callable[[NetworkState], jax.Array],
+        max_cycles: int,
+        *,
+        cache_key: Any = None,
+        donate: bool = True,
+    ) -> NetworkState:
+        """Step until ``done_fn(state)`` holds, or at most ``max_cycles``
+        MORE cycles from the input state (a relative budget, mirroring the
+        engines' relative ``max_epochs`` — the compiled loop is reusable
+        from any starting cycle).  An already-done state runs zero cycles,
+        so chunked callers (the session's monitor cadence) can re-enter
+        safely.  Donation defaults on, matching ``GraphEngine.run_until``
+        (uniform engine protocol — ``run`` keeps its legacy donate=False).
+        Cache keying follows ``GraphEngine.run_until``: pass ``cache_key``
+        when the predicate is a fresh lambda per call."""
+        anchor = cache_key if cache_key is not None else done_fn
+        key = ("until", id(anchor), max_cycles, donate)
+        if key not in self._jit_cache:
+
+            def impl(st):
+                c0 = st.cycle
+
+                def cond(carry):
+                    s, pending = carry
+                    return (pending > 0) & (s.cycle - c0 < max_cycles)
+
+                def body(carry):
+                    s, _ = carry
+                    s = self.step(s)
+                    return s, 1 - done_fn(s).astype(jnp.int32)
+
+                pending0 = 1 - done_fn(st).astype(jnp.int32)
+                return jax.lax.while_loop(cond, body, (st, pending0))[0]
+
+            self._jit_cache[key] = (
+                anchor,  # strong ref: keeps the keyed id alive
+                jax.jit(impl, donate_argnums=(0,) if donate else ()),
+            )
+        if donate:
+            from .distributed import _dealias_for_donation
+
+            state = _dealias_for_donation(state)
+        return self._jit_cache[key][1](state)
+
     # -- host-side external port access (PySbTx / PySbRx analogue) -----------
-    def push_external(self, state: NetworkState, name: str, payload) -> tuple[NetworkState, jax.Array]:
-        cid = self.ext_in_chan[name]
-        q = state.queues
-        pp = jnp.zeros((self.n_channels, self.payload_words), self.dtype)
-        pp = pp.at[cid].set(jnp.asarray(payload, self.dtype))
-        pv = jnp.zeros((self.n_channels,), bool).at[cid].set(True)
-        pr = jnp.zeros((self.n_channels,), bool)
-        q2, did_push, _ = qmod.cycle(q, pp, pv, pr)
-        return state.replace(queues=q2), did_push[cid]
+    # ``host_push``/``host_pop`` (+ batched ``_many``) are the engine-level
+    # primitives the session Tx/Rx ports drive; the historical
+    # ``push_external``/``pop_external`` names remain as deprecation shims.
+    def host_push(self, state: NetworkState, name: str, payload) -> tuple[NetworkState, jax.Array]:
+        q2, ok = qmod.host_push(
+            state.queues, self.ext_in_chan[name],
+            jnp.asarray(payload, self.dtype),
+        )
+        return state.replace(queues=q2), ok
+
+    def host_pop(self, state: NetworkState, name: str):
+        q2, front, valid = qmod.host_pop(state.queues, self.ext_out_chan[name])
+        return state.replace(queues=q2), front, valid
+
+    def host_push_many(self, state: NetworkState, name: str, payloads):
+        """Batched push: up to ``free`` packets land, the rest are refused
+        (count returned).  payloads: (k, W)."""
+        payloads = jnp.asarray(payloads, self.dtype).reshape(-1, self.payload_words)
+        q2, n = qmod.host_push_many(
+            state.queues, self.ext_in_chan[name], payloads
+        )
+        return state.replace(queues=q2), n
+
+    def host_pop_many(self, state: NetworkState, name: str, max_n: int):
+        """Batched pop: returns (state, payloads (max_n, W), count)."""
+        q2, pays, cnt = qmod.host_pop_many(
+            state.queues, self.ext_out_chan[name], max_n
+        )
+        return state.replace(queues=q2), pays, cnt
+
+    def push_external(self, state: NetworkState, name: str, payload):
+        warnings.warn(
+            "push_external is deprecated; use the Simulation session's "
+            "tx(name).send(...) (or engine.host_push)",
+            DeprecationWarning, stacklevel=2,
+        )
+        return self.host_push(state, name, payload)
 
     def pop_external(self, state: NetworkState, name: str):
-        cid = self.ext_out_chan[name]
-        q = state.queues
-        fronts, valids = qmod.peek(q)
-        pr = jnp.zeros((self.n_channels,), bool).at[cid].set(True)
-        pp = jnp.zeros((self.n_channels, self.payload_words), self.dtype)
-        pv = jnp.zeros((self.n_channels,), bool)
-        q2, _, did_pop = qmod.cycle(q, pp, pv, pr)
-        return state.replace(queues=q2), fronts[cid], did_pop[cid]
+        warnings.warn(
+            "pop_external is deprecated; use the Simulation session's "
+            "rx(name).recv() (or engine.host_pop)",
+            DeprecationWarning, stacklevel=2,
+        )
+        return self.host_pop(state, name)
 
     def group_state(self, state: NetworkState, inst: Instance | int):
         """Extract one instance's (unstacked) state from the network state."""

@@ -152,6 +152,86 @@ def pop_single(buf, head, tail, capacity):
     return front, jnp.where(valid, (tail + 1) % capacity, tail), valid
 
 
+def fill_single(buf, head, tail, capacity, payloads):
+    """Push up to ``len(payloads)`` packets into one queue (host batch I/O).
+
+    payloads: (k, W) with k <= capacity-1.  Packets beyond the queue's free
+    space are NOT written (the host-side caller keeps them buffered — the
+    session's host-tier "credit").  Returns (buf, head, n_pushed).
+    """
+    k = payloads.shape[0]
+    if k > capacity - 1:
+        raise ValueError(f"fill_single: {k} packets > capacity-1={capacity - 1}")
+    n_free = (capacity - 1) - (head - tail) % capacity
+    count = jnp.minimum(jnp.int32(k), n_free.astype(jnp.int32))
+    offs = jnp.arange(k, dtype=jnp.int32)
+    idx = (head + offs) % capacity
+    cur = buf[idx]
+    rows = jnp.where((offs < count)[:, None], payloads, cur)
+    buf = buf.at[idx].set(rows, mode="promise_in_bounds", unique_indices=True)
+    return buf, (head + count) % capacity, count
+
+
+def drain_single(buf, head, tail, capacity, max_n: int):
+    """Pop up to ``max_n`` packets from one queue (host batch I/O).
+
+    Returns (payloads (max_n, W), tail, count); rows beyond ``count`` are
+    stale and must be masked by the caller.
+    """
+    n_avail = (head - tail) % capacity
+    count = jnp.minimum(n_avail, max_n).astype(jnp.int32)
+    offs = jnp.arange(max_n, dtype=jnp.int32)
+    idx = (tail + offs) % capacity
+    return buf[idx], (tail + count) % capacity, count
+
+
+# --------------------------------------------------------------------------
+# Host-port operations on one queue of a QueueArray, addressed by ``idx``
+# (an int row for the single netlist, a (dev..., local) tuple for the
+# distributed engines).  Every engine's external-port surface routes
+# through these four, so the ring/truncation logic lives exactly once.
+# --------------------------------------------------------------------------
+
+def host_push(q: QueueArray, idx, payload):
+    """Push one packet into queue ``idx``.  Returns (queues, did_push)."""
+    buf, head, ok = push_single(
+        q.buf[idx], q.head[idx], q.tail[idx], q.capacity, payload
+    )
+    return q.replace(
+        buf=q.buf.at[idx].set(buf), head=q.head.at[idx].set(head)
+    ), ok
+
+
+def host_pop(q: QueueArray, idx):
+    """Pop queue ``idx``'s front.  Returns (queues, front, valid)."""
+    front, tail, valid = pop_single(
+        q.buf[idx], q.head[idx], q.tail[idx], q.capacity
+    )
+    return q.replace(tail=q.tail.at[idx].set(tail)), front, valid
+
+
+def host_push_many(q: QueueArray, idx, payloads):
+    """Batched push into queue ``idx``: what fits lands, the rest is
+    refused (count returned) — oversize batches are truncated to the ring
+    maximum of capacity-1, never an error.  Returns (queues, n_pushed)."""
+    payloads = payloads[: q.capacity - 1]
+    buf, head, n = fill_single(
+        q.buf[idx], q.head[idx], q.tail[idx], q.capacity, payloads
+    )
+    return q.replace(
+        buf=q.buf.at[idx].set(buf), head=q.head.at[idx].set(head)
+    ), n
+
+
+def host_pop_many(q: QueueArray, idx, max_n: int):
+    """Batched pop from queue ``idx``.  Returns (queues, payloads
+    (max_n, W), count); rows beyond count are stale."""
+    pays, tail, cnt = drain_single(
+        q.buf[idx], q.head[idx], q.tail[idx], q.capacity, max_n
+    )
+    return q.replace(tail=q.tail.at[idx].set(tail)), pays, cnt
+
+
 # --------------------------------------------------------------------------
 # Epoch (bulk) operations — used by the distributed exchange. These move up
 # to ``max_n`` packets in one fused op, amortizing inter-device traffic over

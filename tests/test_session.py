@@ -1,0 +1,531 @@
+"""Simulation session facade: one lifecycle over all four engines
+(DESIGN.md §4; the paper's PySbTx/PySbRx + PyMonitor surface).
+
+Covered here:
+
+  * host-I/O parity: a pseudo-random external-port send/recv script
+    produces bit-identical traffic on ``single``, ``graph`` and ``fused``
+    sessions (the engines whose IR admits external channels), in-process
+    and on a 4-device mesh where the external ports' home granule is NOT
+    granule 0 (``ChannelGraph.ext_home``);
+  * the scripted interactive scenario: host feeds packets in, drains
+    results, checkpoints mid-run, resumes — bit-identical to the
+    uninterrupted run;
+  * the four-engine scenario: the same systolic network driven through
+    the identical session lifecycle (reset / run(until) / probe /
+    save / load / resume) on ``single`` | ``graph`` | ``fused`` |
+    ``register`` with bit-identical results.  (The register engine's IR
+    domain has no external ports by construction — ``from_graph`` rejects
+    them, steering host-I/O designs to ``fused`` — so the Tx/Rx half of
+    the scenario runs on the other three.)
+  * donated-state guard, deprecation shims, monitors/stats, Tx
+    backpressure through the host-tier pending buffer.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Block, DonatedStateError, Network, Simulation,
+)
+from repro.core.compat import make_mesh
+from repro.core.struct import pytree_dataclass
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+EXAMPLES = os.path.join(os.path.dirname(__file__), "..", "examples")
+
+
+# ---------------------------------------------------------------- helpers
+@pytree_dataclass
+class IncState:
+    count: jax.Array
+
+
+class Increment(Block):
+    in_ports = ("to_rtl",)
+    out_ports = ("from_rtl",)
+    payload_words = 2
+
+    def init_state(self, key):
+        return IncState(count=jnp.zeros((), jnp.int32))
+
+    def step(self, state, rx, tx_ready):
+        (pay, valid) = rx["to_rtl"]
+        fire = valid & tx_ready["from_rtl"]
+        return (
+            state.replace(count=state.count + fire.astype(jnp.int32)),
+            {"to_rtl": fire},
+            {"from_rtl": (pay.at[0].add(1.0), fire)},
+        )
+
+
+def build_chain(n=3, capacity=4):
+    net = Network(payload_words=2, capacity=capacity)
+    blk = Increment()
+    insts = [net.instantiate(blk, name=f"b{i}") for i in range(n)]
+    net.external_in(insts[0]["to_rtl"], "tx")
+    for a, b in zip(insts, insts[1:]):
+        net.connect(a["from_rtl"], b["to_rtl"])
+    net.external_out(insts[-1]["from_rtl"], "rx")
+    return net
+
+
+def io_script(sim, n_steps=24, seed=0):
+    """Deterministic pseudo-random host send/recv script.  Returns the
+    observable trace: per boundary, (packets drained, payloads)."""
+    rng = np.random.RandomState(seed)
+    tx, rx = sim.tx("tx"), sim.rx("rx")
+    trace = []
+    for step in range(n_steps):
+        k = int(rng.randint(0, 3))
+        if k:
+            tx.send_many([[100.0 * step + j, float(step)] for j in range(k)])
+        sim.run(cycles=sim.period)
+        got = rx.drain()
+        trace.append(np.asarray(got))
+    # run to quiescence, drain the stragglers
+    sim.run(cycles=16 * sim.period)
+    trace.append(np.asarray(rx.drain()))
+    return trace
+
+
+def _sessions_k1(capacity=2):
+    """K=1 sessions of the same chain on every ext-port-capable engine.
+
+    capacity=2 by default: the fused engine's depth-1 registers are
+    *cycle*-identical to SPSC queues exactly at capacity 2 (fused.py
+    contract), which is what per-boundary traffic equality needs; at
+    deeper capacities fused guarantees identical packet *sequences*, not
+    identical cycles (covered by the quiescent-parity test)."""
+    mesh = make_mesh((1,), ("gx",))
+    return {
+        "single": build_chain(capacity=capacity).build(),
+        "graph": build_chain(capacity=capacity).build(
+            engine="graph", mesh=mesh, K=1),
+        "fused": build_chain(capacity=capacity).build(
+            engine="fused", mesh=mesh, K=1),
+    }
+
+
+# --------------------------------------------------------- host-I/O parity
+def test_host_io_parity_cycle_accurate():
+    """K=1 sessions: the per-boundary traffic (counts AND payloads) of a
+    random send/recv script is bit-identical across engines."""
+    traces = {}
+    for name, sim in _sessions_k1().items():
+        sim.reset(0)
+        traces[name] = io_script(sim)
+    ref = traces.pop("single")
+    for name, tr in traces.items():
+        assert len(tr) == len(ref)
+        for i, (a, b) in enumerate(zip(ref, tr)):
+            np.testing.assert_array_equal(
+                a, b, err_msg=f"{name} boundary {i} traffic differs"
+            )
+    # something actually flowed
+    assert sum(len(t) for t in ref) > 5
+
+
+@pytest.mark.parametrize("k_epoch", [2, 5])
+def test_host_io_parity_quiescent_any_k(k_epoch):
+    """K>1 sessions: boundary timing shifts, but the drained packet
+    sequence per port is identical after quiescence (latency-insensitive
+    contract, extended to the host tier)."""
+    mesh = make_mesh((1,), ("gx",))
+    payloads = [[float(10 * j + 1), float(j)] for j in range(7)]
+
+    def run_one(sim):
+        # interactive host loop: keep running and draining (the rx queue
+        # backpressures the chain, so a one-shot run would stall it)
+        sim.reset(0)
+        sim.tx("tx").send_many(payloads)
+        got = []
+        for _ in range(20):
+            sim.run(cycles=5 * k_epoch)
+            got.extend(np.asarray(sim.rx("rx").drain()))
+            if len(got) == len(payloads) and sim.tx("tx").pending == 0:
+                break
+        assert sim.tx("tx").pending == 0
+        return np.asarray(got)
+
+    ref = run_one(build_chain().build())
+    for engine in ("graph", "fused"):
+        got = run_one(
+            build_chain().build(engine=engine, mesh=mesh, K=k_epoch)
+        )
+        np.testing.assert_array_equal(ref, got)
+    assert len(ref) == 7
+
+
+def test_host_io_parity_multidevice_nonzero_home():
+    """4-granule mesh with the chain reversed over granules: the ext-in
+    port homes on granule 3, ext-out on granule 1 — host I/O must route to
+    the owning granule's queue slab and stay bit-identical to the
+    single-netlist session."""
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from repro.core import Simulation
+        from repro.core.compat import make_mesh
+        import sys; sys.path.insert(0, {testdir!r})
+        from test_session import build_chain, io_script
+
+        net = build_chain(4, capacity=2)
+        part = {{"b0": 3, "b1": 2, "b2": 2, "b3": 1}}
+        g = net.graph()
+        homes = g.ext_home(
+            np.array([3, 2, 2, 1]))
+        assert homes == {{"tx": 3, "rx": 1}}, homes
+
+        ref_sim = build_chain(4, capacity=2).build()
+        ref_sim.reset(0)
+        ref = io_script(ref_sim, n_steps=16)
+
+        mesh = make_mesh((4,), ("gx",))
+        for engine in ("graph", "fused"):
+            sim = build_chain(4, capacity=2).build(
+                engine=engine, mesh=mesh, partition=part, K=1)
+            assert sim.engine._chan_owner[g.ext_in["tx"]] == 3
+            sim.reset(0)
+            tr = io_script(sim, n_steps=16)
+            assert len(tr) == len(ref)
+            for a, b in zip(ref, tr):
+                np.testing.assert_array_equal(a, b)
+        print("MULTIDEV-HOST-IO-OK")
+    """).format(testdir=os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "MULTIDEV-HOST-IO-OK" in out.stdout
+
+
+# ---------------------------------------- interactive scenario + checkpoint
+def _interactive(sim, ckpt_dir=None, resume_from=None):
+    """The scripted interactive scenario: feed packets, advance, optionally
+    checkpoint mid-run (or resume from one), drain results."""
+    if resume_from is None:
+        sim.reset(0)
+        sim.tx("tx").send_many([[v, 0.0] for v in (10.0, 20.0, 30.0)])
+        sim.run(cycles=8)
+        if ckpt_dir is not None:
+            sim.save(ckpt_dir)
+    else:
+        sim.reset(0)
+        sim.load(resume_from)
+    sim.tx("tx").send_many([[v, 1.0] for v in (40.0, 50.0)])
+    out = []
+    for _ in range(5):  # run/drain loop: the rx queue backpressures
+        sim.run(cycles=10)
+        out.extend(np.asarray(sim.rx("rx").drain()))
+    counts = [int(np.asarray(sim.probe(i).count)) for i in range(3)]
+    return np.asarray(out), counts, sim.cycle
+
+
+@pytest.mark.parametrize("engine", ["single", "graph", "fused"])
+def test_interactive_checkpoint_resume(engine, tmp_path):
+    """Host feeds packets, checkpoints mid-run, resumes in a FRESH session:
+    the resumed run is bit-identical to the uninterrupted one — on every
+    external-port-capable engine."""
+    mesh = make_mesh((1,), ("gx",))
+    kw = {} if engine == "single" else {"mesh": mesh, "K": 2}
+    ckpt = str(tmp_path / f"ckpt_{engine}")
+
+    out_full, counts_full, cyc_full = _interactive(
+        build_chain().build(engine=engine, **kw), ckpt_dir=ckpt
+    )
+    out_res, counts_res, cyc_res = _interactive(
+        build_chain().build(engine=engine, **kw), resume_from=ckpt
+    )
+    np.testing.assert_array_equal(out_full, out_res)
+    assert counts_full == counts_res == [5, 5, 5]
+    assert cyc_full == cyc_res
+    assert out_full.shape[0] == 5  # all five packets incremented out
+    np.testing.assert_array_equal(
+        np.sort(out_full[:, 0]), [13.0, 23.0, 33.0, 43.0, 53.0]
+    )
+
+
+def test_interactive_traffic_identical_across_engines(tmp_path):
+    """The full scenario (send, mid-run checkpoint, send more, drain)
+    yields bit-identical traffic on single/graph/fused at K=1."""
+    outs = {}
+    for name, sim in _sessions_k1().items():
+        out, counts, cyc = _interactive(
+            sim, ckpt_dir=str(tmp_path / f"c_{name}")
+        )
+        outs[name] = (out, counts)
+    ref_out, ref_counts = outs.pop("single")
+    for name, (out, counts) in outs.items():
+        np.testing.assert_array_equal(ref_out, out, err_msg=name)
+        assert counts == ref_counts
+
+
+def test_scenario_all_four_engines(tmp_path):
+    """The SAME systolic network through the identical session lifecycle
+    (reset / run(until) / probe / save / load / resume) on all four
+    engines — results bit-identical everywhere.  (The register engine's IR
+    domain excludes external ports, so its scenario is probe/checkpoint
+    rather than host Tx/Rx — see the module docstring.)"""
+    from repro.hw.systolic import make_systolic_network
+
+    rng = np.random.RandomState(3)
+    M, K, N = 6, 4, 4
+    A = rng.randn(M, K).astype(np.float32)
+    B = rng.randn(K, N).astype(np.float32)
+
+    def build(engine):
+        net, _ = make_systolic_network(A, B)
+        if engine == "single":
+            return net.build()
+        if engine == "register":
+            return net.build(engine="register",
+                             mesh=make_mesh((1, 1), ("gr", "gc")), K=4)
+        return net.build(engine=engine, mesh=make_mesh((1,), ("gx",)), K=4)
+
+    def done_for(sim):
+        if sim.kind == "single":
+            return lambda s: ((~s.block_states[0].is_south)
+                              | (s.block_states[0].y_idx >= M)).all()
+        if sim.kind == "register":
+            return lambda cell: ((~cell["is_south"])
+                                 | (cell["y_idx"] >= M)).all()
+        return lambda s: ((~s.block_states[0].is_south)
+                          | (s.block_states[0].y_idx >= M)).all()
+
+    def result_of(sim):
+        if sim.kind == "register":
+            return np.asarray(sim.engine.result(sim.state))
+        cols = [sim.probe((K - 1) * N + c) for c in range(N)]
+        return np.stack(
+            [np.asarray(c["y_buf"] if isinstance(c, dict) else c.y_buf)
+             for c in cols], axis=1)
+
+    results, resumed = {}, {}
+    for engine in ("single", "graph", "fused", "register"):
+        sim = build(engine)
+        sim.reset(0)
+        sim.run(cycles=12)                      # phase 1
+        ckpt = str(tmp_path / f"sys_{engine}")
+        sim.save(ckpt)
+        probe_mid = sim.probe(0)                # live state tap mid-run
+        a_idx = probe_mid["a_idx"] if isinstance(probe_mid, dict) \
+            else probe_mid.a_idx
+        assert int(np.asarray(a_idx)) > 0       # the stream has started
+        sim.run(until=done_for(sim), max_epochs=100_000, cache_key="done")
+        results[engine] = result_of(sim)
+
+        sim2 = build(engine)                    # resume in a fresh session
+        sim2.reset(0)
+        sim2.load(ckpt)
+        assert sim2.cycle == 12
+        sim2.run(until=done_for(sim2), max_epochs=100_000, cache_key="done")
+        resumed[engine] = result_of(sim2)
+
+    for engine in ("graph", "fused", "register"):
+        np.testing.assert_array_equal(
+            results["single"], results[engine],
+            err_msg=f"{engine} diverged from the single netlist",
+        )
+    for engine, got in resumed.items():
+        np.testing.assert_array_equal(
+            results[engine], got,
+            err_msg=f"{engine} checkpoint resume diverged",
+        )
+    np.testing.assert_allclose(results["single"], A @ B, rtol=1e-4)
+
+
+# ----------------------------------------------- donation guard + shims
+def test_donated_state_guard():
+    """Legacy engine-state threading with the default donate=True poisons
+    the input: reuse raises DonatedStateError, not an XLA crash."""
+    eng = build_chain().build(engine="graph",
+                              mesh=make_mesh((1,), ("gx",)), K=2)
+    with pytest.warns(DeprecationWarning):
+        st = eng.init(jax.random.key(0))
+        st2 = eng.run_epochs(st, 3)
+    with pytest.raises(DonatedStateError, match="donated to run_epochs"):
+        np.asarray(st.cycle)
+    with pytest.raises(DonatedStateError, match="pass donate=False"):
+        st.queues.buf  # any use of a poisoned field raises
+    # donate=False keeps the input alive
+    with pytest.warns(DeprecationWarning):
+        st3 = eng.run_epochs(st2, 2, donate=False)
+    assert int(np.asarray(st2.cycle).ravel()[0]) == 6
+    assert int(np.asarray(st3.cycle).ravel()[0]) == 10
+
+
+def test_legacy_shims_still_work():
+    """The pre-session surface keeps working through the facade, with
+    DeprecationWarnings."""
+    sim = build_chain().build()
+    with pytest.warns(DeprecationWarning):
+        st = sim.init(jax.random.key(0))
+        st, ok = sim.push_external(st, "tx", jnp.array([5.0, 0.0]))
+        assert bool(ok)
+        st = sim.run(st, 8)
+        st, pay, valid = sim.pop_external(st, "rx")
+    assert bool(valid) and float(pay[0]) == 8.0
+    # engine attribute delegation (the raw engine surface stays reachable)
+    assert sim.graph.n_channels == 6
+    assert sim.engine.engine_kind == "single"
+
+
+# ------------------------------------------------- ports/monitors/stats
+def test_tx_backpressure_via_host_tier():
+    """More packets than the external queue holds: the overflow waits in
+    the host-side buffer (the host tier's credit) and is flushed at run
+    boundaries — nothing is dropped, order preserved."""
+    sim = build_chain(2, capacity=4).build()  # queue holds 3 packets
+    sim.reset(0)
+    tx = sim.tx("tx")
+    n_now = tx.send_many([[float(i), 0.0] for i in range(8)])
+    assert n_now == 3 and tx.pending == 5
+    out = []
+    for _ in range(6):  # rx backpressures too: run/drain like a real host
+        sim.run(cycles=10)
+        out.extend(np.asarray(sim.rx("rx").drain()))
+    assert tx.pending == 0 and tx.sent == 8
+    np.testing.assert_array_equal(np.asarray(out)[:, 0], np.arange(8) + 2.0)
+
+
+def test_monitors_and_stats():
+    sim = build_chain().build(engine="graph",
+                              mesh=make_mesh((1,), ("gx",)), K=2)
+    sim.reset(0)
+    sim.tx("tx").send([1.0, 0.0])
+    seen = []
+    mon = sim.add_monitor(lambda s: seen.append(s.cycle), every=2)
+    sim.run(cycles=12)
+    assert seen == [4, 8, 12]
+    assert mon.samples == 3
+    st = sim.stats()
+    assert st["cycle"] == 12 and st["engine"] == "graph"
+    assert st["ports"]["tx"]["tx"]["sent"] == 1  # direction, then port name
+    mon.remove()
+    sim.run(cycles=4)
+    assert seen == [4, 8, 12]  # removed monitors stay silent
+    # non-dividing cadences: boundaries land on the gcd, each monitor
+    # fires at every multiple of its own `every`
+    sim2 = build_chain().build(engine="graph",
+                               mesh=make_mesh((1,), ("gx",)), K=1)
+    sim2.reset(0)
+    twos, threes = [], []
+    sim2.add_monitor(lambda s: twos.append(s.epoch), every=2)
+    sim2.add_monitor(lambda s: threes.append(s.epoch), every=3)
+    sim2.run(epochs=12)
+    assert twos == [2, 4, 6, 8, 10, 12]
+    assert threes == [3, 6, 9, 12]
+    # single engine additionally reports per-channel handshake counters
+    s1 = build_chain().build().reset(0)
+    s1.tx("tx").send([1.0, 0.0])
+    s1.run(cycles=10)
+    assert int(s1.stats()["push_count"].sum()) >= 3
+
+
+def test_session_basics_and_errors():
+    sim = build_chain().build()
+    with pytest.raises(RuntimeError, match="reset"):
+        sim.run(cycles=1)
+    sim.reset(0)
+    with pytest.raises(KeyError, match="external-in"):
+        sim.tx("nope")
+    with pytest.raises(TypeError, match="cycles/epochs/until"):
+        sim.run(cycles=1, epochs=1)
+    assert sim.cycle == 0 and sim.epoch == 0
+    sim.run(cycles=7)
+    assert sim.cycle == 7
+    # reset clears port counters
+    sim.tx("tx").send([1.0, 0.0])
+    sim.reset(0)
+    assert sim.tx("tx").sent == 0 and sim.cycle == 0
+
+
+def test_monitor_cadence_survives_chunked_runs():
+    """Cadence counts on the global boundary index: ten run(epochs=1)
+    calls sample exactly like one run(epochs=10)."""
+    sim = build_chain().build(engine="graph",
+                              mesh=make_mesh((1,), ("gx",)), K=1)
+    sim.reset(0)
+    seen = []
+    sim.add_monitor(lambda s: seen.append(s.epoch), every=2)
+    for _ in range(10):
+        sim.run(epochs=1)
+    assert seen == [2, 4, 6, 8, 10]
+
+
+def test_until_stop_point_invariant_to_monitors():
+    """An attached monitor must not change where run(until=...) stops —
+    the chunked path checks the predicate every epoch, like the compiled
+    while-loop."""
+    def run_one(with_monitor):
+        sim = build_chain().build(engine="graph",
+                                  mesh=make_mesh((1,), ("gx",)), K=1)
+        sim.reset(0)
+        if with_monitor:
+            sim.add_monitor(lambda s: None, every=4)
+        sim.tx("tx").send([1.0, 0.0])
+        sim.run(until=lambda s: (s.block_states[0].count >= 1).all(),
+                max_epochs=50, cache_key="c1")
+        return sim.cycle
+
+    assert run_one(False) == run_one(True)
+
+
+def test_run_cycles_shim():
+    eng = build_chain().build(engine="graph",
+                              mesh=make_mesh((1,), ("gx",)), K=2)
+    with pytest.warns(DeprecationWarning):
+        st = eng.init(jax.random.key(0))
+        st2 = eng.run_cycles(st, 5)  # rounds up to 3 epochs = 6 cycles
+    assert int(np.asarray(st2.cycle).ravel()[0]) == 6
+    with pytest.raises(DonatedStateError):
+        np.asarray(st.cycle)
+
+
+def test_until_budget_is_relative_no_retrace():
+    """run(until=...) budgets are relative, so interactive loops reuse ONE
+    compiled while-loop regardless of the starting cycle (no per-call
+    retrace, no cache growth)."""
+    sim = build_chain().build(engine="graph",
+                              mesh=make_mesh((1,), ("gx",)), K=2)
+    sim.reset(0)
+    pred = lambda s: (s.block_states[0].count >= 1).all()  # noqa: E731
+    for v in (1.0, 2.0, 3.0):
+        sim.tx("tx").send([v, 0.0])
+        sim.run(until=pred, max_epochs=50, cache_key="p")
+        sim.rx("rx").drain()
+    until_keys = [k for k in sim.engine._jit_cache if k[0] == "until"]
+    assert len(until_keys) == 1, until_keys
+    assert sim.cycle > 0
+
+
+def test_engine_host_push_many_oversize_batch():
+    """The engine-level batched push lands what fits and refuses the rest
+    (count returned) — it must not crash on batches >= capacity."""
+    for engine, kw in (
+        ("single", {}),
+        ("graph", {"mesh": make_mesh((1,), ("gx",)), "K": 1}),
+    ):
+        sim = build_chain(capacity=4).build(engine=engine, **kw)
+        sim.reset(0)
+        st, n = sim.engine.host_push_many(
+            sim.state, "tx", [[float(i), 0.0] for i in range(6)]
+        )
+        assert int(n) == 3  # capacity-1 slots, queue was empty
+
+
+def test_ext_home_table():
+    g = build_chain(3).graph()
+    assert g.ext_ports() == {"tx": (4, True), "rx": (5, False)}
+    homes = g.ext_home(np.array([2, 0, 1]))
+    assert homes == {"tx": 2, "rx": 1}
