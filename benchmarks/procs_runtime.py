@@ -1,0 +1,169 @@
+"""Free-running multiprocess runtime: the paper's two headline numbers
+(§IV; DESIGN.md §Runtime).
+
+1. **Build time vs instance count** (paper Fig. 13, multiprocess
+   edition): a uniform ring of N ``PipeStage`` instances, one per worker.
+   Every granule has the same compiled shape, so the launcher's
+   prebuilt-simulator cache compiles ONE signature however many workers
+   exist — build time is flat in instance count (the gate:
+   N=16 builds in <= 2x the 1-instance time).  A warm-cache rebuild row
+   shows the JAX persistent compilation cache amortizing across
+   *engines/processes* as well.
+
+2. **Free-running throughput**: a manycore torus allreduce on a 4-worker
+   fleet (real OS processes over shm rings, no global barrier) vs the
+   same scenario on the in-process GraphEngine — the honest cost of
+   process isolation on a small host.  The smoke gate only requires the
+   fleet to beat a sanity floor (deadlocks/pathologies fail fast); the
+   ratio itself is the recorded trajectory number.
+
+Rows (schema repro-bench-v1):
+    procs_build_n{N}          engine construction incl. AOT prebuild
+    procs_build_amortization  t(N=16) / t(N=1)   (gate: <= 2.0)
+    procs_build_warm16        rebuild against a warm persistent cache
+    procs_throughput_{RxC}    core-cycles/s on the 4-worker fleet
+    procs_vs_graph_{RxC}      procs / in-process-graph throughput ratio
+"""
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from .common import emit
+from repro.core import Simulation
+from repro.core.graph import ChannelGraph, tiered_grid_partition
+from repro.hw.manycore import (
+    ManycoreCell, allreduce_done, expected_total, make_core_params,
+)
+from repro.hw.pipestage import make_ring
+
+
+def _build_engine_seconds(n: int, cache_dir: str) -> tuple[float, dict]:
+    """Construct (prebuild only, no spawn) a ProcsEngine for an n-stage
+    ring over n workers; return (seconds, build_stats)."""
+    from repro.runtime.launcher import ProcsEngine
+
+    net = make_ring(n, capacity=8)
+    graph = net.graph()
+    t0 = time.perf_counter()
+    eng = ProcsEngine(
+        graph, list(range(n)), n_workers=n, K=4, cache_dir=cache_dir,
+    )
+    dt = time.perf_counter() - t0
+    stats = dict(eng.build_stats)
+    eng.close()
+    return dt, stats
+
+
+def bench_build(smoke: bool = False) -> None:
+    sizes = (1, 4, 16)
+    times: dict[int, float] = {}
+    cache = tempfile.mkdtemp(prefix="procs_bench_cache_")
+    for n in sizes:
+        # fresh cache per size: each measurement pays its own first
+        # compile; amortization must come from the signature dedup alone
+        dt, stats = _build_engine_seconds(n, tempfile.mkdtemp(
+            prefix="procs_bench_cold_"))
+        times[n] = dt
+        emit(
+            f"procs_build_n{n}", dt * 1e6,
+            f"{dt:.2f}s build: {n} instances of 1 block -> {n} workers, "
+            f"{stats['n_signatures']} signature(s) compiled "
+            f"({stats['prebuild_seconds']:.2f}s AOT)",
+        )
+    ratio = times[16] / max(times[1], 1e-9)
+    emit(
+        "procs_build_amortization", ratio,
+        f"16-instance build = {ratio:.2f}x the 1-instance build "
+        "(prebuilt-simulator cache: compile per unique granule shape, "
+        "not per instance; gate <= 2.0)",
+    )
+    # warm persistent cache: a second engine (fresh process would behave
+    # the same — the cache is on disk) rebuilds the same signature
+    t_cold, _ = _build_engine_seconds(16, cache)
+    t_warm, _ = _build_engine_seconds(16, cache)
+    emit(
+        "procs_build_warm16", t_warm * 1e6,
+        f"warm persistent-cache rebuild {t_warm:.2f}s vs cold "
+        f"{t_cold:.2f}s ({t_cold / max(t_warm, 1e-9):.1f}x)",
+    )
+
+
+def _wafer_scenario(R: int, C: int, K: int, capacity: int = 6):
+    values = (np.arange(R * C, dtype=np.int64) % 7 + 1).astype(np.float32)
+    graph = ChannelGraph.torus(
+        ManycoreCell(R, C), R, C,
+        params=make_core_params(values.reshape(R, C)), capacity=capacity,
+    )
+    part = tiered_grid_partition(R, C, [(2, 2)])
+    return graph, part, values
+
+
+def _run_epochs_timed(sim, epochs: int) -> float:
+    # warm with the SAME epoch count: the engines' compiled-run cache is
+    # keyed by scan length, so a different warmup length would leave the
+    # measured call paying its own compile
+    sim.run(epochs=epochs)
+    sim.block_until_ready()
+    t0 = time.perf_counter()
+    sim.run(epochs=epochs)
+    sim.block_until_ready()
+    return time.perf_counter() - t0
+
+
+def bench_throughput(smoke: bool = False, full: bool = False) -> None:
+    from repro.core.compat import make_mesh
+    from repro.core.distributed import GraphEngine
+    from repro.runtime.launcher import ProcsEngine
+
+    R = C = 8 if smoke or not full else 16
+    K = 8
+    epochs = 6 if smoke else 24
+    graph, part, values = _wafer_scenario(R, C, K)
+
+    # in-process baseline: the same IR/partition on GraphEngine (1 device)
+    mesh = make_mesh((1,), ("gx",))
+    base = Simulation(GraphEngine(graph, np.zeros_like(part), mesh, K=K))
+    base.reset(jax.random.key(0))
+    t_base = _run_epochs_timed(base, epochs)
+    cyc = epochs * K
+    base_rate = R * C * cyc / t_base
+    emit(f"procs_baseline_graph_{R}x{C}", t_base / cyc * 1e6,
+         f"{base_rate:.3e} core-cycles/s in-process GraphEngine (1 device)")
+
+    # the free-running fleet: 4 workers over shm rings
+    eng = ProcsEngine(graph, part, n_workers=4, K=K, timeout=120.0)
+    sim = Simulation(eng)
+    sim.reset(jax.random.key(0))
+    t_procs = _run_epochs_timed(sim, epochs)
+    procs_rate = R * C * cyc / t_procs
+    emit(f"procs_throughput_{R}x{C}", t_procs / cyc * 1e6,
+         f"{procs_rate:.3e} core-cycles/s free-running, 4 workers, "
+         f"K={K}, no global barrier")
+    ratio = procs_rate / base_rate
+    emit(f"procs_vs_graph_{R}x{C}", ratio,
+         f"procs/in-process throughput ratio {ratio:.3f}x "
+         "(process isolation + per-epoch shm exchange overhead on toy "
+         "granules; gate: > 0.005 sanity floor — a deadlocked fleet "
+         "scores 0)")
+
+    # correctness while we are here: finish the allreduce and check it
+    done = lambda s: allreduce_done(  # noqa: E731
+        s.block_states[0], s.tables.active[0]
+    )
+    sim.run(until=done, max_epochs=2000, cache_key="allreduce")
+    totals = np.asarray(eng.gather_group(sim.state, 0).total)
+    want = expected_total(values)
+    assert np.array_equal(totals, np.full_like(totals, want)), (
+        np.unique(totals), want)
+    eng.close()
+
+
+def bench(smoke: bool = False, full: bool = False) -> None:
+    bench_build(smoke=smoke)
+    bench_throughput(smoke=smoke, full=full)
+
+
+if __name__ == "__main__":
+    bench()

@@ -14,6 +14,9 @@ paper-artifact mapping):
     accuracy_vs_rate   Fig. 15 measurement error vs sync rate (K)
     wafer_scale        Fig. 14/15 tiered many-core torus: size + (K_inner,
                        K_outer) sweep + GraphEngine-vs-FusedEngine rows
+    procs_runtime      §III/§IV free-running multiprocess runtime:
+                       prebuilt-cache build-time-vs-instances + 4-worker
+                       shm-fleet throughput vs the in-process baseline
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only name] [--smoke|--full]
                                              [--json PATH]
@@ -26,13 +29,13 @@ ISSUE 3 perf-trajectory numbers: sim-clock Hz for every engine on the
 wafer scenario at equal (K_inner, K_outer)).
 
 Every run also writes a machine-readable summary (default
-``BENCH_PR3.json``): ``{"schema", "git_rev", "smoke", "full", "argv",
+``BENCH_PR5.json``): ``{"schema", "git_rev", "smoke", "full", "argv",
 "failed", "baseline", "suites": {suite: [{"name", "us_per_call",
 "derived"}, ...]}}`` — the same schema in every mode, so the perf
 trajectory can be tracked and diffed PR over PR.  ``baseline`` embeds the
-PR 2 reference rows (git rev + the wafer/backend suites of
-``BENCH_PR2.json``) so speedups-vs-last-PR stay auditable even if the old
-file disappears.
+PR 3/4 reference rows (git rev + the wafer/backend/engine suites of the
+committed ``BENCH_PR3.json``) so numbers-vs-last-PR stay auditable even
+if the old file disappears.
 """
 import argparse
 import inspect
@@ -44,13 +47,13 @@ import traceback
 
 from . import (
     accuracy_vs_rate, backend_speedup, build_time, common, engine_speedup,
-    queue_perf, schema as schema_mod, sim_throughput, task_latency,
-    timing_breakdown, wafer_scale,
+    procs_runtime, queue_perf, schema as schema_mod, sim_throughput,
+    task_latency, timing_breakdown, wafer_scale,
 )
 
-BENCH_JSON = "BENCH_PR3.json"
+BENCH_JSON = "BENCH_PR5.json"
 SMOKE_JSON = "BENCH_SMOKE.json"
-BASELINE_JSON = "BENCH_PR2.json"
+BASELINE_JSON = "BENCH_PR3.json"  # the committed PR 3/4 trajectory rows
 BASELINE_SUITES = ("wafer_scale", "backend_speedup", "engine_speedup")
 SCHEMA = schema_mod.SCHEMA
 
@@ -64,6 +67,7 @@ SUITES = [
     ("sim_throughput", sim_throughput.bench),
     ("accuracy_vs_rate", accuracy_vs_rate.bench),
     ("wafer_scale", wafer_scale.bench),
+    ("procs_runtime", procs_runtime.bench),
 ]
 
 
@@ -78,17 +82,18 @@ def _git_rev() -> str:
 
 
 def _baseline() -> dict:
-    """The PR 2 reference rows this PR's speedups are measured against.
+    """The PR 3/4 reference rows this PR's numbers are measured against.
 
-    ``BENCH_PR2.json`` is untracked (it predates the committed-trajectory
-    convention), so on a fresh clone the baseline is recovered from the
-    copy already embedded in the committed ``BENCH_PR3.json`` — the
-    embedded rows are the canonical record either way.
+    ``BENCH_PR3.json`` is committed (the PR 3 full-tier trajectory, which
+    PR 4 kept); its wafer/backend/engine suites are embedded here so the
+    speedups stay auditable even if the old file disappears.  On a clone
+    where it is gone, the baseline is recovered from the copy already
+    embedded in the committed ``BENCH_PR5.json``.
     """
     root = os.path.join(os.path.dirname(__file__), "..")
     try:
         with open(os.path.join(root, BASELINE_JSON)) as f:
-            pr2 = json.load(f)
+            prev = json.load(f)
     except (OSError, ValueError):
         try:
             with open(os.path.join(root, BENCH_JSON)) as f:
@@ -97,10 +102,10 @@ def _baseline() -> dict:
             return {"ref": BASELINE_JSON, "missing": True}
     return {
         "ref": BASELINE_JSON,
-        "git_rev": pr2.get("git_rev", "unknown"),
-        "smoke": pr2.get("smoke"),
+        "git_rev": prev.get("git_rev", "unknown"),
+        "smoke": prev.get("smoke"),
         "suites": {
-            name: pr2.get("suites", {}).get(name, [])
+            name: prev.get("suites", {}).get(name, [])
             for name in BASELINE_SUITES
         },
     }

@@ -3,6 +3,13 @@
 Modular engine (one vmapped prebuilt simulator) scales to large grids with
 near-flat per-cycle cost on one device — aggregate core-cycles/s GROWS with
 the array, which is the property that let the paper reach 1M cores.
+
+The second half drives ONE host-I/O scenario through every external-port-
+capable engine — ``single`` | ``graph`` | ``fused`` | ``procs`` — and
+reports each session's ``stats()`` rows: the per-port schema (sent/
+pending/occupancy/credit) is identical whether the port is an in-process
+device queue or a shm ring on the multiprocess fleet, which is what lets
+this suite emit one row shape across engines.
 """
 import time
 
@@ -12,8 +19,61 @@ import numpy as np
 from .common import emit
 from repro.core import Simulation
 from repro.hw.systolic import make_systolic_network, make_cell_params, SystolicCell
+from repro.hw.pipestage import make_chain
 from repro.core.compat import make_mesh
 from repro.core.distributed import GridEngine
+
+PORT_SCHEMA = {"tx": {"sent", "pending", "occupancy", "credit"},
+               "rx": {"received", "occupancy", "credit"}}
+
+
+def _chain_session(engine: str):
+    net = make_chain(4, capacity=8)
+    if engine == "single":
+        return net.build()
+    if engine == "procs":
+        return net.build(engine="procs", n_workers=2,
+                         partition=[0, 0, 1, 1], K=2, timeout=120.0)
+    return net.build(engine=engine, mesh=make_mesh((1,), ("gx",)), K=2)
+
+
+def bench_stats_schema(smoke: bool = False):
+    """One host-I/O scenario, every engine, one stats schema."""
+    n_pkts = 40 if smoke else 200
+    schemas = {}
+    for engine in ("single", "graph", "fused", "procs"):
+        sim = _chain_session(engine)
+        sim.reset(0)
+        tx, rx = sim.tx("tx"), sim.rx("rx")
+        got = queued = 0
+        t0 = time.perf_counter()
+        while got < n_pkts:
+            if queued < n_pkts:
+                batch = [[float(queued + j), 0.0]
+                         for j in range(min(4, n_pkts - queued))]
+                tx.send_many(batch)  # overflow parks in the host tier
+                queued += len(batch)
+            sim.run(cycles=8)
+            got += len(rx.drain())
+        dt = time.perf_counter() - t0
+        st = sim.stats()
+        schema = {d: frozenset(next(iter(st["ports"][d].values())))
+                  for d in ("tx", "rx")}
+        schemas[engine] = schema
+        assert set(schema["tx"]) == PORT_SCHEMA["tx"], (engine, schema)
+        assert set(schema["rx"]) == PORT_SCHEMA["rx"], (engine, schema)
+        emit(
+            f"sim_io_{engine}", dt / max(got, 1) * 1e6,
+            f"{got} pkts through 4-stage chain @ {got / dt:.0f} pkt/s; "
+            f"stats schema tx={sorted(schema['tx'])}",
+        )
+        if engine == "procs":
+            sim.engine.close()
+    assert len({tuple(sorted(s["tx"])) for s in schemas.values()}) == 1, (
+        "per-port stats schema diverged across engines")
+    emit("sim_io_schema_uniform", 1.0,
+         f"one ports schema across {len(schemas)} engines "
+         "(in-process queues and shm rings alike)")
 
 
 def bench(smoke: bool = False):
@@ -35,6 +95,7 @@ def bench(smoke: bool = False):
         rate = n * n * cycles / t
         emit(f"sim_throughput_{n}x{n}", t / cycles * 1e6,
              f"{rate:.3e} core-cycles/s ({n*n} cores @ {cycles/t:.0f} Hz)")
+    bench_stats_schema(smoke=smoke)
 
 
 if __name__ == "__main__":

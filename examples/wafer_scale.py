@@ -33,7 +33,11 @@ import time
 
 N_DEVICES = 8
 
-if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+# Re-exec with fake devices ONLY as the real main module: the procs
+# engine's spawned workers re-import this file as __mp_main__ (with the
+# device flag deliberately stripped), and re-execing there would fork-bomb.
+if __name__ == "__main__" and "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = (
         f"--xla_force_host_platform_device_count={N_DEVICES} "
         + os.environ.get("XLA_FLAGS", "")
@@ -56,13 +60,27 @@ from repro.hw.manycore import (  # noqa: E402
 def build_engine(R: int, C: int, k_inner: int, k_outer: int,
                  capacity: int = WAFER.queue_capacity,
                  engine: str = "graph") -> tuple[GraphEngine, np.ndarray]:
-    """Torus fabric on a (2 pods) x (2x2 granules/pod) tiered mesh."""
+    """Torus fabric on a (2 pods) x (2x2 granules/pod) tiered mesh — or,
+    with ``engine="procs"``, on a (2 pods) x (2 workers/pod) fleet of
+    free-running OS processes over shared-memory queues (no mesh at all:
+    the paper's actual deployment model, DESIGN.md §Runtime)."""
     values = (np.arange(R * C, dtype=np.int64) % 97 + 1).astype(np.float32)
     cell = ManycoreCell(R, C)
     graph = ChannelGraph.torus(
         cell, R, C, params=make_core_params(values.reshape(R, C)),
         capacity=capacity,
     )
+    if engine == "procs":
+        from repro.core.graph import PartitionTree, Tier
+        from repro.runtime.launcher import ProcsEngine
+
+        part = tiered_grid_partition(R, C, [(2, 1), (2, 1)])
+        ptree = PartitionTree(
+            part,
+            (Tier(axes=("pod",), K=k_outer), Tier(axes=("g",), K=k_inner)),
+            {"pod": 2, "g": 2},
+        )
+        return ProcsEngine(graph, ptree, timeout=120.0), values
     mesh = make_mesh((2, 2, 2), ("pod", "gr", "gc"))
     part = tiered_grid_partition(R, C, [(2, 1), (2, 2)])
     if engine == "fused":
@@ -82,9 +100,11 @@ def main() -> None:
     ap.add_argument("--cols", type=int, default=WAFER.grid_cols)
     ap.add_argument("--k-inner", type=int, default=WAFER.k_inner)
     ap.add_argument("--k-outer", type=int, default=WAFER.k_outer)
-    ap.add_argument("--engine", choices=("graph", "fused"), default="graph",
-                    help="queue interpreter or the fused-epoch fast path "
-                         "(identical results; see DESIGN.md §Perf)")
+    ap.add_argument("--engine", choices=("graph", "fused", "procs"),
+                    default="graph",
+                    help="queue interpreter, the fused-epoch fast path, or "
+                         "the free-running multiprocess runtime (identical "
+                         "results; see DESIGN.md §Perf / §Runtime)")
     args = ap.parse_args()
     R, C = args.rows, args.cols
 
@@ -94,10 +114,17 @@ def main() -> None:
                                engine=args.engine)
     periods = eng.periods
     print(f"  partition: {eng.ptree.summary()}")
-    print(f"  exchange classes/tier: "
-          f"{[sum(1 for c in eng.classes if c.tier == t) for t in range(len(eng.tiers))]}, "
-          f"sync periods {periods} cycles (pod tier {periods[0] // periods[-1]}x "
-          f"rarer than intra-pod)")
+    if hasattr(eng, "classes"):
+        print(f"  exchange classes/tier: "
+              f"{[sum(1 for c in eng.classes if c.tier == t) for t in range(len(eng.tiers))]}, "
+              f"sync periods {periods} cycles (pod tier {periods[0] // periods[-1]}x "
+              f"rarer than intra-pod)")
+    else:
+        n_bnd = sum(len(cs) for cs in eng.lowering.routes.values())
+        print(f"  {eng.n_workers} free-running workers, {n_bnd} boundary "
+              f"channels over shm rings, sync periods {periods} cycles "
+              f"({eng.build_stats['n_signatures']} prebuilt granule "
+              f"signature(s) for {eng.n_workers} workers)")
 
     t0 = time.perf_counter()
     sim = Simulation(eng).reset(jax.random.key(0))

@@ -4,6 +4,7 @@
 #   scripts/ci.sh            # everything
 #   scripts/ci.sh tests      # tier-1 tests only
 #   scripts/ci.sh smoke      # smoke benchmarks only
+#   scripts/ci.sh procs      # multiprocess-runtime smoke (hard timeout)
 #   scripts/ci.sh examples   # all examples, smoke-sized, via the session API
 #
 # The smoke benchmarks run every suite (all four engines, the batched
@@ -41,7 +42,20 @@ if [[ "$stage" == "all" || "$stage" == "smoke" ]]; then
     python -m benchmarks.run --smoke --json BENCH_SMOKE.json
     echo "=== BENCH json schema + perf gates (benchmarks.schema) ==="
     python -m benchmarks.schema BENCH_SMOKE.json --gates smoke
-    python -m benchmarks.schema BENCH_PR3.json --gates trajectory
+    python -m benchmarks.schema BENCH_PR5.json --gates trajectory
+fi
+
+if [[ "$stage" == "all" || "$stage" == "procs" ]]; then
+    # The free-running fleet synchronizes through blocking shm rings, so a
+    # protocol bug shows up as a DEADLOCK — the hard timeout turns that
+    # into a fast failure instead of a hung CI job.  (The launcher's own
+    # heartbeat watchdog fires first in-process; `timeout` is the backstop.)
+    echo "=== procs runtime: 4-worker wafer smoke (hard 300s timeout) ==="
+    timeout 300 python -m pytest -q tests/test_runtime.py \
+        -k "wafer or kill" -x
+    echo "=== procs runtime: 4-worker tiered wafer example ==="
+    timeout 300 python examples/wafer_scale.py --rows 8 --cols 8 \
+        --k-inner 4 --engine procs
 fi
 
 if [[ "$stage" == "all" || "$stage" == "examples" ]]; then

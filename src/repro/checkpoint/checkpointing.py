@@ -38,6 +38,21 @@ def _flatten_with_paths(tree: PyTree):
     return leaves, treedef
 
 
+def _jsonable(obj):
+    """Coerce checkpoint metadata to plain JSON types (numpy scalars and
+    arrays sneak in via session port buffers and the multiprocess
+    runtime's gathered counters)."""
+    if isinstance(obj, np.generic):
+        return obj.item()
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    return obj
+
+
 def save(path: str, step: int, tree: PyTree, meta: dict | None = None, keep_last: int = 3) -> str:
     """Synchronous checkpoint write. Returns the final directory."""
     os.makedirs(path, exist_ok=True)
@@ -62,7 +77,7 @@ def save(path: str, step: int, tree: PyTree, meta: dict | None = None, keep_last
         "dtypes": dtypes,
         "treedef": str(treedef),
         "step": step,
-        "meta": meta or {},
+        "meta": _jsonable(meta or {}),
     }
     with open(os.path.join(tmp, "tree.json"), "w") as f:
         json.dump(spec, f)

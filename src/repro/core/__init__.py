@@ -32,8 +32,9 @@ _tune_cpu_runtime()  # before any backend init — see compat.tune_cpu_runtime
 from .block import Block
 from .network import Network, NetworkSim, NetworkState
 from .graph import (
-    ChannelGraph, PartitionTree, Tier, grid_partition, normalize_partition,
-    normalize_tiers, tiered_grid_partition,
+    ChannelGraph, PartitionLowering, PartitionTree, Tier, grid_partition,
+    lower_partition, normalize_partition, normalize_tiers,
+    tiered_grid_partition,
 )
 from .queue import QueueArray, make_queues, DEFAULT_CAPACITY
 from .distributed import (

@@ -88,8 +88,8 @@ from . import queue as qmod
 from .block import Block
 from .compat import shard_map
 from .graph import (
-    ChannelGraph, PartitionTree, Tier, grid_partition, normalize_partition,
-    normalize_tiers,
+    ChannelGraph, PartitionTree, Tier, _rank_within, grid_partition,
+    lower_partition, normalize_partition, normalize_tiers,
 )
 from .struct import pytree_dataclass, static_field
 
@@ -175,23 +175,6 @@ def _sq(tree: PyTree, nd: int) -> PyTree:
 
 def _unsq(tree: PyTree, nd: int) -> PyTree:
     return jax.tree.map(lambda x: x.reshape((1,) * nd + x.shape), tree)
-
-
-def _rank_within(groups: np.ndarray, n_groups: int) -> tuple[np.ndarray, np.ndarray]:
-    """For each element, its rank among elements of the same group value.
-
-    Returns (rank, counts).  Stable: earlier elements get lower ranks.
-    """
-    counts = np.bincount(groups, minlength=n_groups) if groups.size else np.zeros(
-        (n_groups,), np.int64
-    )
-    order = np.argsort(groups, kind="stable")
-    starts = np.zeros((n_groups,), np.int64)
-    if n_groups > 1:
-        starts[1:] = np.cumsum(counts[:-1])
-    rank = np.empty((groups.size,), np.int64)
-    rank[order] = np.arange(groups.size, dtype=np.int64) - np.repeat(starts, counts)
-    return rank, counts
 
 
 def _perfect_matching(adj: np.ndarray) -> np.ndarray:
@@ -332,6 +315,72 @@ def route_shift_groups(
     return groups
 
 
+def granule_local_cycle(groups, n_local: int, W: int, dtype, st):
+    """One cycle of a granule-local network.
+
+    Identical semantics to ``NetworkSim.step`` — same pre-cycle queue
+    snapshot, same sentinel handling, same clock-divider rate control —
+    but driven by granule-local tables read from the state
+    (``st.tables.rx_idx/tx_idx`` per group, local-queue-id space).
+
+    ``st`` is any pytree with ``queues`` (n_local rows), ``tables``,
+    ``block_states`` (per group, n_slot-leading) and ``cycle``; the
+    leading device dims must already be squeezed.  Shared by
+    ``GraphEngine._local_cycle`` (inside shard_map) and the multiprocess
+    workers (``repro.runtime.worker``): because the tables are runtime
+    inputs, every same-shaped granule traces to the same jaxpr — the
+    prebuilt-simulator-cache property — and both engine families step
+    granules with literally the same code.
+    """
+    from .graph import NULL_RX as NRX, NULL_TX as NTX
+
+    q = st.queues
+    tb = st.tables
+    fronts, valids = qmod.peek(q)
+    readies = ~qmod.full(q)
+    valids = valids.at[NRX].set(False)
+    readies = readies.at[NTX].set(True)
+
+    push_payload = jnp.zeros((n_local, W), dtype)
+    push_valid = jnp.zeros((n_local,), bool)
+    pop_ready = jnp.zeros((n_local,), bool)
+
+    new_states = []
+    for gi, grp in enumerate(groups):
+        blk = grp.block
+        rxm, txm = tb.rx_idx[gi], tb.tx_idx[gi]
+        rx = {
+            port: (fronts[rxm[:, p]], valids[rxm[:, p]])
+            for p, port in enumerate(blk.in_ports)
+        }
+        tx_ready = {port: readies[txm[:, p]] for p, port in enumerate(blk.out_ports)}
+        bst = st.block_states[gi]
+        new_st, rx_ready, tx = jax.vmap(blk.step)(bst, rx, tx_ready)
+
+        if blk.clock_divider > 1:
+            en = (st.cycle % blk.clock_divider) == 0
+            new_st = jax.tree.map(lambda n, o: jnp.where(en, n, o), new_st, bst)
+            rx_ready = {k: v & en for k, v in rx_ready.items()}
+            tx = {k: (p, v & en) for k, (p, v) in tx.items()}
+        new_states.append(new_st)
+
+        for p, port in enumerate(blk.in_ports):
+            pop_ready = pop_ready.at[rxm[:, p]].max(rx_ready[port])
+        for p, port in enumerate(blk.out_ports):
+            pay, val = tx[port]
+            push_payload = push_payload.at[txm[:, p]].set(
+                pay.astype(dtype), mode="drop"
+            )
+            push_valid = push_valid.at[txm[:, p]].max(val)
+
+    push_valid = push_valid.at[NTX].set(False)
+    pop_ready = pop_ready.at[NRX].set(False)
+    q2, _, _ = qmod.cycle(q, push_payload, push_valid, pop_ready)
+    return st.replace(
+        queues=q2, block_states=tuple(new_states), cycle=st.cycle + 1
+    )
+
+
 class GraphEngine:
     """Epoch-batched distributed interpreter of a partitioned ChannelGraph.
 
@@ -428,78 +477,30 @@ class GraphEngine:
 
     # ------------------------------------------------- host-side compilation
     def _build_tables(self) -> None:
-        """Lower (graph, partition) to per-granule tables — all vectorized."""
+        """Lower (graph, partition) to per-granule tables — all vectorized.
+
+        The mesh-independent half (queue-id assignment, per-group member
+        placement, boundary routes) is ``graph.lower_partition`` — shared
+        with the multiprocess runtime, so both families simulate the same
+        granule-local state layout.  This method adds the shard_map
+        specifics: per-tier exchange-class coloring and the concatenated
+        slab tables the batched ppermute exchange consumes.
+        """
         g, G = self.graph, self.G
-        NRX, NTX = g.NULL_RX, g.NULL_TX
-        src_g, dst_g = g.channel_granules(self.part)
-        owner = np.where(src_g >= 0, src_g, dst_g)  # ext channels live with
-        boundary = (src_g >= 0) & (dst_g >= 0) & (src_g != dst_g)  # their block
-        cids = np.arange(g.n_channels, dtype=np.int64)
-
-        # Local queue id assignment: every channel owns one queue per granule
-        # it touches — internal/external channels one queue in their owner
-        # granule; boundary channels an egress queue (sender side) and an
-        # ingress queue (receiver side).  Ids 0/1 are the sentinels.
-        loc = (owner >= 0) & ~boundary
-        ent_g = np.concatenate([owner[loc], src_g[boundary], dst_g[boundary]])
-        ent_c = np.concatenate([cids[loc], cids[boundary], cids[boundary]])
-        n_loc = int(loc.sum())
-        n_bnd = int(boundary.sum())
-        ent_kind = np.concatenate(
-            [np.zeros(n_loc, np.int8), np.ones(n_bnd, np.int8), np.full(n_bnd, 2, np.int8)]
-        )
-        rank, counts = _rank_within(ent_g.astype(np.int64), G)
-        lid = 2 + rank
-        self.n_local = int(2 + (counts.max() if counts.size else 0))
-
-        # channel -> local queue id on its producer/consumer side
-        tx_local = np.full((g.n_channels,), NTX, np.int64)
-        rx_local = np.full((g.n_channels,), NRX, np.int64)
-        tx_local[ent_c[ent_kind == 0]] = lid[ent_kind == 0]
-        rx_local[ent_c[ent_kind == 0]] = lid[ent_kind == 0]
-        tx_local[ent_c[ent_kind == 1]] = lid[ent_kind == 1]  # egress
-        rx_local[ent_c[ent_kind == 2]] = lid[ent_kind == 2]  # ingress
-        tx_local[NTX], rx_local[NRX] = NTX, NRX
+        low = lower_partition(g, self.ptree)
+        self.lowering = low
+        tx_local, rx_local = low.tx_local, low.rx_local
+        self.n_local = low.n_local
         self._tx_local, self._rx_local = tx_local, rx_local
-        self._chan_owner = owner
-        # entity table (granule, channel, kind 0=local 1=egress 2=ingress,
-        # local queue id) — FusedEngine re-lowers it onto registers + queues
-        self._ent = (ent_g.astype(np.int64), ent_c, ent_kind, lid)
-
-        # Per-group member placement + local port tables (padded to n_slot).
-        rx_t, tx_t, act_t = [], [], []
-        self._member_of: list[np.ndarray] = []  # (G, n_slot) member index
-        self._member_granule: list[np.ndarray] = []  # (n_m,)
-        self._member_slot: list[np.ndarray] = []  # (n_m,)
-        self._n_slot: list[int] = []
-        for gi, grp in enumerate(g.groups):
-            gm = self.part[grp.members].astype(np.int64)
-            slot, counts = _rank_within(gm, G)
-            n_slot = int(max(counts.max() if counts.size else 0, 1))
-            member_of = np.zeros((G, n_slot), np.int64)
-            active = np.zeros((G, n_slot), bool)
-            member_of[gm, slot] = np.arange(grp.n_members, dtype=np.int64)
-            active[gm, slot] = True
-            rxm = np.full((G, n_slot, g.rx_idx[gi].shape[1]), NRX, np.int64)
-            txm = np.full((G, n_slot, g.tx_idx[gi].shape[1]), NTX, np.int64)
-            rxm[gm, slot] = rx_local[g.rx_idx[gi]]
-            txm[gm, slot] = tx_local[g.tx_idx[gi]]
-            rx_t.append(rxm.astype(np.int32))
-            tx_t.append(txm.astype(np.int32))
-            act_t.append(active)
-            self._member_of.append(member_of)
-            self._member_granule.append(gm)
-            self._member_slot.append(slot)
-            self._n_slot.append(n_slot)
-        self._rx_tables, self._tx_tables, self._act_tables = rx_t, tx_t, act_t
-
-        # Boundary routes, classified by the outermost tier they cross, then
-        # edge-colored per tier into exchange classes (partial permutations).
-        chan_tier = self.ptree.tier_of_edges(src_g, dst_g)  # -1 when local
-        routes: dict[tuple[int, int, int], list[int]] = {}  # (tier, s, d)
-        for c in cids[boundary]:
-            key = (int(chan_tier[c]), int(src_g[c]), int(dst_g[c]))
-            routes.setdefault(key, []).append(int(c))
+        self._chan_owner = low.chan_owner
+        self._ent = low.ent
+        self._rx_tables, self._tx_tables = low.rx_tables, low.tx_tables
+        self._act_tables = low.act_tables
+        self._member_of = low.member_of
+        self._member_granule = low.member_granule
+        self._member_slot = low.member_slot
+        self._n_slot = low.n_slot
+        routes = low.routes  # (tier, src granule, dst granule) -> channels
 
         # Per tier: König classes, then compatible-permutation merging, then
         # concatenation into ONE (G, S_t) slab table — the batched exchange.
@@ -634,56 +635,11 @@ class GraphEngine:
 
     # ----------------------------------------------------------- local cycle
     def _local_cycle(self, st: GraphState) -> GraphState:
-        """One cycle of the granule-local network (pre-squeezed state).
-
-        Identical semantics to ``NetworkSim.step`` — same pre-cycle queue
-        snapshot, same sentinel handling, same clock-divider rate control —
-        but driven by the granule-local tables."""
-        q = st.queues
-        tb = st.tables
-        NRX, NTX = self.graph.NULL_RX, self.graph.NULL_TX
-        fronts, valids = qmod.peek(q)
-        readies = ~qmod.full(q)
-        valids = valids.at[NRX].set(False)
-        readies = readies.at[NTX].set(True)
-
-        push_payload = jnp.zeros((self.n_local, self.W), self.dtype)
-        push_valid = jnp.zeros((self.n_local,), bool)
-        pop_ready = jnp.zeros((self.n_local,), bool)
-
-        new_states = []
-        for gi, grp in enumerate(self.graph.groups):
-            blk = grp.block
-            rxm, txm = tb.rx_idx[gi], tb.tx_idx[gi]
-            rx = {
-                port: (fronts[rxm[:, p]], valids[rxm[:, p]])
-                for p, port in enumerate(blk.in_ports)
-            }
-            tx_ready = {port: readies[txm[:, p]] for p, port in enumerate(blk.out_ports)}
-            bst = st.block_states[gi]
-            new_st, rx_ready, tx = jax.vmap(blk.step)(bst, rx, tx_ready)
-
-            if blk.clock_divider > 1:
-                en = (st.cycle % blk.clock_divider) == 0
-                new_st = jax.tree.map(lambda n, o: jnp.where(en, n, o), new_st, bst)
-                rx_ready = {k: v & en for k, v in rx_ready.items()}
-                tx = {k: (p, v & en) for k, (p, v) in tx.items()}
-            new_states.append(new_st)
-
-            for p, port in enumerate(blk.in_ports):
-                pop_ready = pop_ready.at[rxm[:, p]].max(rx_ready[port])
-            for p, port in enumerate(blk.out_ports):
-                pay, val = tx[port]
-                push_payload = push_payload.at[txm[:, p]].set(
-                    pay.astype(self.dtype), mode="drop"
-                )
-                push_valid = push_valid.at[txm[:, p]].max(val)
-
-        push_valid = push_valid.at[NTX].set(False)
-        pop_ready = pop_ready.at[NRX].set(False)
-        q2, _, _ = qmod.cycle(q, push_payload, push_valid, pop_ready)
-        return st.replace(
-            queues=q2, block_states=tuple(new_states), cycle=st.cycle + 1
+        """One cycle of the granule-local network (pre-squeezed state) —
+        the shared ``granule_local_cycle`` body (also the multiprocess
+        workers' stepper, so the two families stay bit-identical)."""
+        return granule_local_cycle(
+            self.graph.groups, self.n_local, self.W, self.dtype, st
         )
 
     # ---------------------------------------------------------------- epoch
@@ -930,6 +886,26 @@ class GraphEngine:
     def _ext_idx(self, table: dict, name: str) -> tuple:
         didx, lid = self._ext_loc(table[name])
         return didx + (lid,)
+
+    def port_stats(self, state: GraphState) -> dict:
+        """Per external port: occupancy/credit of the queue row homed on
+        the owning granule — the uniform ``Simulation.stats()["ports"]``
+        schema (``_ext_loc`` is the only engine-specific piece, so the
+        fused engine inherits this as-is).  Nested by direction so a name
+        serving BOTH directions reports each channel's own queue."""
+        head = np.asarray(jax.device_get(state.queues.head))
+        tail = np.asarray(jax.device_get(state.queues.tail))
+
+        def rec(cid):
+            didx, lid = self._ext_loc(cid)
+            size = int((head[didx + (lid,)] - tail[didx + (lid,)])
+                       % self.capacity)
+            return {"occupancy": size, "credit": self.capacity - 1 - size}
+
+        return {
+            "tx": {n: rec(c) for n, c in self.graph.ext_in.items()},
+            "rx": {n: rec(c) for n, c in self.graph.ext_out.items()},
+        }
 
     def host_push(self, state: GraphState, name: str, payload):
         q2, ok = qmod.host_push(

@@ -32,6 +32,7 @@ Conventions shared by all consumers:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Mapping, Sequence
 
 import jax
@@ -563,6 +564,194 @@ class PartitionTree:
             f"PartitionTree({self.part.size} instances -> {self.n_granules} "
             f"granules, tiers [{parts}], periods {self.periods()})"
         )
+
+
+# -- partition lowering (engine-independent) ---------------------------------
+
+def _rank_within(groups: np.ndarray, n_groups: int) -> tuple[np.ndarray, np.ndarray]:
+    """For each element, its rank among elements of the same group value.
+
+    Returns (rank, counts).  Stable: earlier elements get lower ranks.
+    """
+    counts = np.bincount(groups, minlength=n_groups) if groups.size else np.zeros(
+        (n_groups,), np.int64
+    )
+    order = np.argsort(groups, kind="stable")
+    starts = np.zeros((n_groups,), np.int64)
+    if n_groups > 1:
+        starts[1:] = np.cumsum(counts[:-1])
+    rank = np.empty((groups.size,), np.int64)
+    rank[order] = np.arange(groups.size, dtype=np.int64) - np.repeat(starts, counts)
+    return rank, counts
+
+
+class PartitionLowering:
+    """Mesh-independent lowering of (ChannelGraph, PartitionTree) to
+    per-granule tables (DESIGN.md §3, §Runtime).
+
+    This is the shared front half of every distributed backend: the
+    shard_map engines (``distributed.GraphEngine`` and subclasses) stack
+    these tables into device arrays and add the ppermute exchange-class
+    schedule; the multiprocess runtime (``repro.runtime``) hands each
+    granule its own row and wires the boundary channels to shared-memory
+    queues instead.  Keeping the queue-id assignment here — in exactly one
+    place — is what makes the engines' granule-local state layouts (and
+    therefore their simulated traffic) bit-identical.
+
+    Local queue id assignment: every channel owns one queue per granule it
+    touches — internal/external channels one queue in their owner granule;
+    boundary channels an egress queue (sender side) and an ingress queue
+    (receiver side).  Ids 0/1 are the NULL_RX / NULL_TX sentinels.
+    """
+
+    def __init__(self, graph: "ChannelGraph", ptree: "PartitionTree"):
+        if ptree.part.shape != (graph.n_instances,):
+            raise ValueError(
+                f"PartitionTree covers {ptree.part.size} instances, "
+                f"graph has {graph.n_instances}"
+            )
+        self.graph = graph
+        self.ptree = ptree
+        g, G = graph, ptree.n_granules
+        self.G = G
+        part = ptree.part
+        NRX, NTX = g.NULL_RX, g.NULL_TX
+        src_g, dst_g = g.channel_granules(part)
+        self.src_g, self.dst_g = src_g, dst_g
+        owner = np.where(src_g >= 0, src_g, dst_g)  # ext channels live with
+        boundary = (src_g >= 0) & (dst_g >= 0) & (src_g != dst_g)  # their block
+        cids = np.arange(g.n_channels, dtype=np.int64)
+        self.boundary = boundary
+
+        loc = (owner >= 0) & ~boundary
+        ent_g = np.concatenate([owner[loc], src_g[boundary], dst_g[boundary]])
+        ent_c = np.concatenate([cids[loc], cids[boundary], cids[boundary]])
+        n_loc = int(loc.sum())
+        n_bnd = int(boundary.sum())
+        ent_kind = np.concatenate(
+            [np.zeros(n_loc, np.int8), np.ones(n_bnd, np.int8), np.full(n_bnd, 2, np.int8)]
+        )
+        rank, counts = _rank_within(ent_g.astype(np.int64), G)
+        lid = 2 + rank
+        self.n_local = int(2 + (counts.max() if counts.size else 0))
+
+        # channel -> local queue id on its producer/consumer side
+        tx_local = np.full((g.n_channels,), NTX, np.int64)
+        rx_local = np.full((g.n_channels,), NRX, np.int64)
+        tx_local[ent_c[ent_kind == 0]] = lid[ent_kind == 0]
+        rx_local[ent_c[ent_kind == 0]] = lid[ent_kind == 0]
+        tx_local[ent_c[ent_kind == 1]] = lid[ent_kind == 1]  # egress
+        rx_local[ent_c[ent_kind == 2]] = lid[ent_kind == 2]  # ingress
+        tx_local[NTX], rx_local[NRX] = NTX, NRX
+        self.tx_local, self.rx_local = tx_local, rx_local
+        self.chan_owner = owner
+        # entity table (granule, channel, kind 0=local 1=egress 2=ingress,
+        # local queue id) — FusedEngine re-lowers it onto registers + queues
+        self.ent = (ent_g.astype(np.int64), ent_c, ent_kind, lid)
+
+        # Per-group member placement + local port tables (padded to n_slot).
+        rx_t, tx_t, act_t = [], [], []
+        self.member_of: list[np.ndarray] = []  # (G, n_slot) member index
+        self.member_granule: list[np.ndarray] = []  # (n_m,)
+        self.member_slot: list[np.ndarray] = []  # (n_m,)
+        self.n_slot: list[int] = []
+        for gi, grp in enumerate(g.groups):
+            gm = part[grp.members].astype(np.int64)
+            slot, counts = _rank_within(gm, G)
+            n_slot = int(max(counts.max() if counts.size else 0, 1))
+            member_of = np.zeros((G, n_slot), np.int64)
+            active = np.zeros((G, n_slot), bool)
+            member_of[gm, slot] = np.arange(grp.n_members, dtype=np.int64)
+            active[gm, slot] = True
+            rxm = np.full((G, n_slot, g.rx_idx[gi].shape[1]), NRX, np.int64)
+            txm = np.full((G, n_slot, g.tx_idx[gi].shape[1]), NTX, np.int64)
+            rxm[gm, slot] = rx_local[g.rx_idx[gi]]
+            txm[gm, slot] = tx_local[g.tx_idx[gi]]
+            rx_t.append(rxm.astype(np.int32))
+            tx_t.append(txm.astype(np.int32))
+            act_t.append(active)
+            self.member_of.append(member_of)
+            self.member_granule.append(gm)
+            self.member_slot.append(slot)
+            self.n_slot.append(n_slot)
+        self.rx_tables, self.tx_tables, self.act_tables = rx_t, tx_t, act_t
+
+        # Boundary channels, classified by the outermost tier they cross,
+        # grouped into directed granule-pair routes (tier, src, dst).
+        self.chan_tier = ptree.tier_of_edges(src_g, dst_g)  # -1 when local
+        routes: dict[tuple[int, int, int], list[int]] = {}
+        for c in cids[boundary]:
+            key = (int(self.chan_tier[c]), int(src_g[c]), int(dst_g[c]))
+            routes.setdefault(key, []).append(int(c))
+        self.routes = routes
+
+    # -- per-granule views (the multiprocess runtime's slices) ---------------
+    def tier_channels(self, t: int, granule: int) -> tuple[list[int], list[int]]:
+        """Tier-t boundary channels of one granule: (egress, ingress) channel
+        ids in deterministic (channel-id) order.  Exchange order within a
+        tier is semantically free — every channel owns disjoint queues — so
+        channel-id order is simply the canonical one."""
+        eg = [c for (tt, s, d), cs in sorted(self.routes.items())
+              for c in cs if tt == t and s == granule]
+        ing = [c for (tt, s, d), cs in sorted(self.routes.items())
+               for c in cs if tt == t and d == granule]
+        return sorted(eg), sorted(ing)
+
+    def ext_channels(self, granule: int) -> list[tuple[str, int, bool]]:
+        """External ports homed on ``granule``: (name, channel id, is_input),
+        in the graph's declaration order."""
+        out = []
+        for name, (cid, is_input) in self.graph.ext_ports().items():
+            if int(self.chan_owner[cid]) == granule:
+                out.append((name, cid, is_input))
+        return out
+
+    def granule_signature(self, granule: int) -> str:
+        """Stable signature of one granule's *compiled shape* — the prebuilt
+        simulator cache key (paper §III-F: one prebuilt simulator per unique
+        block; here per unique granule shape).
+
+        Two granules share a signature iff their epoch steppers trace to the
+        same jaxpr: same block types/configs, same slot counts, same local
+        queue count and payload signature, same per-tier exchange shapes.
+        Table *values* (port wirings, member placement) are runtime inputs
+        to the compiled stepper, not constants, so they are excluded —
+        that is exactly what lets N instances of one block compile once.
+        """
+        g = self.graph
+        parts: list[str] = [
+            f"W={g.payload_words}", f"cap={g.capacity}",
+            f"dtype={np.dtype(g.dtype).str if g.dtype is not None else 'f4'}",
+            f"n_local={self.n_local}",
+            f"K={self.ptree.K_tiers}",
+        ]
+        for gi, grp in enumerate(g.groups):
+            blk = grp.block
+            cfg = {
+                k: (f"<{v.shape}:{v.dtype}>" if isinstance(v, np.ndarray)
+                    else repr(v))
+                for k, v in sorted(vars(blk).items())
+                if not k.startswith("_")
+            }
+            parts.append(
+                f"g{gi}:{type(blk).__module__}.{type(blk).__qualname__}"
+                f":{cfg}:slots={self.n_slot[gi]}:n_m={grp.n_members}"
+                f":div={blk.clock_divider}"
+            )
+        for t in range(self.ptree.n_tiers):
+            n_eg = sum(len(cs) for (tt, s, _), cs in self.routes.items()
+                       if tt == t)
+            # per-granule egress/ingress counts shape the drain/fill fns
+            eg, ing = self.tier_channels(t, granule)
+            parts.append(f"t{t}:eg={len(eg)}:in={len(ing)}:all={n_eg}")
+        parts.append(f"ext={len(self.ext_channels(granule))}")
+        return hashlib.sha256("|".join(parts).encode()).hexdigest()[:16]
+
+
+def lower_partition(graph: "ChannelGraph", ptree: "PartitionTree") -> PartitionLowering:
+    """Lower (graph, partition tree) to per-granule tables — see
+    ``PartitionLowering``."""
+    return PartitionLowering(graph, ptree)
 
 
 def tiered_grid_partition(

@@ -156,6 +156,13 @@ class Network:
                               pallas_interpret (epoch-body strategy).
         engine="register"  -> fastgrid.RegisterGridEngine (systolic-grid
                               networks only); kwargs: mesh, K.
+        engine="procs"     -> runtime.launcher.ProcsEngine — the free-
+                              running multiprocess runtime (DESIGN.md
+                              §Runtime): one prebuilt granule simulator
+                              per OS process over shared-memory queues,
+                              no mesh needed; kwargs: partition (flat map
+                              or PartitionTree), n_workers, K, ring_depth,
+                              timeout, prebuild, cache_dir, log_dir.
 
         (The uniform-grid presets ``distributed.GridEngine`` and
         ``fused.FusedEngine.grid`` are constructed directly — they build
@@ -203,8 +210,13 @@ class Network:
             from .fastgrid import RegisterGridEngine
 
             return RegisterGridEngine.from_graph(graph, **kw)
+        if engine == "procs":
+            from ..runtime.launcher import ProcsEngine
+
+            return ProcsEngine(graph, kw.pop("partition", None), **kw)
         raise ValueError(
-            f"unknown engine {engine!r} (single | graph | fused | register)"
+            f"unknown engine {engine!r} "
+            "(single | graph | fused | register | procs)"
         )
 
 
@@ -439,3 +451,22 @@ class NetworkSim:
         inst_id = inst if isinstance(inst, int) else inst.inst_id
         gi, slot = self.graph.locate(inst_id)
         return jax.tree.map(lambda x: x[slot], state.block_states[gi])
+
+    def port_stats(self, state: NetworkState) -> dict:
+        """Per external port: live queue occupancy + remaining credit —
+        the uniform ``Simulation.stats()["ports"]`` schema (one shape on
+        every engine, shm-backed or in-process).  Nested by direction so
+        a name serving BOTH directions reports each channel's own queue."""
+        import numpy as np
+
+        q = state.queues
+        size = np.asarray(jax.device_get((q.head - q.tail) % q.capacity))
+
+        def rec(cid):
+            return {"occupancy": int(size[cid]),
+                    "credit": int(q.capacity - 1 - size[cid])}
+
+        return {
+            "tx": {n: rec(c) for n, c in self.graph.ext_in.items()},
+            "rx": {n: rec(c) for n, c in self.graph.ext_out.items()},
+        }

@@ -152,18 +152,23 @@ def pop_single(buf, head, tail, capacity):
     return front, jnp.where(valid, (tail + 1) % capacity, tail), valid
 
 
-def fill_single(buf, head, tail, capacity, payloads):
+def fill_single(buf, head, tail, capacity, payloads, limit=None):
     """Push up to ``len(payloads)`` packets into one queue (host batch I/O).
 
     payloads: (k, W) with k <= capacity-1.  Packets beyond the queue's free
     space are NOT written (the host-side caller keeps them buffered — the
-    session's host-tier "credit").  Returns (buf, head, n_pushed).
+    session's host-tier "credit").  ``limit`` optionally caps the count
+    further (a traced scalar: the multiprocess runtime passes the shm
+    ring's record count so padding rows never land).  Returns
+    (buf, head, n_pushed).
     """
     k = payloads.shape[0]
     if k > capacity - 1:
         raise ValueError(f"fill_single: {k} packets > capacity-1={capacity - 1}")
     n_free = (capacity - 1) - (head - tail) % capacity
     count = jnp.minimum(jnp.int32(k), n_free.astype(jnp.int32))
+    if limit is not None:
+        count = jnp.minimum(count, jnp.asarray(limit, jnp.int32))
     offs = jnp.arange(k, dtype=jnp.int32)
     idx = (head + offs) % capacity
     cur = buf[idx]
@@ -172,14 +177,19 @@ def fill_single(buf, head, tail, capacity, payloads):
     return buf, (head + count) % capacity, count
 
 
-def drain_single(buf, head, tail, capacity, max_n: int):
+def drain_single(buf, head, tail, capacity, max_n: int, limit=None):
     """Pop up to ``max_n`` packets from one queue (host batch I/O).
 
-    Returns (payloads (max_n, W), tail, count); rows beyond ``count`` are
-    stale and must be masked by the caller.
+    ``limit`` optionally caps the count further (a traced scalar: the shm
+    ring's free space in the multiprocess runtime, so a flush never
+    overruns the host-facing ring).  Returns (payloads (max_n, W), tail,
+    count); rows beyond ``count`` are stale and must be masked by the
+    caller.
     """
     n_avail = (head - tail) % capacity
     count = jnp.minimum(n_avail, max_n).astype(jnp.int32)
+    if limit is not None:
+        count = jnp.minimum(count, jnp.asarray(limit, jnp.int32))
     offs = jnp.arange(max_n, dtype=jnp.int32)
     idx = (tail + offs) % capacity
     return buf[idx], (tail + count) % capacity, count

@@ -15,11 +15,15 @@ surface.  ``Network.build(engine=...)`` returns a ``Simulation``:
     print(rx.recv(), sim.cycle)
     sim.save("/tmp/ckpt")                 # checkpoint; sim.load() resumes
 
-The same five lines drive all four engines — ``single`` | ``graph`` |
-``fused`` | ``register`` — because the facade speaks only the uniform
-engine protocol (``engine_kind``, ``init``, ``run_epochs``/``run``,
-``run_until``, ``group_state``, ``host_push*``/``host_pop*``,
-``cycles_per_epoch``).
+The same five lines drive all five engines — ``single`` | ``graph`` |
+``fused`` | ``register`` | ``procs`` — because the facade speaks only the
+uniform engine protocol (``engine_kind``, ``init``, ``run_epochs``/
+``run``, ``run_until``, ``group_state``, ``host_push*``/``host_pop*``,
+``cycles_per_epoch``).  The ``procs`` engine (the free-running
+multiprocess runtime, DESIGN.md §Runtime) holds its state in worker
+processes, so its "state" is a handle; the facade's save/load and
+until-predicates route through the engine's ``gather_state``/
+``scatter_state``/``eval_done`` hooks when present.
 
 **The host is the outermost tier.**  Host packets enter and leave at
 *boundaries* — every ``cycles_per_epoch`` simulated cycles, i.e. exactly
@@ -65,7 +69,7 @@ from . import queue as qmod
 
 PyTree = Any
 
-_ENGINE_KINDS = ("single", "graph", "fused", "register")
+_ENGINE_KINDS = ("single", "graph", "fused", "register", "procs")
 _DEFAULT_MAX_EPOCHS = 100_000
 
 
@@ -367,18 +371,32 @@ class Simulation:
         return self.engine.group_state(self._require_state(), inst)
 
     def stats(self) -> dict:
-        """Cycle/epoch counters plus per-port handshake counters (nested
-        tx/rx, since a name may serve both directions); the single engine
-        adds its per-channel push/pop counts."""
+        """Cycle/epoch counters plus per-port state, ONE schema on every
+        engine: each tx/rx entry nests the session counters (sent/pending
+        resp. received) AND the port's live queue occupancy/credit —
+        device-queue occupancy on the in-process engines, shm-ring +
+        owning-worker occupancy on the ``procs`` runtime — so
+        ``benchmarks/sim_throughput.py`` can report one schema across
+        engines.  The single engine additionally reports its per-channel
+        push/pop handshake counts."""
         st = self._require_state()
+        ps = getattr(self.engine, "port_stats", None)
+        occ = ps(st) if ps is not None else {}
+
+        def _occ(direction: str, name: str) -> dict:
+            rec = occ.get(direction, {}).get(name, {})
+            return {"occupancy": int(rec.get("occupancy", 0)),
+                    "credit": int(rec.get("credit", 0))}
+
         d: dict[str, Any] = {
             "engine": self.kind,
             "cycle": self.cycle,
             "epoch": self.epoch,
             "ports": {
-                "tx": {n: {"sent": p.sent, "pending": p.pending}
+                "tx": {n: {"sent": p.sent, "pending": p.pending,
+                           **_occ("tx", n)}
                        for n, p in self._tx_ports.items()},
-                "rx": {n: {"received": p.received}
+                "rx": {n: {"received": p.received, **_occ("rx", n)}
                        for n, p in self._rx_ports.items()},
             },
         }
@@ -426,6 +444,10 @@ class Simulation:
         engines' compiled loops), so per-epoch checks don't retrace.
         """
         st = self._require_state()
+        if self.kind == "procs":
+            # worker states never enter this process's jit: the engine
+            # gathers each granule's view and evaluates host-side
+            return bool(self.engine.eval_done(st, done_fn))
         anchor = cache_key if cache_key is not None else done_fn
         key = id(anchor)
         if key not in self._done_cache:
@@ -598,6 +620,10 @@ class Simulation:
         from ..checkpoint import checkpointing
 
         st = self._require_state()
+        if hasattr(self.engine, "gather_state"):
+            # engines whose state lives elsewhere (the multiprocess
+            # runtime) hand the facade a shape-stable gathered tree
+            st = self.engine.gather_state(st)
         if step is None:
             step = self.cycle
         meta = {
@@ -624,13 +650,19 @@ class Simulation:
         from ..checkpoint import checkpointing
 
         template = self._require_state()
+        gathered = hasattr(self.engine, "gather_state")
+        if gathered:
+            template = self.engine.gather_state(template)
         tree, meta = checkpointing.restore(path, template, step)
         if meta.get("engine_kind") not in (None, self.kind):
             raise ValueError(
                 f"checkpoint was saved from engine "
                 f"{meta['engine_kind']!r}, this session is {self.kind!r}"
             )
-        self._state = tree
+        if gathered:
+            self._state = self.engine.scatter_state(self._require_state(), tree)
+        else:
+            self._state = tree
         for n, rec in meta.get("ports", {}).get("tx", {}).items():
             port = self.tx(n)
             port.sent = int(rec.get("sent", 0))

@@ -10,3 +10,4 @@ from .systolic import SystolicCell, SystolicParams, make_systolic_network, colle
 from .manycore import (
     ManycoreCell, CoreParams, allreduce_done, expected_total, make_core_params,
 )
+from .pipestage import PipeStage, make_chain, make_ring

@@ -1,0 +1,23 @@
+"""repro.runtime — the free-running multiprocess runtime (DESIGN.md §Runtime).
+
+The paper's deployment model, realized literally: one *prebuilt* granule
+simulator per OS process, connected at runtime by lock-free shared-memory
+SPSC queues, free-running with no global barrier — scale-up is "run more
+instances" and build time stays flat in instance count.
+
+  shmem            SPSC rings over multiprocessing.shared_memory, layout
+                   and semantics bit-compatible with core/queue.py (§III-B)
+  worker           per-granule worker process: AOT-compiled epoch stepper
+                   (the prebuilt-simulator cache) + credit-gated free run
+  launcher         ProcsEngine — Network.build(engine="procs"): spawn,
+                   wire, and drive the fleet behind the Simulation facade
+  fault_tolerance  watchdogs, crash/restart loops, WorkerDiedError with
+                   captured worker log tails
+"""
+from .fault_tolerance import WorkerDiedError
+from .launcher import ProcsEngine, ProcsState
+from .shmem import RingTimeout, ShmRing
+
+__all__ = [
+    "ProcsEngine", "ProcsState", "RingTimeout", "ShmRing", "WorkerDiedError",
+]

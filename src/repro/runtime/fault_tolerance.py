@@ -1,6 +1,7 @@
 """Fault tolerance & elasticity runtime.
 
-Pieces (composed by launch/train.py):
+Pieces (composed by launch/train.py and by the multiprocess simulation
+launcher, ``repro.runtime.launcher``):
 
   * ``Watchdog`` — per-step timing with EWMA baseline; flags straggler steps
     (step > mean + k*sigma) and hung steps (> hard timeout).  On a real
@@ -13,10 +14,17 @@ Pieces (composed by launch/train.py):
     process built (checkpoint/checkpointing.py).
   * ``FailureInjector`` — deterministic fault injection for tests/drills
     (the paper's cloud runs lose ECS tasks; we simulate that).
+  * ``WorkerDiedError`` / ``ProcessMonitor`` — the free-running runtime's
+    failure surface: the launcher polls worker liveness (exitcode) and
+    per-epoch heartbeats while awaiting replies, and a dead or hung
+    granule simulator raises a ``WorkerDiedError`` carrying the worker's
+    captured log tail — a diagnosis, never a silent hang
+    (``tests/test_runtime.py`` kills a worker mid-run to prove it).
 """
 from __future__ import annotations
 
 import math
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -52,6 +60,80 @@ class Watchdog:
             "straggler": flag,
             "hung": dt > self.hard_timeout_s,
         }
+
+
+class WorkerDiedError(RuntimeError):
+    """A granule worker process died (nonzero exitcode / signal) or went
+    silent past the heartbeat timeout.  The message carries the worker id,
+    its exit status, and the tail of its captured log so the failure is
+    diagnosable from the exception alone."""
+
+    def __init__(self, worker: int, reason: str, log_tail: str = ""):
+        self.worker = worker
+        self.reason = reason
+        self.log_tail = log_tail
+        msg = f"worker {worker} {reason}"
+        if log_tail:
+            msg += f"\n--- worker {worker} log tail ---\n{log_tail}"
+        super().__init__(msg)
+
+
+def read_log_tail(path: str | None, max_bytes: int = 2048) -> str:
+    """Last ``max_bytes`` of a worker's captured log ('' when absent)."""
+    if not path or not os.path.exists(path):
+        return ""
+    try:
+        with open(path, "rb") as f:
+            f.seek(0, os.SEEK_END)
+            size = f.tell()
+            f.seek(max(0, size - max_bytes))
+            return f.read().decode(errors="replace").strip()
+    except OSError:
+        return ""
+
+
+class ProcessMonitor:
+    """Liveness/progress checks over a set of worker processes.
+
+    ``check()`` raises ``WorkerDiedError`` for the first worker that (a)
+    exited, or (b) — when a heartbeat reader is wired — made no progress
+    for ``hang_timeout_s`` while a reply is pending.  Designed to be
+    called from inside reply-wait loops, so a dead peer becomes an
+    exception in bounded time instead of a hang.
+    """
+
+    def __init__(self, procs: dict[int, Any], log_paths: dict[int, str],
+                 heartbeat: Callable[[int], float] | None = None,
+                 hang_timeout_s: float = 120.0):
+        self.procs = procs
+        self.log_paths = log_paths
+        self.heartbeat = heartbeat  # worker -> last-beat wallclock
+        self.hang_timeout_s = hang_timeout_s
+        self._last_progress = {w: time.time() for w in procs}
+        self._last_beat = {w: -1.0 for w in procs}
+
+    def check(self, waiting_on: tuple[int, ...] | None = None) -> None:
+        now = time.time()
+        for w, p in self.procs.items():
+            if p is not None and p.exitcode is not None and p.exitcode != 0:
+                raise WorkerDiedError(
+                    w, f"died with exitcode {p.exitcode}",
+                    read_log_tail(self.log_paths.get(w)),
+                )
+        if self.heartbeat is None or not waiting_on:
+            return
+        for w in waiting_on:
+            beat = self.heartbeat(w)
+            if beat != self._last_beat[w]:
+                self._last_beat[w] = beat
+                self._last_progress[w] = now
+            elif now - self._last_progress[w] > self.hang_timeout_s:
+                raise WorkerDiedError(
+                    w,
+                    f"made no progress for {self.hang_timeout_s:.0f}s "
+                    "(hung or deadlocked)",
+                    read_log_tail(self.log_paths.get(w)),
+                )
 
 
 class FailureInjector:

@@ -1,0 +1,794 @@
+"""Multiprocess launcher — ``Network.build(engine="procs")`` (paper §III,
+DESIGN.md §Runtime).
+
+``ProcsEngine`` is the fifth engine: it realizes the paper's deployment
+model *literally* — one free-running OS process per granule, connected at
+runtime by shared-memory SPSC queues — behind the same ``Simulation``
+facade as the in-process engines.  The division of labor:
+
+  * ``graph.lower_partition`` assigns every channel its granule-local
+    queue (the same lowering the shard_map engines consume, so the
+    granule state layouts are bit-identical);
+  * the launcher creates one slab ring + one credit ring per boundary
+    channel and one packet ring per external port
+    (``runtime.shmem.ShmRing``), spawns one worker per granule
+    (``runtime.worker``), and speaks the session protocol to them over
+    command pipes: ``init`` / ``run`` / ``probe`` / ``stats`` /
+    checkpoint ``gather``/``scatter``;
+  * host Tx/Rx ports read and write the external rings directly — host
+    I/O never interrupts a running worker, it lands at the worker's next
+    epoch boundary exactly like the in-process engines' host tier.
+
+**Prebuilt-simulator cache**: before spawning anything, the launcher
+AOT-compiles one granule simulator per *distinct granule signature*
+(``jit(...).lower().compile()`` into the shared JAX persistent
+compilation cache).  Workers then compile against a warm cache, so build
+time grows with unique granule shapes — O(#block kinds), not
+O(#instances) — the paper's flat-build-time property, measured in
+``benchmarks/procs_runtime.py``.
+
+**Failure surface** (``runtime.fault_tolerance``): every reply wait polls
+worker exitcodes and per-epoch heartbeats; a dead or silent worker
+raises ``WorkerDiedError`` with that worker's captured log tail, and the
+remaining workers are torn down — never a hang on a half-dead fleet.
+"""
+from __future__ import annotations
+
+import atexit
+import dataclasses
+import os
+import pickle
+import secrets
+import tempfile
+import time
+import weakref
+from multiprocessing import get_context, shared_memory
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from ..core import queue as qmod
+from ..core.graph import (
+    ChannelGraph, PartitionLowering, PartitionTree, Tier, lower_partition,
+    normalize_partition, normalize_tiers,
+)
+from .fault_tolerance import ProcessMonitor, WorkerDiedError, read_log_tail
+from .shmem import ShmRing, slab_slot_bytes
+from .worker import (
+    GranuleSim, GranuleSpec, GroupSpec, TierSpec, configure_compile_cache,
+    credit_ring_name, data_ring_name, ext_ring_name, worker_entry,
+)
+
+PyTree = Any
+
+_DEFAULT_CACHE = (
+    os.environ.get("REPRO_PROCS_CACHE_DIR")
+    or os.path.join(tempfile.gettempdir(), "repro_procs_cache")
+)
+
+# Engines are tracked weakly: a garbage-collected engine tears itself down
+# via __del__, and whatever is still alive at interpreter exit is closed
+# here — worker processes and shm segments never outlive the launcher.
+_live_engines: "weakref.WeakSet[ProcsEngine]" = weakref.WeakSet()
+
+
+def _close_all_engines() -> None:  # pragma: no cover - interpreter exit
+    for eng in list(_live_engines):
+        try:
+            eng.close()
+        except Exception:
+            pass
+
+
+atexit.register(_close_all_engines)
+
+
+@dataclasses.dataclass
+class ProcsState:
+    """The session's handle on a running fleet — a *reference*, not the
+    state itself: granule state lives in the workers (that is the point).
+    The handle carries the boundary-synchronized counters plus a
+    generation stamp so a stale handle (pre-reset) fails loudly."""
+
+    cycle: np.ndarray  # () int32 — identical on every worker at a boundary
+    epoch: np.ndarray  # () int32
+    generation: int
+
+    def replace(self, **kw) -> "ProcsState":
+        return dataclasses.replace(self, **kw)
+
+
+class ProcsEngine:
+    """Free-running multiprocess engine over a partitioned ChannelGraph.
+
+    graph:      the channel-graph IR.
+    partition:  ``PartitionTree`` (tiered), or any flat instance->granule
+                map ``normalize_partition`` accepts (with ``n_workers``/
+                ``tiers``); granule ids are worker indices.
+    n_workers:  worker count for flat partitions (default: max granule+1).
+    K:          innermost sync rate (cycles between boundary exchanges).
+    tiers:      optional ``(axes, K)`` spec with ``axis_sizes`` supplied by
+                a PartitionTree — procs needs no mesh, so pass tiered
+                layouts via PartitionTree.
+    ring_depth: slab records a boundary ring buffers (>= 2; staleness
+                slack for the slab data — the credit chain already bounds
+                epoch drift at one exchange period per channel).
+    timeout:    seconds a worker waits on a ring / the launcher waits on a
+                silent worker before declaring it dead.
+    prebuild:   AOT-compile each distinct granule signature in-launcher
+                (warming the persistent cache) before any worker spawns.
+    cache_dir:  JAX persistent compilation cache directory (shared).
+    """
+
+    engine_kind = "procs"
+
+    def __init__(
+        self,
+        graph: ChannelGraph,
+        partition=None,
+        *,
+        n_workers: int | None = None,
+        K: int = 1,
+        tiers: Sequence | None = None,
+        ring_depth: int = 2,
+        timeout: float = 60.0,
+        prebuild: bool = True,
+        cache_dir: str | None = None,
+        log_dir: str | None = None,
+    ):
+        self.graph = graph
+        if isinstance(partition, PartitionTree):
+            if tiers is not None:
+                raise ValueError("pass tiers via the PartitionTree, not both")
+            ptree = partition
+        else:
+            if tiers is not None:
+                tspec = normalize_tiers(tiers)
+                raise ValueError(
+                    "procs has no mesh to size tier axes "
+                    f"{[t.axes for t in tspec]} — pass a PartitionTree"
+                )
+            if n_workers is None:
+                part0 = normalize_partition(graph, partition, 1 << 30)
+                n_workers = int(part0.max()) + 1 if part0.size else 1
+            part = normalize_partition(graph, partition, n_workers)
+            ptree = PartitionTree(
+                part, (Tier(axes=("w",), K=int(K)),), {"w": int(n_workers)}
+            )
+        self.ptree = ptree
+        self.tiers = ptree.tiers
+        self.K_tiers = ptree.K_tiers
+        self.periods = ptree.periods()
+        self.cycles_per_epoch = ptree.cycles_per_epoch
+        self.K = self.K_tiers[-1]
+        self.G = ptree.n_granules
+        self.n_workers = self.G
+        self.E_tiers = tuple(min(p, graph.capacity - 1) for p in self.periods)
+        self.W = graph.payload_words
+        self.payload_words = graph.payload_words
+        self.capacity = graph.capacity
+        self.dtype = np.dtype(graph.dtype if graph.dtype is not None
+                              else np.float32)
+        self.part = ptree.part
+        self.ring_depth = max(int(ring_depth), 2)
+        self.timeout = float(timeout)
+        self.cache_dir = cache_dir if cache_dir is not None else _DEFAULT_CACHE
+
+        low = lower_partition(graph, ptree)
+        self.lowering = low
+        self.n_local = low.n_local
+        self._chan_owner = low.chan_owner
+        self._tx_local, self._rx_local = low.tx_local, low.rx_local
+
+        self._ring_prefix = f"sb{os.getpid() % 100000:x}{secrets.token_hex(3)}"
+        self._log_dir = log_dir or tempfile.mkdtemp(prefix="repro_procs_")
+        self._specs = [self._granule_spec(g) for g in range(self.G)]
+        self.signatures = [s.signature for s in self._specs]
+
+        # ---- the prebuilt-simulator cache: one compile per DISTINCT shape
+        self.build_stats: dict[str, Any] = {
+            "n_workers": self.G,
+            "n_signatures": len(set(self.signatures)),
+            "compiled": {},
+            "prebuild_seconds": 0.0,
+        }
+        if prebuild:
+            configure_compile_cache(self.cache_dir)
+            t0 = time.perf_counter()
+            done: set[str] = set()
+            for spec in self._specs:
+                if spec.signature in done:
+                    continue
+                done.add(spec.signature)
+                sim = GranuleSim(spec)
+                stats = sim.prebuild()
+                self.build_stats["compiled"][spec.signature] = stats
+            self.build_stats["prebuild_seconds"] = time.perf_counter() - t0
+
+        self._ctx = get_context("spawn")
+        self._procs: dict[int, Any] = {}
+        self._conns: dict[int, Any] = {}
+        self._rings: dict[str, ShmRing] = {}
+        self._hb_shm: shared_memory.SharedMemory | None = None
+        self._hb: np.ndarray | None = None
+        self._generation = 0
+        self._launched = False
+        self._closed = False
+        self._monitor: ProcessMonitor | None = None
+        _live_engines.add(self)
+
+    # ------------------------------------------------------------- lowering
+    def _granule_spec(self, g: int) -> GranuleSpec:
+        low, graph = self.lowering, self.graph
+        groups = []
+        for gi, grp in enumerate(graph.groups):
+            mo = low.member_of[gi][g]
+            params_local = None
+            if grp.params is not None:
+                params_local = _tree_np(grp.params, mo)
+            groups.append(GroupSpec(
+                block=grp.block,
+                n_members=grp.n_members,
+                n_slot=low.n_slot[gi],
+                member_of=mo.copy(),
+                active=low.act_tables[gi][g].copy(),
+                rx_idx=low.rx_tables[gi][g].copy(),
+                tx_idx=low.tx_tables[gi][g].copy(),
+                params_local=params_local,
+            ))
+        tiers = []
+        for t in range(self.ptree.n_tiers):
+            eg, ing = low.tier_channels(t, g)
+            tiers.append(TierSpec(
+                K=self.K_tiers[t],
+                E=self.E_tiers[t],
+                egress_chans=tuple(eg),
+                egress_lqids=low.tx_local[eg].astype(np.int32)
+                if eg else np.zeros((0,), np.int32),
+                ingress_chans=tuple(ing),
+                ingress_lqids=low.rx_local[ing].astype(np.int32)
+                if ing else np.zeros((0,), np.int32),
+            ))
+        ext = [
+            (name, cid, int(max(low.tx_local[cid], low.rx_local[cid])), is_in)
+            for name, cid, is_in in low.ext_channels(g)
+        ]
+        return GranuleSpec(
+            granule=g,
+            signature=low.granule_signature(g),
+            payload_words=self.W,
+            capacity=self.capacity,
+            dtype=self.dtype.str,
+            n_local=self.n_local,
+            groups=groups,
+            tiers=tiers,
+            ext_ports=ext,
+            ring_prefix=self._ring_prefix,
+            ring_depth=self.ring_depth,
+            timeout=self.timeout,
+        )
+
+    # ------------------------------------------------------------- lifecycle
+    def launch(self) -> "ProcsEngine":
+        """Create the rings and spawn one worker per granule (idempotent)."""
+        if self._launched:
+            return self
+        if self._closed:
+            raise RuntimeError("engine was closed")
+        itemsize = self.dtype.itemsize
+        for t, ts in enumerate(self.tiers):
+            for (tt, s, d), chans in sorted(self.lowering.routes.items()):
+                if tt != t:
+                    continue
+                for c in chans:
+                    self._rings[data_ring_name(self._ring_prefix, c)] = (
+                        ShmRing.create(
+                            data_ring_name(self._ring_prefix, c),
+                            self.ring_depth + 1,
+                            slab_slot_bytes(self.E_tiers[t], self.W, itemsize),
+                        )
+                    )
+                    self._rings[credit_ring_name(self._ring_prefix, c)] = (
+                        ShmRing.create(
+                            credit_ring_name(self._ring_prefix, c),
+                            self.ring_depth + 2, 4,
+                        )
+                    )
+        for name, (cid, is_in) in self.graph.ext_ports().items():
+            self._rings[ext_ring_name(self._ring_prefix, cid)] = ShmRing.create(
+                ext_ring_name(self._ring_prefix, cid),
+                self.capacity, self.W * itemsize,
+            )
+        self._seed_credit_rings()
+
+        hb_name = f"{self._ring_prefix}hb"
+        self._hb_shm = shared_memory.SharedMemory(
+            name=hb_name, create=True, size=16 * self.G
+        )
+        self._hb_shm.buf[:] = bytes(16 * self.G)
+        self._hb = np.frombuffer(self._hb_shm.buf, np.float64)
+
+        env_save = _child_env()
+        try:
+            for g, spec in enumerate(self._specs):
+                parent, child = self._ctx.Pipe()
+                log_path = os.path.join(self._log_dir, f"worker{g}.log")
+                p = self._ctx.Process(
+                    target=worker_entry,
+                    args=(child, pickle.dumps(spec), g, log_path,
+                          self.cache_dir, hb_name),
+                    daemon=True,
+                    name=f"repro-granule-{g}",
+                )
+                p.start()
+                child.close()
+                self._procs[g] = p
+                self._conns[g] = parent
+        finally:
+            _restore_env(env_save)
+        self._monitor = ProcessMonitor(
+            self._procs,
+            {g: os.path.join(self._log_dir, f"worker{g}.log")
+             for g in range(self.G)},
+            heartbeat=lambda g: float(self._hb[g * 2])
+            + float(self._hb[g * 2 + 1]),
+            hang_timeout_s=self.timeout,
+        )
+        self._launched = True
+        self.launch_stats = {"ready_seconds": {}}
+        for g in range(self.G):
+            t0 = time.perf_counter()
+            # no heartbeats exist yet (first beat lands on the init
+            # command), so the ready-wait polls exitcodes only under a
+            # generous absolute deadline — a cold compilation cache must
+            # not read as "hung"
+            kind, payload = self._recv(g, timeout=max(self.timeout, 300.0),
+                                       hang_check=False)
+            if kind != "ready":
+                raise WorkerDiedError(g, f"failed to start: {payload}",
+                                      read_log_tail(self._monitor.log_paths[g]))
+            self.launch_stats["ready_seconds"][g] = time.perf_counter() - t0
+        return self
+
+    def _seed_credit_rings(self) -> None:
+        """Every boundary channel's sender starts with capacity-1 credit —
+        the engines' initial-credit convention, as one pre-seeded record."""
+        for (t, s, d), chans in self.lowering.routes.items():
+            for c in chans:
+                ring = self._rings[credit_ring_name(self._ring_prefix, c)]
+                ring.reset()
+                ring.push_u32(self.capacity - 1, timeout=1.0)
+
+    def close(self) -> None:
+        """Tear down workers and unlink every shared-memory segment."""
+        if self._closed:
+            return
+        self._closed = True
+        for g, conn in list(self._conns.items()):
+            try:
+                conn.send(("exit",))
+            except Exception:
+                pass
+        for g, p in list(self._procs.items()):
+            try:
+                p.join(timeout=2.0)
+                if p.is_alive():
+                    p.terminate()
+                    p.join(timeout=2.0)
+            except Exception:
+                pass
+        for g, conn in list(self._conns.items()):
+            try:
+                conn.close()
+            except Exception:
+                pass
+        for ring in self._rings.values():
+            ring.close()
+        self._rings.clear()
+        if self._hb_shm is not None:
+            self._hb = None
+            try:
+                self._hb_shm.close()
+                self._hb_shm.unlink()
+            except Exception:
+                pass
+        _live_engines.discard(self)
+
+    def __del__(self):  # best-effort; atexit covers the normal path
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    # --------------------------------------------------------------- comms
+    def _check_workers(self, waiting_on=None) -> None:
+        if self._monitor is not None:
+            try:
+                self._monitor.check(waiting_on)
+            except WorkerDiedError:
+                # a dead granule poisons the whole fleet (its peers would
+                # hang on its rings) — tear everything down before raising
+                self.close()
+                raise
+
+    def _send(self, g: int, cmd: tuple) -> None:
+        """Send one command; a closed pipe means the worker is gone —
+        surface WorkerDiedError (with the log tail) instead of
+        BrokenPipeError, and tear the fleet down."""
+        if self._closed:
+            raise RuntimeError(
+                "engine is closed (a worker died or close() was called); "
+                "build a fresh engine"
+            )
+        try:
+            self._conns[g].send(cmd)
+        except (BrokenPipeError, OSError):
+            p = self._procs.get(g)
+            if p is not None:
+                p.join(timeout=1.0)
+            rc = p.exitcode if p is not None else None
+            tail = read_log_tail(
+                self._monitor.log_paths[g] if self._monitor else None
+            )
+            self.close()
+            raise WorkerDiedError(
+                g, f"died with exitcode {rc} (command pipe closed)", tail
+            )
+
+    def _recv(self, g: int, timeout: float | None = None,
+              progress: bool = False, hang_check: bool = True):
+        """Await one reply.  ``progress=True`` (run commands): no absolute
+        deadline — the ProcessMonitor's heartbeat watchdog converts a
+        worker that stops making *epoch progress* for ``timeout`` seconds
+        (dead, hung, or deadlocked on a ring) into a WorkerDiedError.
+        ``hang_check=False`` (startup): workers emit no heartbeats before
+        their first command, so only exitcodes are polled and the
+        absolute deadline governs."""
+        conn = self._conns[g]
+        deadline = (None if progress
+                    else time.monotonic() + (timeout or self.timeout))
+        while not conn.poll(0.02):
+            self._check_workers(waiting_on=(g,) if hang_check else None)
+            if deadline is not None and time.monotonic() > deadline:
+                tail = read_log_tail(self._monitor.log_paths[g])
+                self.close()
+                raise WorkerDiedError(
+                    g, f"no reply within {timeout or self.timeout:.0f}s", tail
+                )
+        return conn.recv()
+
+    def _command(self, g: int, cmd: tuple, timeout: float | None = None):
+        self._send(g, cmd)
+        kind, payload = self._recv(g, timeout)
+        if kind == "err":
+            self.close()
+            raise RuntimeError(f"worker {g} command {cmd[0]!r} failed:\n{payload}")
+        return payload
+
+    def _broadcast(self, cmd: tuple, progress: bool = False) -> list:
+        """Send to every worker, then collect every reply — the workers run
+        the command concurrently (free-running; no barrier inside)."""
+        for g in range(self.G):
+            self._send(g, cmd)
+        out = []
+        for g in range(self.G):
+            kind, payload = self._recv(g, progress=progress)
+            if kind == "err":
+                self.close()
+                raise RuntimeError(
+                    f"worker {g} command {cmd[0]!r} failed:\n{payload}"
+                )
+            out.append(payload)
+        return out
+
+    # ------------------------------------------------------ engine protocol
+    def init(self, key, group_params: dict[int, PyTree] | None = None) -> ProcsState:
+        import jax
+
+        self.launch()
+        self._generation += 1
+        for ring in self._rings.values():
+            ring.reset()
+        self._seed_credit_rings()
+        import jax.numpy as jnp
+
+        key = jnp.asarray(key)
+        if not jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+            key = jax.random.wrap_key_data(key)  # legacy raw uint32 keys
+        key_data = np.asarray(jax.device_get(jax.random.key_data(key)))
+        per_worker_params: list[list | None] = [None] * self.G
+        if group_params is not None:
+            for g in range(self.G):
+                sliced: list = [None] * len(self.graph.groups)
+                for gi, p in group_params.items():
+                    mo = self.lowering.member_of[gi][g]
+                    sliced[gi] = _tree_np(p, mo)
+                per_worker_params[g] = sliced
+        for g in range(self.G):
+            self._send(g, ("init", key_data, per_worker_params[g]))
+        for g in range(self.G):
+            kind, payload = self._recv(g)
+            if kind == "err":
+                self.close()
+                raise RuntimeError(f"worker {g} init failed:\n{payload}")
+        return ProcsState(
+            cycle=np.zeros((), np.int32), epoch=np.zeros((), np.int32),
+            generation=self._generation,
+        )
+
+    def _require(self, state: ProcsState) -> ProcsState:
+        if not isinstance(state, ProcsState):
+            raise TypeError(f"expected ProcsState, got {type(state).__name__}")
+        if state.generation != self._generation:
+            raise RuntimeError(
+                "stale ProcsState: the engine was re-initialized (reset) "
+                "after this handle was issued"
+            )
+        return state
+
+    def run_epochs(self, state: ProcsState, n_epochs: int, *,
+                   donate: bool = True) -> ProcsState:
+        """Free-run ``n_epochs`` on every worker.  Returns when the slowest
+        worker reaches the target epoch — the only global synchronization
+        is this *observation* at the command boundary; during the run each
+        worker is gated solely by its own channels' credits."""
+        state = self._require(state)
+        if n_epochs <= 0:
+            return state
+        epochs = self._broadcast(("run", int(n_epochs)), progress=True)
+        done = epochs[0]
+        assert all(e == done for e in epochs), epochs
+        return state.replace(
+            cycle=np.int32(done * self.cycles_per_epoch),
+            epoch=np.int32(done),
+        )
+
+    def run_cycles(self, state: ProcsState, n_cycles: int) -> ProcsState:
+        return self.run_epochs(
+            state, -(-int(n_cycles) // self.cycles_per_epoch)
+        )
+
+    def _done_view(self, view):
+        return view
+
+    def _np_tables(self, g: int):
+        """This granule's GraphTables as numpy (the launcher-side copy the
+        lightweight ``view`` replies are rejoined with — tables are
+        constant, so they never ride the per-epoch pickle)."""
+        if not hasattr(self, "_np_tables_cache"):
+            self._np_tables_cache: dict[int, Any] = {}
+        if g not in self._np_tables_cache:
+            from ..core.distributed import GraphTables
+
+            spec = self._specs[g]
+            self._np_tables_cache[g] = GraphTables(
+                rx_idx=tuple(gs.rx_idx for gs in spec.groups),
+                tx_idx=tuple(gs.tx_idx for gs in spec.groups),
+                active=tuple(gs.active for gs in spec.groups),
+                send_idx=tuple(t.egress_lqids for t in spec.tiers),
+                send_mask=tuple(np.ones(len(t.egress_chans), bool)
+                                for t in spec.tiers),
+                recv_idx=tuple(t.ingress_lqids for t in spec.tiers),
+                recv_mask=tuple(np.ones(len(t.ingress_chans), bool)
+                                for t in spec.tiers),
+            )
+        return self._np_tables_cache[g]
+
+    def _views(self) -> list:
+        return [
+            v.replace(tables=self._np_tables(g))
+            for g, v in enumerate(self._broadcast(("view",)))
+        ]
+
+    def eval_done(self, state: ProcsState, done_fn: Callable) -> bool:
+        """Evaluate a granule-local predicate on every worker's state view
+        (host-side — predicates are arbitrary closures, which do not cross
+        process boundaries)."""
+        self._require(state)
+        return all(bool(np.asarray(done_fn(self._done_view(v))).all())
+                   for v in self._views())
+
+    def run_until(self, state: ProcsState, done_fn: Callable,
+                  max_epochs: int, *, cache_key: Any = None,
+                  donate: bool = True) -> ProcsState:
+        """Run until ``done_fn`` holds on every granule (checked at epoch
+        boundaries, the engines' cadence), at most ``max_epochs`` more."""
+        state = self._require(state)
+        ran = 0
+        while ran < max_epochs and not self.eval_done(state, done_fn):
+            state = self.run_epochs(state, 1)
+            ran += 1
+        return state
+
+    def run_until_done(self, state: ProcsState, max_epochs: int, **kw) -> ProcsState:
+        return self.run_until(
+            state, lambda v: np.asarray(True), max_epochs, **kw
+        )
+
+    # ------------------------------------------------------------- probing
+    def group_state(self, state: ProcsState, inst) -> PyTree:
+        """One instance's (unstacked) live state — mirrors the in-process
+        engines' ``group_state``."""
+        self._require(state)
+        inst_id = inst if isinstance(inst, int) else inst.inst_id
+        gi, slot_g = self.graph.locate(inst_id)
+        g = int(self.lowering.member_granule[gi][slot_g])
+        slot = int(self.lowering.member_slot[gi][slot_g])
+        return self._command(g, ("probe", gi, slot))
+
+    def gather_group(self, state: ProcsState, gi: int) -> PyTree:
+        """Group ``gi``'s member states in global instantiation order."""
+        self._require(state)
+        views = self._views()
+        low = self.lowering
+        import jax
+
+        def pick(*leaves):
+            stacked = np.stack(
+                [leaves[g][low.member_slot[gi][m]]
+                 for m, g in enumerate(low.member_granule[gi])]
+            ) if len(low.member_granule[gi]) else np.zeros((0,))
+            return stacked
+
+        per_worker = [v.block_states[gi] for v in views]
+        return jax.tree.map(pick, *per_worker)
+
+    def worker_stats(self, state: ProcsState | None = None) -> list[dict]:
+        if state is not None:
+            self._require(state)
+        return self._broadcast(("stats",))
+
+    def port_stats(self, state: ProcsState) -> dict[str, dict]:
+        """Per external port: shm-ring occupancy (packets the host can pop /
+        has parked) plus the owning worker's device-queue occupancy — the
+        uniform ``Simulation.stats()["ports"]`` schema, nested by
+        direction so a name serving BOTH directions reports each
+        channel's own ring/queue."""
+        self._require(state)
+        wstats = {s["granule"]: s for s in self.worker_stats()}
+
+        def rec(cid, name, is_in):
+            ring = self._rings[ext_ring_name(self._ring_prefix, cid)]
+            g = int(self._chan_owner[cid])
+            dev = wstats[g]["ports"].get(name, {})
+            return {
+                "occupancy": ring.size() + int(dev.get("occupancy", 0)),
+                "credit": (self.capacity - 1 - int(dev.get("occupancy", 0)))
+                if is_in else ring.free(),
+                "ring": ring.size(),
+                "home": g,
+            }
+
+        return {
+            "tx": {n: rec(c, n, True) for n, c in self.graph.ext_in.items()},
+            "rx": {n: rec(c, n, False) for n, c in self.graph.ext_out.items()},
+        }
+
+    # ---------------------- host-side external ports (PySbTx/PySbRx surface)
+    def _ext_ring(self, table: dict, name: str) -> ShmRing:
+        if name not in table:
+            raise KeyError(name)
+        return self._rings[ext_ring_name(self._ring_prefix, table[name])]
+
+    def host_push(self, state: ProcsState, name: str, payload):
+        state = self._require(state)
+        arr = np.asarray(payload, self.dtype).reshape(1, self.W)
+        n = self._ext_ring(self.graph.ext_in, name).push_packets(arr)
+        return state, np.bool_(n == 1)
+
+    def host_pop(self, state: ProcsState, name: str):
+        state = self._require(state)
+        got = self._ext_ring(self.graph.ext_out, name).pop_packets(
+            1, self.dtype, self.W
+        )
+        if len(got):
+            return state, got[0], np.bool_(True)
+        return state, np.zeros((self.W,), self.dtype), np.bool_(False)
+
+    def host_push_many(self, state: ProcsState, name: str, payloads):
+        state = self._require(state)
+        arr = np.asarray(payloads, self.dtype).reshape(-1, self.W)
+        arr = arr[: self.capacity - 1]
+        n = self._ext_ring(self.graph.ext_in, name).push_packets(arr)
+        return state, np.int32(n)
+
+    def host_pop_many(self, state: ProcsState, name: str, max_n: int):
+        state = self._require(state)
+        got = self._ext_ring(self.graph.ext_out, name).pop_packets(
+            max_n, self.dtype, self.W
+        )
+        out = np.zeros((max_n, self.W), self.dtype)
+        out[: len(got)] = got
+        return state, out, np.int32(len(got))
+
+    # ------------------------------------------------- checkpoint (gather)
+    def gather_state(self, state: ProcsState) -> PyTree:
+        """Full-fleet state as one pytree: every worker's granule state,
+        every boundary channel's in-flight credit record, every external
+        ring's resident packets (fixed-size buffers + counts, so the
+        checkpoint template is shape-stable)."""
+        state = self._require(state)
+        workers = self._broadcast(("gather",))
+        credits = {}
+        for (t, s, d), chans in sorted(self.lowering.routes.items()):
+            for c in chans:
+                ring = self._rings[credit_ring_name(self._ring_prefix, c)]
+                snap = ring.snapshot()
+                # at a command boundary exactly one credit is in flight
+                assert len(snap) == 1, (c, len(snap))
+                credits[f"c{c}"] = snap[0].copy()
+        ext = {}
+        for name, (cid, is_in) in self.graph.ext_ports().items():
+            ring = self._rings[ext_ring_name(self._ring_prefix, cid)]
+            snap = ring.snapshot()
+            buf = np.zeros((self.capacity - 1, ring.slot_bytes), np.uint8)
+            buf[: len(snap)] = snap
+            ext[name] = {"buf": buf, "count": np.int32(len(snap))}
+        return {
+            "cycle": np.asarray(state.cycle),
+            "epoch": np.asarray(state.epoch),
+            "workers": {f"g{g}": w for g, w in enumerate(workers)},
+            "credits": credits,
+            "ext": ext,
+        }
+
+    def scatter_state(self, state: ProcsState, tree: PyTree) -> ProcsState:
+        """Restore a ``gather_state`` tree into the running fleet."""
+        import jax
+
+        state = self._require(state)
+        tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        for (t, s, d), chans in sorted(self.lowering.routes.items()):
+            for c in chans:
+                ring = self._rings[credit_ring_name(self._ring_prefix, c)]
+                ring.restore(np.asarray(tree["credits"][f"c{c}"])[None])
+        for (t, s, d), chans in sorted(self.lowering.routes.items()):
+            for c in chans:
+                self._rings[data_ring_name(self._ring_prefix, c)].reset()
+        for name, (cid, is_in) in self.graph.ext_ports().items():
+            ring = self._rings[ext_ring_name(self._ring_prefix, cid)]
+            rec = tree["ext"][name]
+            ring.restore(np.asarray(rec["buf"])[: int(rec["count"])])
+        epoch = int(np.asarray(tree["epoch"]).ravel()[0])
+        for g in range(self.G):
+            self._send(g, ("scatter", tree["workers"][f"g{g}"], epoch))
+        for g in range(self.G):
+            kind, payload = self._recv(g)
+            if kind == "err":
+                self.close()
+                raise RuntimeError(f"worker {g} scatter failed:\n{payload}")
+        return state.replace(
+            cycle=np.int32(np.asarray(tree["cycle"]).ravel()[0]),
+            epoch=np.int32(epoch),
+        )
+
+
+def _tree_np(tree: PyTree, idx: np.ndarray) -> PyTree:
+    import jax
+
+    return jax.tree.map(lambda x: np.asarray(x)[np.asarray(idx)], tree)
+
+
+def _child_env() -> dict[str, str | None]:
+    """Point spawned workers at a single CPU device: strip the parent's
+    fake-device XLA flag and force the CPU platform.  Returns the saved
+    parent values for ``_restore_env``."""
+    saved = {k: os.environ.get(k) for k in ("XLA_FLAGS", "JAX_PLATFORMS")}
+    flags = [
+        f for f in os.environ.get("XLA_FLAGS", "").split()
+        if "xla_force_host_platform_device_count" not in f
+    ]
+    if flags:
+        os.environ["XLA_FLAGS"] = " ".join(flags)
+    else:
+        os.environ.pop("XLA_FLAGS", None)
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    return saved
+
+
+def _restore_env(saved: dict[str, str | None]) -> None:
+    for k, v in saved.items():
+        if v is None:
+            os.environ.pop(k, None)
+        else:
+            os.environ[k] = v

@@ -1,0 +1,303 @@
+"""Lock-free SPSC rings over ``multiprocessing.shared_memory`` (paper §III-B).
+
+This is the paper's headline data structure, reproduced at its native
+layer: a single-producer single-consumer ring buffer in a shared-memory
+segment, connecting two *free-running OS processes* with no locks and no
+syscalls on the fast path.  The layout mirrors the paper's queue page —
+
+    byte   0:  head (u32, next slot to WRITE; producer-owned)
+    byte  64:  tail (u32, next slot to READ;  consumer-owned)
+    byte 128:  capacity slots of ``slot_bytes`` each
+
+— head and tail on separate cache lines so producer and consumer never
+false-share (§III-B's "cache-friendly" split), and the ring arithmetic is
+**bit-compatible with ``repro.core.queue``**: ``head == tail`` is empty,
+``(head + 1) % capacity == tail`` is full, so a ring of capacity C holds
+at most C - 1 records (property-tested against the in-process QueueArray
+semantics in ``tests/test_runtime.py``).
+
+Ordering: the producer writes the slot payload *before* publishing
+``head``; the consumer reads the payload before publishing ``tail``.
+CPython's GIL plus x86-TSO store ordering make the aligned u32
+publication atomic and ordered for this use — the same argument the
+paper makes for its acquire/release pair, at Python's abstraction level.
+
+Three record flavors sit on the same ring:
+
+  * **packet rings** (host Tx/Rx ports): one slot = one W-word packet;
+  * **slab rings** (boundary channels): one slot = one epoch's exchange
+    slab, ``u32 count + E*W payload`` — the free-running runtime's unit
+    of synchronization (DESIGN.md §Runtime);
+  * **credit rings** (reverse direction of each boundary channel): one
+    slot = one u32 credit, the receiver's post-fill free space.
+
+Blocking helpers (``push_wait`` / ``pop_wait``) spin with a short sleep
+and honor a deadline plus an optional liveness ``check`` callback, so a
+dead peer surfaces as ``RingTimeout`` (→ ``WorkerDiedError`` in the
+launcher) instead of a hang.
+"""
+from __future__ import annotations
+
+import time
+from multiprocessing import shared_memory
+from typing import Callable
+
+import numpy as np
+
+_HEAD_OFF = 0
+_TAIL_OFF = 64
+_DATA_OFF = 128
+
+
+class RingTimeout(RuntimeError):
+    """A blocking ring operation exceeded its deadline."""
+
+
+def attach_shared_memory(name: str) -> shared_memory.SharedMemory:
+    """Attach to an existing segment WITHOUT registering it with the
+    resource tracker.
+
+    The launcher owns every segment's lifetime (create + unlink).  A
+    worker that attaches through the stock constructor would register the
+    name a second time with the shared resource tracker (CPython
+    bpo-38119), and the worker's exit would then unlink — or warn about —
+    a segment its peers are still using.  Suppressing registration on the
+    attach side leaves exactly one owner."""
+    from multiprocessing import resource_tracker
+
+    orig = resource_tracker.register
+
+    def _skip(name_, rtype):  # pragma: no cover - trivial shim
+        if rtype != "shared_memory":
+            orig(name_, rtype)
+
+    resource_tracker.register = _skip
+    try:
+        return shared_memory.SharedMemory(name=name, create=False)
+    finally:
+        resource_tracker.register = orig
+
+
+class ShmRing:
+    """One SPSC ring in a named shared-memory segment.
+
+    Exactly one process may push and one may pop (they can be the same
+    process).  ``capacity`` counts slots; at most ``capacity - 1`` records
+    are ever resident — the ``repro.core.queue`` convention.
+    """
+
+    def __init__(self, shm: shared_memory.SharedMemory, capacity: int,
+                 slot_bytes: int, *, owner: bool):
+        self._shm = shm
+        self.name = shm.name
+        self.capacity = int(capacity)
+        self.slot_bytes = int(slot_bytes)
+        self._owner = owner
+        buf = shm.buf
+        self._head = np.frombuffer(buf, np.uint32, count=1, offset=_HEAD_OFF)
+        self._tail = np.frombuffer(buf, np.uint32, count=1, offset=_TAIL_OFF)
+        self._slots = np.frombuffer(
+            buf, np.uint8, count=self.capacity * self.slot_bytes,
+            offset=_DATA_OFF,
+        ).reshape(self.capacity, self.slot_bytes)
+
+    # ------------------------------------------------------------- lifecycle
+    @classmethod
+    def create(cls, name: str, capacity: int, slot_bytes: int) -> "ShmRing":
+        if capacity < 2:
+            raise ValueError(f"ring capacity must be >= 2, got {capacity}")
+        size = _DATA_OFF + capacity * slot_bytes
+        shm = shared_memory.SharedMemory(name=name, create=True, size=size)
+        shm.buf[:_DATA_OFF] = bytes(_DATA_OFF)
+        ring = cls(shm, capacity, slot_bytes, owner=True)
+        return ring
+
+    @classmethod
+    def attach(cls, name: str, capacity: int, slot_bytes: int) -> "ShmRing":
+        return cls(attach_shared_memory(name), capacity, slot_bytes,
+                   owner=False)
+
+    def close(self) -> None:
+        # Release numpy views before closing the mmap (else BufferError).
+        self._head = self._tail = self._slots = None
+        try:
+            self._shm.close()
+        except Exception:
+            pass
+        if self._owner:
+            try:
+                self._shm.unlink()
+            except Exception:
+                pass
+
+    # ------------------------------------------------------------ occupancy
+    @property
+    def head(self) -> int:
+        return int(self._head[0])
+
+    @property
+    def tail(self) -> int:
+        return int(self._tail[0])
+
+    def size(self) -> int:
+        return (self.head - self.tail) % self.capacity
+
+    def free(self) -> int:
+        return (self.capacity - 1) - self.size()
+
+    def empty(self) -> bool:
+        return self.head == self.tail
+
+    def full(self) -> bool:
+        return (self.head + 1) % self.capacity == self.tail
+
+    def reset(self) -> None:
+        """Drop all records (single-threaded use only — e.g. session reset,
+        while no worker is running)."""
+        self._head[0] = 0
+        self._tail[0] = 0
+
+    # ------------------------------------------------------------- raw slots
+    def push_bytes(self, payload) -> bool:
+        """Write one record.  Returns False when full (nothing written)."""
+        h, t = self.head, self.tail
+        if (h + 1) % self.capacity == t:
+            return False
+        view = np.frombuffer(payload, np.uint8)
+        self._slots[h, : view.size] = view
+        self._head[0] = (h + 1) % self.capacity  # publish AFTER the payload
+        return True
+
+    def pop_bytes(self) -> bytes | None:
+        """Read one record (a copy).  Returns None when empty."""
+        h, t = self.head, self.tail
+        if h == t:
+            return None
+        out = self._slots[t].tobytes()
+        self._tail[0] = (t + 1) % self.capacity
+        return out
+
+    def _wait(self, ready: Callable[[], bool], timeout: float,
+              check: Callable[[], None] | None, what: str) -> None:
+        deadline = time.monotonic() + timeout
+        delay = 20e-6
+        while not ready():
+            if check is not None:
+                check()
+            if time.monotonic() > deadline:
+                raise RingTimeout(
+                    f"{what} on ring {self.name} timed out after {timeout}s "
+                    f"(size={self.size()}/{self.capacity - 1})"
+                )
+            time.sleep(delay)
+            delay = min(delay * 2, 1e-3)
+
+    def push_bytes_wait(self, payload, timeout: float,
+                        check: Callable[[], None] | None = None) -> None:
+        self._wait(lambda: not self.full(), timeout, check, "push")
+        assert self.push_bytes(payload)
+
+    def pop_bytes_wait(self, timeout: float,
+                       check: Callable[[], None] | None = None) -> bytes:
+        self._wait(lambda: not self.empty(), timeout, check, "pop")
+        out = self.pop_bytes()
+        assert out is not None
+        return out
+
+    # ------------------------------------------- packet records (host ports)
+    # One slot = one packet of W words; dtype fixed at ring construction by
+    # slot_bytes = W * itemsize.  Batched push/pop move what fits and report
+    # the count — the same partial-landing contract as queue.fill_single.
+    def push_packets(self, arr: np.ndarray) -> int:
+        """Push up to len(arr) packets ((k, slot_bytes) as raw rows after a
+        view cast); records beyond ``free()`` are refused.  Returns count."""
+        if len(arr) == 0:
+            return 0
+        raw = np.ascontiguousarray(arr).view(np.uint8).reshape(len(arr), -1)
+        if raw.shape[1] != self.slot_bytes:
+            raise ValueError(
+                f"packet rows are {raw.shape[1]}B, ring slots {self.slot_bytes}B"
+            )
+        n = min(len(raw), self.free())
+        h = self.head
+        for i in range(n):  # small k (<= capacity-1); clarity over vectorizing
+            self._slots[(h + i) % self.capacity] = raw[i]
+        if n:
+            self._head[0] = (h + n) % self.capacity
+        return n
+
+    def peek_packets(self, max_n: int, dtype, words: int) -> np.ndarray:
+        """Read up to ``max_n`` packets WITHOUT consuming them — the caller
+        commits with ``advance(n)`` after it knows how many landed
+        downstream (partial host-tier ingest)."""
+        n = min(max_n, self.size())
+        t = self.tail
+        idx = (t + np.arange(n)) % self.capacity
+        raw = self._slots[idx]
+        return raw.view(np.dtype(dtype)).reshape(n, words).copy()
+
+    def advance(self, n: int) -> None:
+        """Consume ``n`` records previously ``peek``ed."""
+        if n:
+            self._tail[0] = (self.tail + n) % self.capacity
+    def pop_packets(self, max_n: int, dtype, words: int) -> np.ndarray:
+        out = self.peek_packets(max_n, dtype, words)
+        self.advance(len(out))
+        return out
+
+    # --------------------------------------- slab records (boundary channels)
+    # One slot = u32 count + E*W payload words: one epoch's exchange slab.
+    def push_slab_wait(self, count: int, slab: np.ndarray, timeout: float,
+                       check: Callable[[], None] | None = None) -> None:
+        rec = np.empty((self.slot_bytes,), np.uint8)
+        rec[:4] = np.frombuffer(np.uint32(count).tobytes(), np.uint8)
+        raw = np.ascontiguousarray(slab).view(np.uint8).reshape(-1)
+        rec[4:4 + raw.size] = raw
+        self.push_bytes_wait(rec, timeout, check)
+
+    def pop_slab_wait(self, shape, dtype, timeout: float,
+                      check: Callable[[], None] | None = None
+                      ) -> tuple[int, np.ndarray]:
+        rec = self.pop_bytes_wait(timeout, check)
+        count = int(np.frombuffer(rec, np.uint32, count=1)[0])
+        slab = np.frombuffer(rec, np.dtype(dtype), offset=4,
+                             count=int(np.prod(shape))).reshape(shape)
+        return count, slab
+
+    # ------------------------------------------------------- credit records
+    def push_u32(self, value: int, timeout: float,
+                 check: Callable[[], None] | None = None) -> None:
+        self.push_bytes_wait(np.uint32(value).tobytes(), timeout, check)
+
+    def pop_u32_wait(self, timeout: float,
+                     check: Callable[[], None] | None = None) -> int:
+        return int(np.frombuffer(self.pop_bytes_wait(timeout, check),
+                                 np.uint32, count=1)[0])
+
+    # --------------------------------------------- checkpoint gather-scatter
+    def snapshot(self) -> np.ndarray:
+        """Resident records, oldest first, WITHOUT consuming them —
+        (size, slot_bytes) u8.  Single-threaded use only (session rest)."""
+        n = self.size()
+        idx = (self.tail + np.arange(n)) % self.capacity
+        return self._slots[idx].copy()
+
+    def restore(self, records: np.ndarray) -> None:
+        """Replace the ring contents with ``records`` ((k, slot_bytes) u8)."""
+        records = np.asarray(records, np.uint8).reshape(-1, self.slot_bytes)
+        if len(records) > self.capacity - 1:
+            raise ValueError(
+                f"{len(records)} records > ring capacity-1={self.capacity - 1}"
+            )
+        self.reset()
+        self._slots[: len(records)] = records
+        self._head[0] = len(records)
+
+    def __repr__(self):
+        return (f"ShmRing({self.name!r}, {self.size()}/{self.capacity - 1} "
+                f"x {self.slot_bytes}B)")
+
+
+def slab_slot_bytes(E: int, W: int, itemsize: int) -> int:
+    """Slot size for a boundary-channel slab ring (u32 count + E*W words)."""
+    return 4 + E * W * itemsize

@@ -1,0 +1,423 @@
+"""Free-running multiprocess runtime (DESIGN.md §Runtime; paper §III).
+
+Covered here:
+
+  * ``runtime/shmem.py`` ring ops property-tested against the
+    ``core/queue.py`` ring semantics: the same random push/pop script is
+    applied to a shared-memory ring and an in-process ``QueueArray`` and
+    every observable (success flags, popped payloads, size/free/empty/
+    full) must agree — including wraparound and the full/empty edges;
+  * session-script bit-exactness: the random host send/recv scripts and
+    the interactive checkpoint scenario from ``tests/test_session.py``
+    produce bit-identical traffic on ``engine="procs"`` vs the in-process
+    engines — cycle-accurate at K=1/capacity=2, sequence-exact at any K,
+    including a 4-worker run whose external ports are homed OFF worker 0;
+  * the systolic scenario (reset / run(until) / probe / save / load /
+    resume) on the free-running fleet, bit-identical to the single
+    netlist;
+  * the prebuilt-simulator cache: same-shaped granules share one
+    signature, so the launcher compiles once for N workers;
+  * fault tolerance: SIGKILL one worker mid-session and the next command
+    raises ``WorkerDiedError`` carrying that worker's log tail — never a
+    hang (the kill-one-worker regression test);
+  * a 4-worker wafer (manycore torus allreduce) smoke whose global-sum
+    invariant witnesses every packet crossing every shm boundary.
+"""
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Network, queue as qmod
+from repro.runtime import ProcsEngine, ShmRing, WorkerDiedError
+from repro.runtime.shmem import slab_slot_bytes
+
+from test_session import Increment, build_chain, io_script, _interactive
+
+_TIMEOUT = 60.0  # generous: 2-CPU CI boxes timeshare the workers
+
+
+def procs_build(net, **kw):
+    kw.setdefault("timeout", _TIMEOUT)
+    return net.build(engine="procs", **kw)
+
+
+@pytest.fixture
+def closing():
+    """Close every procs engine opened in the test (workers die with the
+    session either way — the atexit sweep — but tests should not leak)."""
+    sims = []
+    yield sims.append
+    for sim in sims:
+        try:
+            sim.engine.close()
+        except Exception:
+            pass
+
+
+# ------------------------------------------------- shm ring vs queue.py
+def _apply_script(ops, cap, W=2):
+    """Run one push/pop script against BOTH implementations, asserting
+    every observable matches step by step."""
+    ring = ShmRing.create(f"t_ring_{os.getpid()}_{abs(hash(tuple(ops))) % 10**8}",
+                          cap, W * 4)
+    try:
+        q = qmod.make_queues(1, W, cap)
+        for do_push, do_pop, val in ops:
+            assert ring.size() == int(qmod.size(q)[0])
+            assert ring.free() == int(qmod.free(q)[0])
+            assert ring.empty() == bool(qmod.empty(q)[0])
+            assert ring.full() == bool(qmod.full(q)[0])
+            payload = np.full((W,), val, np.float32)
+            if do_pop:
+                got = ring.pop_packets(1, np.float32, W)
+                front, tail, valid = qmod.pop_single(
+                    q.buf[0], q.head[0], q.tail[0], cap
+                )
+                q = q.replace(tail=q.tail.at[0].set(tail))
+                if bool(valid):
+                    assert len(got) == 1
+                    np.testing.assert_array_equal(got[0], np.asarray(front))
+                else:
+                    assert len(got) == 0
+            if do_push:
+                ok_ring = ring.push_packets(payload[None]) == 1
+                buf, head, ok = qmod.push_single(
+                    q.buf[0], q.head[0], q.tail[0], cap, payload
+                )
+                q = q.replace(
+                    buf=q.buf.at[0].set(buf), head=q.head.at[0].set(head)
+                )
+                assert ok_ring == bool(ok)
+    finally:
+        ring.close()
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_ring_matches_queue_semantics(seed):
+    """Random push/pop interleavings: the shm ring and the in-process
+    QueueArray agree on every observable (incl. wraparound at cap=4 —
+    a 50-op script laps the 4-slot ring many times over)."""
+    rng = np.random.RandomState(seed)
+    ops = [
+        (bool(rng.randint(2)), bool(rng.randint(2)),
+         float(rng.uniform(0, 100)))
+        for _ in range(50)
+    ]
+    _apply_script(ops, cap=4)
+
+
+def test_ring_full_empty_edges():
+    ring = ShmRing.create(f"t_edge_{os.getpid()}", 4, 8)
+    try:
+        assert ring.empty() and not ring.full() and ring.free() == 3
+        assert ring.pop_bytes() is None  # pop empty -> None
+        for i in range(3):
+            assert ring.push_packets(np.full((1, 2), float(i), np.float32)) == 1
+        assert ring.full() and ring.free() == 0
+        # push into a full ring must be refused, like the paper's queue
+        assert ring.push_packets(np.zeros((1, 2), np.float32)) == 0
+        got = ring.pop_packets(10, np.float32, 2)
+        np.testing.assert_array_equal(got[:, 0], [0.0, 1.0, 2.0])
+        assert ring.empty()
+    finally:
+        ring.close()
+
+
+def test_ring_batch_partial_and_wraparound():
+    ring = ShmRing.create(f"t_batch_{os.getpid()}", 5, 8)
+    try:
+        arr = np.arange(12, dtype=np.float32).reshape(6, 2)
+        assert ring.push_packets(arr) == 4  # capacity-1 slots land
+        assert ring.peek_packets(2, np.float32, 2).shape == (2, 2)
+        ring.advance(2)
+        assert ring.push_packets(arr) == 2  # wraps around the slot array
+        got = ring.pop_packets(10, np.float32, 2)
+        np.testing.assert_array_equal(
+            got[:, 0], [4.0, 6.0, 0.0, 2.0]  # FIFO across the wrap
+        )
+        # slab + snapshot/restore round-trip
+        slab_ring = ShmRing.create(
+            f"t_slab_{os.getpid()}", 3, slab_slot_bytes(3, 2, 4)
+        )
+        try:
+            slab_ring.push_slab_wait(2, np.ones((3, 2), np.float32), 1.0)
+            snap = slab_ring.snapshot()
+            cnt, slab = slab_ring.pop_slab_wait((3, 2), np.float32, 1.0)
+            assert cnt == 2
+            slab_ring.restore(snap)
+            cnt2, slab2 = slab_ring.pop_slab_wait((3, 2), np.float32, 1.0)
+            assert cnt2 == cnt and np.array_equal(slab, slab2)
+        finally:
+            slab_ring.close()
+    finally:
+        ring.close()
+
+
+# -------------------------------------------------- session bit-exactness
+def test_procs_io_parity_cycle_accurate(closing):
+    """K=1 / capacity=2 sessions: per-boundary traffic of the random
+    send/recv script is bit-identical procs vs single (the same contract
+    the graph/fused engines satisfy in test_session)."""
+    ref_sim = build_chain(capacity=2).build()
+    ref_sim.reset(0)
+    ref = io_script(ref_sim, n_steps=12)
+
+    sim = procs_build(build_chain(capacity=2), n_workers=2,
+                      partition=[0, 0, 1], K=1)
+    closing(sim)
+    sim.reset(0)
+    tr = io_script(sim, n_steps=12)
+    assert len(tr) == len(ref)
+    for i, (a, b) in enumerate(zip(ref, tr)):
+        np.testing.assert_array_equal(a, b, err_msg=f"boundary {i}")
+    assert sum(len(t) for t in ref) > 3  # something actually flowed
+
+
+def test_procs_io_parity_quiescent_any_k(closing):
+    """K>1: boundary timing shifts but the drained packet sequence is
+    identical after quiescence — latency-insensitivity extended across
+    process boundaries."""
+    payloads = [[float(10 * j + 1), float(j)] for j in range(7)]
+
+    def run_one(sim):
+        sim.reset(0)
+        sim.tx("tx").send_many(payloads)
+        got = []
+        for _ in range(20):
+            sim.run(cycles=15)
+            got.extend(np.asarray(sim.rx("rx").drain()))
+            if len(got) == len(payloads) and sim.tx("tx").pending == 0:
+                break
+        assert sim.tx("tx").pending == 0
+        return np.asarray(got)
+
+    ref = run_one(build_chain().build())
+    sim = procs_build(build_chain(), n_workers=3, partition=[0, 1, 2], K=3)
+    closing(sim)
+    np.testing.assert_array_equal(ref, run_one(sim))
+    assert len(ref) == 7
+
+
+def test_procs_multiworker_nonzero_home(closing):
+    """4 workers with the chain reversed over granules: ext-in homes on
+    worker 3, ext-out on worker 1 — host I/O routes to the owning
+    worker's rings and stays bit-identical to the single netlist."""
+    ref_sim = build_chain(4, capacity=2).build()
+    ref_sim.reset(0)
+    ref = io_script(ref_sim, n_steps=10)
+
+    part = {"b0": 3, "b1": 2, "b2": 2, "b3": 1}
+    sim = procs_build(build_chain(4, capacity=2), n_workers=4,
+                      partition=part, K=1)
+    closing(sim)
+    g = sim.engine.graph
+    assert sim.engine._chan_owner[g.ext_in["tx"]] == 3
+    assert sim.engine._chan_owner[g.ext_out["rx"]] == 1
+    sim.reset(0)
+    tr = io_script(sim, n_steps=10)
+    for i, (a, b) in enumerate(zip(ref, tr)):
+        np.testing.assert_array_equal(a, b, err_msg=f"boundary {i}")
+
+
+def test_procs_interactive_checkpoint_resume(closing, tmp_path):
+    """The scripted interactive scenario (feed, mid-run checkpoint, resume
+    in a FRESH fleet, drain) is bit-identical to the uninterrupted run —
+    checkpoint gather/scatter across worker processes."""
+    ck = str(tmp_path / "ck")
+    sim1 = procs_build(build_chain(), n_workers=3, partition=[0, 1, 2], K=2)
+    closing(sim1)
+    out_full, counts_full, cyc_full = _interactive(sim1, ckpt_dir=ck)
+    sim2 = procs_build(build_chain(), n_workers=3, partition=[0, 1, 2], K=2)
+    closing(sim2)
+    out_res, counts_res, cyc_res = _interactive(sim2, resume_from=ck)
+    np.testing.assert_array_equal(out_full, out_res)
+    assert counts_full == counts_res == [5, 5, 5]
+    assert cyc_full == cyc_res
+    np.testing.assert_array_equal(
+        np.sort(out_full[:, 0]), [13.0, 23.0, 33.0, 43.0, 53.0]
+    )
+    # ... and the traffic equals the in-process engines' (single ref)
+    ref_out, ref_counts, ref_cyc = _interactive(build_chain().build())
+    np.testing.assert_array_equal(ref_out, out_full)
+    assert ref_counts == counts_full and ref_cyc == cyc_full
+
+
+def test_procs_systolic_scenario(closing, tmp_path):
+    """The four-engine systolic scenario, fifth engine edition: the same
+    session lifecycle (reset / run(until) / probe / save / load) on a
+    4-worker fleet, bit-identical to the single netlist."""
+    from repro.hw.systolic import make_systolic_network
+
+    rng = np.random.RandomState(3)
+    M, K, N = 6, 4, 4
+    A = rng.randn(M, K).astype(np.float32)
+    B = rng.randn(K, N).astype(np.float32)
+
+    def result_of(sim):
+        cols = [sim.probe((K - 1) * N + c) for c in range(N)]
+        return np.stack([np.asarray(c.y_buf) for c in cols], axis=1)
+
+    done = lambda s: ((~s.block_states[0].is_south)  # noqa: E731
+                      | (s.block_states[0].y_idx >= M)).all()
+
+    ref = make_systolic_network(A, B)[0].build()
+    ref.reset(0)
+    ref.run(until=done, max_epochs=100_000, cache_key="d")
+    want = result_of(ref)
+
+    part = (np.arange(K * N) % 4).tolist()  # round-robin: heavy cross-talk
+    sim = procs_build(make_systolic_network(A, B)[0], n_workers=4,
+                      partition=part, K=4)
+    closing(sim)
+    sim.reset(0)
+    sim.run(cycles=12)
+    ck = str(tmp_path / "sys")
+    sim.save(ck)
+    probe_mid = sim.probe(0)
+    assert int(np.asarray(probe_mid.a_idx)) > 0  # the stream has started
+    sim.run(until=done, max_epochs=100_000, cache_key="d")
+    got = result_of(sim)
+    np.testing.assert_array_equal(want, got)
+    np.testing.assert_allclose(got, A @ B, rtol=1e-4)
+
+    sim2 = procs_build(make_systolic_network(A, B)[0], n_workers=4,
+                       partition=part, K=4)
+    closing(sim2)
+    sim2.reset(0)
+    sim2.load(ck)
+    assert sim2.cycle == 12
+    sim2.run(until=done, max_epochs=100_000, cache_key="d")
+    np.testing.assert_array_equal(want, result_of(sim2))
+
+
+# ------------------------------------------------- wafer smoke (4 workers)
+def test_procs_wafer_smoke(closing):
+    """4-worker manycore torus allreduce: every core's accumulator must
+    converge to the global sum — one equality that witnesses every packet
+    crossing every shared-memory boundary (the CI procs smoke)."""
+    from repro.core.graph import ChannelGraph
+    from repro.hw.manycore import (
+        ManycoreCell, allreduce_done, expected_total, make_core_params,
+    )
+
+    R = C = 4
+    values = (np.arange(R * C, dtype=np.int64) % 7 + 1).astype(np.float32)
+    graph = ChannelGraph.torus(
+        ManycoreCell(R, C), R, C,
+        params=make_core_params(values.reshape(R, C)), capacity=4,
+    )
+    from repro.core.graph import tiered_grid_partition
+
+    part = tiered_grid_partition(R, C, [(2, 2)])
+    eng = ProcsEngine(graph, part, n_workers=4, K=2, timeout=_TIMEOUT)
+    from repro.core import Simulation
+
+    sim = Simulation(eng)
+    closing(sim)
+    sim.reset(0)
+    done = lambda s: allreduce_done(  # noqa: E731
+        s.block_states[0], s.tables.active[0]
+    )
+    sim.run(until=done, max_epochs=2000, cache_key="allreduce")
+    totals = np.asarray(eng.gather_group(sim.state, 0).total)
+    want = expected_total(values)
+    assert np.array_equal(totals, np.full_like(totals, want)), (
+        np.unique(totals), want
+    )
+    assert sim.cycle > 0
+
+
+# ------------------------------------------------ prebuilt-simulator cache
+def test_prebuilt_cache_dedup(closing):
+    """Uniform ring of one block over 4 workers: every granule has the
+    same compiled shape, so the launcher compiles ONE signature for the
+    whole fleet — build cost O(unique shapes), not O(instances)."""
+    from repro.core.graph import ChannelGraph
+    from repro.hw.manycore import ManycoreCell, make_core_params
+
+    R, C = 2, 4
+    graph = ChannelGraph.torus(
+        ManycoreCell(R, C), R, C,
+        params=make_core_params(np.ones((R, C), np.float32)), capacity=4,
+    )
+    part = [0, 0, 1, 1, 2, 2, 3, 3]  # column pairs: identical shapes
+    eng = ProcsEngine(graph, part, n_workers=4, K=2, timeout=_TIMEOUT)
+    try:
+        assert eng.build_stats["n_workers"] == 4
+        assert eng.build_stats["n_signatures"] == 1
+        assert len(eng.build_stats["compiled"]) == 1
+        assert len(set(eng.signatures)) == 1
+    finally:
+        eng.close()
+    # a chain has edge effects: ends differ from the middle, middles share
+    eng2 = procs_build(build_chain(4, capacity=4), n_workers=4,
+                       partition=[0, 1, 2, 3]).engine
+    try:
+        assert eng2.build_stats["n_signatures"] == 3  # head, middle, tail
+        assert eng2.signatures[1] == eng2.signatures[2]
+    finally:
+        eng2.close()
+
+
+# --------------------------------------------------------- fault tolerance
+def test_kill_one_worker_raises_not_hangs(closing):
+    """SIGKILL one worker mid-session: the next command raises a
+    WorkerDiedError naming the worker and carrying its captured log tail,
+    and the whole fleet is torn down — never a hang on a dead peer."""
+    sim = procs_build(build_chain(capacity=4), n_workers=3,
+                      partition=[0, 1, 2], K=1, timeout=20.0)
+    closing(sim)
+    sim.reset(0)
+    sim.tx("tx").send([1.0, 0.0])
+    sim.run(cycles=4)
+    os.kill(sim.engine._procs[1].pid, signal.SIGKILL)
+    time.sleep(0.3)
+    t0 = time.monotonic()
+    with pytest.raises(WorkerDiedError) as exc:
+        sim.run(cycles=200)
+    assert time.monotonic() - t0 < 30.0  # fail fast, not a hang
+    assert exc.value.worker == 1
+    assert "granule 1" in str(exc.value)  # the worker's own log tail
+    assert sim.engine._closed  # peers were torn down with it
+
+
+def test_stats_schema_uniform_across_engines(closing):
+    """stats()["ports"] carries the same keys on every engine — session
+    counters plus live occupancy/credit — shm-backed or in-process."""
+    sims = {
+        "single": build_chain(capacity=4).build(),
+        "procs": procs_build(build_chain(capacity=4), n_workers=2,
+                             partition=[0, 1, 1], K=1),
+    }
+    closing(sims["procs"])
+    stats = {}
+    for name, sim in sims.items():
+        sim.reset(0)
+        sim.tx("tx").send_many([[1.0, 0.0], [2.0, 0.0]])
+        sim.rx("rx")
+        sim.run(cycles=3)
+        stats[name] = sim.stats()
+    for name, st in stats.items():
+        tx = st["ports"]["tx"]["tx"]
+        assert set(tx) == {"sent", "pending", "occupancy", "credit"}, name
+        rx = st["ports"]["rx"]["rx"]
+        assert set(rx) == {"received", "occupancy", "credit"}, name
+    # identical traffic -> identical counters, engine-independent
+    assert stats["single"]["ports"] == stats["procs"]["ports"]
+
+
+def test_stale_handle_and_reuse_errors(closing):
+    """A pre-reset ProcsState handle fails loudly, and unknown ports raise
+    the session's uniform KeyError."""
+    sim = procs_build(build_chain(), n_workers=2, partition=[0, 1, 1], K=1)
+    closing(sim)
+    sim.reset(0)
+    stale = sim.state
+    sim.reset(0)
+    with pytest.raises(RuntimeError, match="stale ProcsState"):
+        sim.engine.run_epochs(stale, 1)
+    with pytest.raises(KeyError, match="external-in"):
+        sim.tx("nope")
