@@ -29,13 +29,14 @@ ISSUE 3 perf-trajectory numbers: sim-clock Hz for every engine on the
 wafer scenario at equal (K_inner, K_outer)).
 
 Every run also writes a machine-readable summary (default
-``BENCH_PR5.json``): ``{"schema", "git_rev", "smoke", "full", "argv",
+``BENCH_PR6.json``): ``{"schema", "git_rev", "smoke", "full", "argv",
 "failed", "baseline", "suites": {suite: [{"name", "us_per_call",
 "derived"}, ...]}}`` — the same schema in every mode, so the perf
 trajectory can be tracked and diffed PR over PR.  ``baseline`` embeds the
-PR 3/4 reference rows (git rev + the wafer/backend/engine suites of the
-committed ``BENCH_PR3.json``) so numbers-vs-last-PR stay auditable even
-if the old file disappears.
+PR 5 reference rows (git rev + the wafer/backend/engine suites of the
+committed ``BENCH_PR5.json``) so numbers-vs-last-PR stay auditable even
+if the old file disappears — in particular the ``wafer_engine_fused_*``
+rows the ISSUE 6 signature-batched speedups are measured against.
 """
 import argparse
 import inspect
@@ -51,9 +52,9 @@ from . import (
     task_latency, timing_breakdown, wafer_scale,
 )
 
-BENCH_JSON = "BENCH_PR5.json"
+BENCH_JSON = "BENCH_PR6.json"
 SMOKE_JSON = "BENCH_SMOKE.json"
-BASELINE_JSON = "BENCH_PR3.json"  # the committed PR 3/4 trajectory rows
+BASELINE_JSON = "BENCH_PR5.json"  # the committed PR 5 trajectory rows
 BASELINE_SUITES = ("wafer_scale", "backend_speedup", "engine_speedup")
 SCHEMA = schema_mod.SCHEMA
 

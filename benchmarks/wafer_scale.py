@@ -19,19 +19,23 @@ Three experiments on the many-core torus (``repro.hw.manycore``):
     round; both face the same machine) with the median per-round ratio as
     a secondary robustness figure in the derived text.
 
-Engine-comparison rows: ``wafer_engine_{graph|fused}_{sched}`` (wall-us
-per simulated cycle + sim-clock Hz), ``wafer_fused_speedup_{sched}``
-(the gated best-round ratio).  ``{sched}`` covers the distributed mesh
-and single-granule ``hotloop*`` configs that isolate the per-granule fast
-path from fake-device collective overhead.  ``wafer_fused_vs_pr2_*``
-tracks the whole-stack PR-over-PR trajectory against the numbers recorded
-in ``BENCH_PR2.json`` (different capacity/runtime — labeled as such, not
-an engine A/B).
+Engine-comparison rows: ``wafer_engine_{graph|fused|batched}_{sched}``
+(wall-us per simulated cycle + sim-clock Hz + ``cyc/s/core``),
+``wafer_fused_speedup_{sched}`` / ``wafer_batched_speedup_{sched}`` (the
+gated best-round ratios).  ``{sched}`` covers the distributed mesh and
+single-granule ``hotloop*`` configs that isolate the per-granule fast
+path from fake-device collective overhead.  The ``batched`` contender is
+the SAME FusedEngine with ``batch_axes`` covering the whole mesh — the
+ISSUE 6 signature-batched per-row lowering, one resident dispatch per
+epoch.  ``wafer_fused_vs_pr2_*`` and ``wafer_batched_vs_pr5_*`` track
+the whole-stack PR-over-PR trajectory against the committed
+``BENCH_PR2.json`` / ``BENCH_PR5.json`` rows.
 """
 import json
 import os
 
 from .common import emit, run_subprocess
+from repro.core import perfmodel
 
 # ---------------------------------------------------------------- PR2 rows
 CODE = """
@@ -129,25 +133,31 @@ def verify(sim, values):
     totals = np.asarray(sim.engine.gather_group(sim.state, 0).total)
     assert np.array_equal(totals, np.full_like(totals, expected_total(values)))
 
-for sched, R, C, mesh_shape, mesh_axes, tiles, tiers, n_rounds, n_epochs in {grp_configs}:
+for sched, R, C, mesh_shape, mesh_axes, tiles, tiers, n_rounds, n_epochs, batch in {grp_configs}:
     gsim, values = build(GraphEngine, R, C, mesh_shape, mesh_axes, tiles, tiers)
     fsim, _ = build(FusedEngine, R, C, mesh_shape, mesh_axes, tiles, tiers)
+    sims = [('g', gsim), ('f', fsim)]
+    if batch:
+        # the signature-batched contender: every mesh axis a batch axis,
+        # one stacked dispatch per epoch window (ISSUE 6)
+        bsim, _ = build(FusedEngine, R, C, mesh_shape, mesh_axes, tiles,
+                        tiers, batch_axes=tuple(mesh_axes))
+        sims.append(('b', bsim))
     cpe = gsim.engine.cycles_per_epoch
-    # correctness first: both engines prove the allreduce invariant
-    verify(gsim, values)
-    verify(fsim, values)
-    # Interleaved A/B rounds, order alternating per round, with a cooldown
+    # correctness first: every engine proves the allreduce invariant
+    for _, sim in sims:
+        verify(sim, values)
+    # Interleaved A/B(/C) rounds, order rotating per round, with a cooldown
     # sleep before every timing so one engine's long round cannot dump
     # CFS-quota throttling debt onto the other's measurement.  The
-    # reported ratio compares each engine's BEST round (both engines' best
+    # reported ratio compares each engine's BEST round (all engines' best
     # rounds face the same machine); the median per-round ratio is a
     # secondary robustness check.
-    gsim.reset(jax.random.key(0))
-    fsim.reset(jax.random.key(0))
-    # warm with the SAME epoch count (compile) + one shakeout run each:
-    # the first post-compile invocation is reliably a cold-cache outlier
-    gsim.run(epochs=n_epochs).run(epochs=n_epochs).block_until_ready()
-    fsim.run(epochs=n_epochs).run(epochs=n_epochs).block_until_ready()
+    for _, sim in sims:
+        sim.reset(jax.random.key(0))
+        # warm with the SAME epoch count (compile) + one shakeout run each:
+        # the first post-compile invocation is reliably a cold-cache outlier
+        sim.run(epochs=n_epochs).run(epochs=n_epochs).block_until_ready()
 
     def timed(sim):
         time.sleep(0.8)  # let the cgroup CPU budget refill
@@ -155,31 +165,30 @@ for sched, R, C, mesh_shape, mesh_axes, tiles, tiers, n_rounds, n_epochs in {grp
         sim.run(epochs=n_epochs).block_until_ready()
         return time.perf_counter() - t0
 
-    ratios, tgs, tfs = [], [], []
+    walls = {k: [] for k, _ in sims}
     for r in range(n_rounds):
-        if r % 2 == 0:
-            tg = timed(gsim)
-            tf = timed(fsim)
-        else:
-            tf = timed(fsim)
-            tg = timed(gsim)
-        ratios.append(tg / tf); tgs.append(tg); tfs.append(tf)
+        rot = r % len(sims)
+        for k, sim in sims[rot:] + sims[:rot]:
+            walls[k].append(timed(sim))
     cyc = n_epochs * cpe
-    med = sorted(ratios)[len(ratios) // 2]
-    best = min(tgs) / min(tfs)
-    print(f'ENG {sched} {R}x{C} {min(tgs)/cyc*1e6:.2f} {min(tfs)/cyc*1e6:.2f} '
-          f'{best:.2f} {med:.2f} {cyc/min(tgs):.1f} {cyc/min(tfs):.1f}')
+    bg, bf = min(walls['g']), min(walls['f'])
+    ratios = sorted(tg / tf for tg, tf in zip(walls['g'], walls['f']))
+    med = ratios[len(ratios) // 2]
+    print(f'ENG {sched} {R}x{C} {bg/cyc*1e6:.2f} {bf/cyc*1e6:.2f} '
+          f'{bg/bf:.2f} {med:.2f} {cyc/bg:.1f} {cyc/bf:.1f}')
+    if batch:
+        bb = min(walls['b'])
+        bratios = sorted(tf / tb for tf, tb in zip(walls['f'], walls['b']))
+        bmed = bratios[len(bratios) // 2]
+        B = int(np.prod(np.asarray(mesh_shape)))
+        print(f'BAT {sched} {R}x{C} {B} {bf/cyc*1e6:.2f} {bb/cyc*1e6:.2f} '
+              f'{bf/bb:.2f} {bmed:.2f} {cyc/bb:.1f}')
 """
 
 
-def _pr2_baseline_rows() -> dict:
-    """PR 2 wafer rows, from BENCH_PR2.json or (fresh clone) the baseline
-    embedded in the committed BENCH_PR3.json."""
+def _recorded_wafer_rows(*paths_getters) -> dict:
     root = os.path.join(os.path.dirname(__file__), "..")
-    for path, getter in (
-        ("BENCH_PR2.json", lambda d: d["suites"]),
-        ("BENCH_PR3.json", lambda d: d["baseline"]["suites"]),
-    ):
+    for path, getter in paths_getters:
         try:
             with open(os.path.join(root, path)) as f:
                 suites = getter(json.load(f))
@@ -187,6 +196,26 @@ def _pr2_baseline_rows() -> dict:
         except (OSError, ValueError, KeyError):
             continue
     return {}
+
+
+def _pr2_baseline_rows() -> dict:
+    """PR 2 wafer rows, from BENCH_PR2.json or (fresh clone) the baseline
+    embedded in the committed BENCH_PR3.json."""
+    return _recorded_wafer_rows(
+        ("BENCH_PR2.json", lambda d: d["suites"]),
+        ("BENCH_PR3.json", lambda d: d["baseline"]["suites"]),
+    )
+
+
+def _pr5_baseline_rows() -> dict:
+    """PR 5 wafer rows — the per-granule-dispatch fused-engine numbers the
+    ISSUE 6 signature-batched rows are measured against — from
+    BENCH_PR5.json or (fresh clone) the baseline embedded in the committed
+    BENCH_PR6.json."""
+    return _recorded_wafer_rows(
+        ("BENCH_PR5.json", lambda d: d["suites"]),
+        ("BENCH_PR6.json", lambda d: d["baseline"]["suites"]),
+    )
 
 
 def bench(smoke: bool = False, full: bool = False):
@@ -213,29 +242,32 @@ def bench(smoke: bool = False, full: bool = False):
     if full:
         configs = [
             (8, ("Ko4_Ki8", 64, 64, (2, 2, 2), ("pod", "gr", "gc"),
-                 [(2, 1), (2, 2)], [(("pod",), 4), (("gr", "gc"), 8)], 5, 8)),
+                 [(2, 1), (2, 2)], [(("pod",), 4), (("gr", "gc"), 8)], 6, 8,
+                 True)),
             (8, ("Ko2_Ki32", 64, 64, (2, 2, 2), ("pod", "gr", "gc"),
-                 [(2, 1), (2, 2)], [(("pod",), 2), (("gr", "gc"), 32)], 5, 8)),
+                 [(2, 1), (2, 2)], [(("pod",), 2), (("gr", "gc"), 32)], 6, 8,
+                 True)),
             # the PR 2 smoke config (16x16, 2x2 mesh) — anchors the
             # fused-vs-PR2-baseline row at equal (K_outer, K_inner)
             (4, ("pr2_Ko4_Ki8", 16, 16, (2, 2), ("pod", "gx"),
-                 [(2, 1), (1, 2)], [(("pod",), 4), (("gx",), 8)], 7, 16)),
+                 [(2, 1), (1, 2)], [(("pod",), 4), (("gx",), 8)], 7, 16,
+                 True)),
             # per-granule fast path, isolated from fake-device collectives:
             # the 64x64 wafer's per-granule tile (32x16 at the 8-device
             # partition) and the whole fabric as ONE granule, equal tiers
             (1, ("hotloop_granule", 32, 16, (1, 1), ("pod", "gx"), None,
-                 [(("pod",), 4), (("gx",), 8)], 7, 60)),
+                 [(("pod",), 4), (("gx",), 8)], 7, 60, False)),
             (1, ("hotloop64", 64, 64, (1, 1), ("pod", "gx"), None,
-                 [(("pod",), 4), (("gx",), 8)], 7, 12)),
+                 [(("pod",), 4), (("gx",), 8)], 7, 12, False)),
         ]
     else:
         # one distributed schedule + the single-granule hot loop, few rounds
         n = 16 if smoke else 32
         configs = [
             (4, ("Ko4_Ki8", n, n, (2, 2), ("pod", "gx"), [(2, 1), (1, 2)],
-                 [(("pod",), 4), (("gx",), 8)], 3, 8)),
+                 [(("pod",), 4), (("gx",), 8)], 3, 8, True)),
             (1, ("hotloop", n, n, (1, 1), ("pod", "gx"), None,
-                 [(("pod",), 4), (("gx",), 8)], 5, 16)),
+                 [(("pod",), 4), (("gx",), 8)], 5, 16, False)),
         ]
     code = CODE
     for key, val in sub.items():
@@ -278,16 +310,55 @@ def bench(smoke: bool = False, full: bool = False):
         ecode = ENGINE_CODE.replace("{grp_configs}", repr(grp))
         out_lines += run_subprocess(ecode, devices=dev, timeout=1800).splitlines()
     pr2 = _pr2_baseline_rows()
+    pr5 = _pr5_baseline_rows()
+    # cycles/s/core: aggregate core-cycles/s normalized by HOST cores — the
+    # paper's Fig. 14 throughput metric made comparable across machines
+    # (this container typically has 1-2 CPU shares; an engine win must show
+    # up per core, not by burning more of them)
+    ncores = os.cpu_count() or 1
+
+    def cyc_core(size: str, us: float) -> str:
+        r, c = (int(x) for x in size.split("x"))
+        return f"{r * c / us / ncores:.4e} cyc/s/core"
+
+    bats: dict[str, tuple[int, float, float]] = {}
     for line in out_lines:
+        if line.startswith("BAT"):
+            _, sched, size, nb, uf, ub, best, med, hzb = line.split()
+            uf, ub, best, med = float(uf), float(ub), float(best), float(med)
+            bats[sched] = (int(nb), uf, ub)
+            cfg = f"{size} torus, cap 62, {sched}"
+            emit(f"wafer_engine_batched_{sched}", ub,
+                 f"{hzb} Hz sim clock, {cyc_core(size, ub)} "
+                 f"({cfg}, FusedEngine batch_axes=mesh)")
+            # us_per_call carries the RATIO: signature-batched vs
+            # per-granule-dispatch FusedEngine, best round vs best round
+            # over the same order-rotated rounds — scripts/ci.sh gates on it
+            emit(f"wafer_batched_speedup_{sched}", best,
+                 f"batched {best:.2f}x per-granule-dispatch FusedEngine sim "
+                 f"clock at equal (K_inner, K_outer) — best-round ratio over "
+                 f"order-rotated rounds (median per-round {med:.2f}x; {cfg})")
+            base = pr5.get(f"wafer_engine_fused_{sched}")
+            # same sched name can run at smoke scale — only compare against
+            # the recorded row when the torus size actually matches
+            if base and f"{size} torus" in base.get("derived", ""):
+                emit(f"wafer_batched_vs_pr5_{sched}",
+                     base["us_per_call"] / ub,
+                     f"batched {base['us_per_call'] / ub:.2f}x the PR 5 "
+                     f"recorded FusedEngine wall/cycle "
+                     f"({base['us_per_call']:.0f} -> {ub:.0f} us/cyc, {cfg}; "
+                     f"PR-over-PR trajectory vs row "
+                     f"wafer_engine_fused_{sched})")
+            continue
         if not line.startswith("ENG"):
             continue
         _, sched, size, ug, uf, best, med, hzg, hzf = line.split()
         ug, uf, best, med = float(ug), float(uf), float(best), float(med)
         cfg = f"{size} torus, cap 62, {sched}"
         emit(f"wafer_engine_graph_{sched}", ug,
-             f"{hzg} Hz sim clock ({cfg}, GraphEngine)")
+             f"{hzg} Hz sim clock, {cyc_core(size, ug)} ({cfg}, GraphEngine)")
         emit(f"wafer_engine_fused_{sched}", uf,
-             f"{hzf} Hz sim clock ({cfg}, FusedEngine)")
+             f"{hzf} Hz sim clock, {cyc_core(size, uf)} ({cfg}, FusedEngine)")
         # us_per_call carries the SPEEDUP RATIO (not a time): best round vs
         # best round over order-alternated interleaved rounds with cooldown
         # — scripts/ci.sh gates on it directly
@@ -309,6 +380,29 @@ def bench(smoke: bool = False, full: bool = False):
                  f"{uf:.0f} us/cyc, 16x16 torus at (Ko4, Ki8); whole-stack "
                  f"trajectory vs PR2 row wafer_size_16x16 — cap 8, "
                  f"pre-thunk-fix — NOT an equal-config engine A/B)")
+
+    # ---- §Perf dispatch-amortization model vs the measured batched rows --
+    # Fit (t_step, t_dispatch) from ONE measured unbatched/batched pair
+    # (``perfmodel.fit_dispatch_overhead``), carry the per-dispatch overhead
+    # to every OTHER batched config (different wafer size / batch count),
+    # and report the relative error of the predicted amortization speedup —
+    # the model-validation loop DESIGN.md §Perf promises.
+    if len(bats) >= 2:
+        fit_sched = "Ko4_Ki8" if "Ko4_Ki8" in bats else sorted(bats)[0]
+        Bf, uff, ubf = bats[fit_sched]
+        t_step, t_disp = perfmodel.fit_dispatch_overhead(uff, ubf, Bf)
+        for sched, (B2, uf2, ub2) in sorted(bats.items()):
+            if sched == fit_sched:
+                continue
+            t_step2 = max(uf2 / B2 - t_disp, 1e-9)
+            pred = perfmodel.dispatch_amortization(B2, t_step2, t_disp)
+            meas = uf2 / ub2
+            err = abs(pred - meas) / meas * 100.0
+            emit(f"wafer_batched_model_{sched}", err,
+                 f"dispatch-amortization model rel err {err:.1f}%: "
+                 f"t_disp {t_disp:.2f} us/cyc fitted on {fit_sched} "
+                 f"(B={Bf}) predicts {sched} (B={B2}) batched speedup "
+                 f"{pred:.2f}x vs measured {meas:.2f}x")
 
 
 if __name__ == "__main__":

@@ -17,7 +17,9 @@
 #     (asserted inside benchmarks.backend_speedup AND re-checked from the
 #     JSON rows — the PR 2 "0x speedup" regression can't come back);
 #   * FusedEngine >= GraphEngine on the smoke wafer hot-loop config, and
-#     within collective-noise tolerance on the distributed smoke config.
+#     within collective-noise tolerance on the distributed smoke config;
+#   * signature-batched stepping >= the unbatched FusedEngine on the smoke
+#     wafer, and the cycles/s/core metric is recorded (ISSUE 6).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -38,11 +40,17 @@ if [[ "$stage" == "all" || "$stage" == "smoke" ]]; then
     echo "=== fused-engine smoke suite ==="
     python -m pytest -q tests/test_fused.py \
         -k "modes or contract or lowering or chain or capacity"
+    echo "=== signature-batched smoke suite ==="
+    python -m pytest -q tests/test_batched.py \
+        -k "plan or env or perfmodel or epochs"
+    echo "=== pallas-interpret smoke (multi-epoch body via env override) ==="
+    REPRO_EPOCH_MODE=pallas REPRO_PALLAS_INTERPRET=1 \
+        python -m pytest -q tests/test_batched.py -k "env or epochs"
     echo "=== smoke benchmarks (incl. tiered wafer-scale + engines) ==="
     python -m benchmarks.run --smoke --json BENCH_SMOKE.json
     echo "=== BENCH json schema + perf gates (benchmarks.schema) ==="
     python -m benchmarks.schema BENCH_SMOKE.json --gates smoke
-    python -m benchmarks.schema BENCH_PR5.json --gates trajectory
+    python -m benchmarks.schema BENCH_PR6.json --gates trajectory
 fi
 
 if [[ "$stage" == "all" || "$stage" == "procs" ]]; then

@@ -114,6 +114,15 @@ class GraphTables:
     send_mask: tuple  # per tier: (dev..., S_t) bool
     recv_idx: tuple  # per tier: (dev..., S_t) int32 local ingress queue ids
     recv_mask: tuple  # per tier: (dev..., S_t) bool
+    # Signature-batched exchange (PR 6, ``batch_axes``): per tier, the
+    # batch-row gather maps of the on-device slab move.  Empty when the
+    # engine runs unbatched.  ``bat_fwd[t][dev..., bd, col] = bs`` — on the
+    # *source* device, send-buffer row ``bd`` (the receiver's batch row)
+    # reads slab row ``bs``; ``bat_rev[t][dev..., bs, col] = bd`` — on the
+    # *dest* device, the credit-return row ``bs`` reads credit row ``bd``.
+    # 0-padded; garbage rows are killed by the send/recv masks downstream.
+    bat_fwd: tuple = ()
+    bat_rev: tuple = ()
 
 
 @pytree_dataclass
@@ -137,6 +146,11 @@ class _ExchangeClass:
     tier: int = static_field(default=0)  # which tier's exchange runs this class
     depth: int = static_field(default=1)  # slab depth E = min(period, cap-1)
     col0: int = static_field(default=0)  # column offset in the tier slab
+    # batched engines only: the deduped ((src_device, dst_device), ...)
+    # ppermute over the *real* mesh axes; () = the whole class moves
+    # between batch rows of one device (no collective at all).  None on
+    # unbatched engines (where ``perm`` itself is the ppermute).
+    real_perm: tuple | None = static_field(default=None)
 
 
 def _dealias_for_donation(tree: PyTree) -> PyTree:
@@ -175,6 +189,13 @@ def _sq(tree: PyTree, nd: int) -> PyTree:
 
 def _unsq(tree: PyTree, nd: int) -> PyTree:
     return jax.tree.map(lambda x: x.reshape((1,) * nd + x.shape), tree)
+
+
+def _first(x: jax.Array) -> jax.Array:
+    """Scalar view of a per-granule counter: the leaf itself when the local
+    view is one granule (unbatched), row 0 of the (B,) batch otherwise
+    (every batched granule steps in lockstep, so the rows agree)."""
+    return x if x.ndim == 0 else x.reshape(-1)[0]
 
 
 def _perfect_matching(adj: np.ndarray) -> np.ndarray:
@@ -399,6 +420,19 @@ class GraphEngine:
                tiers; tier t's boundary channels are exchanged every
                ``prod(K_t .. K_inner)`` cycles.  Default: one tier spanning
                ``axes`` with rate ``K`` — the flat engine.
+    batch_axes: signature batching (PR 6).  Names an innermost suffix of
+               the granule axes to run as an on-device *batch* dimension
+               instead of mesh shards: all granules along those axes stack
+               on one leading axis and step with a single vmapped dispatch
+               per cycle, and their tier exchanges become local slab
+               gathers (no collective).  Pass a sequence of axis names
+               (sizes from the mesh / PartitionTree) or a ``{name: size}``
+               mapping for axes that are not mesh axes at all — e.g.
+               ``mesh=Mesh(1 device), batch_axes={"g": 8}`` folds an
+               8-granule wafer onto one device.  Granules batched together
+               should share ``granule_signature`` (one traced stepper);
+               the engine works regardless (tables are runtime inputs) but
+               the speedup argument is per-signature.
     """
 
     engine_kind = "graph"
@@ -411,9 +445,28 @@ class GraphEngine:
         K: int = 1,
         axes: Sequence[str] | None = None,
         tiers: Sequence | None = None,
+        batch_axes=None,
     ):
         self.graph = graph
         self.mesh = mesh
+        if batch_axes is None:
+            bmap: dict[str, int | None] = {}
+        elif isinstance(batch_axes, dict):
+            bmap = {str(a): int(s) for a, s in batch_axes.items()}
+        else:
+            bmap = {str(a): None for a in batch_axes}
+
+        def axis_size(a: str) -> int:
+            s = bmap.get(a)
+            if s is not None:
+                return s
+            if a not in mesh.shape:
+                raise ValueError(
+                    f"axis {a!r} is not a mesh axis; pass its size via "
+                    f"batch_axes={{{a!r}: size}}"
+                )
+            return int(mesh.shape[a])
+
         if isinstance(partition, PartitionTree):
             if tiers is not None:
                 raise ValueError("pass tiers via the PartitionTree or the "
@@ -424,11 +477,14 @@ class GraphEngine:
                     "pass the axis order there"
                 )
             ptree = partition
-            mesh_shape = tuple(mesh.shape[a] for a in ptree.axes)
+            mesh_shape = tuple(
+                sz if (a in bmap and bmap[a] is None) else axis_size(a)
+                for a, sz in zip(ptree.axes, ptree.dev_shape)
+            )
             if mesh_shape != ptree.dev_shape:
                 raise ValueError(
                     f"PartitionTree device shape {ptree.dev_shape} does not "
-                    f"match mesh axes {ptree.axes} = {mesh_shape}"
+                    f"match mesh/batch axes {ptree.axes} = {mesh_shape}"
                 )
             if ptree.part.shape != (graph.n_instances,):
                 raise ValueError(
@@ -447,16 +503,33 @@ class GraphEngine:
                 t_axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
                 tspec = (Tier(axes=t_axes, K=int(K)),)
             all_axes = tuple(a for t in tspec for a in t.axes)
-            n_gran = int(np.prod([mesh.shape[a] for a in all_axes]))
+            n_gran = int(np.prod([axis_size(a) for a in all_axes]))
             part = normalize_partition(graph, partition, n_gran)
             ptree = PartitionTree(
-                part, tspec, {a: mesh.shape[a] for a in all_axes}
+                part, tspec, {a: axis_size(a) for a in all_axes}
             )
         self.ptree = ptree
         self.tiers = ptree.tiers
         self.axes = ptree.axes
         self.dev_shape = ptree.dev_shape
         self.nd = len(self.dev_shape)
+        unknown = set(bmap) - set(ptree.axes)
+        if unknown:
+            raise ValueError(f"batch_axes {sorted(unknown)} are not "
+                             f"granule axes {ptree.axes}")
+        self.batch_axes = tuple(a for a in ptree.axes if a in bmap)
+        self.nd_real = self.nd - len(self.batch_axes)
+        if self.batch_axes != tuple(ptree.axes[self.nd_real:]):
+            raise ValueError(
+                f"batch_axes {self.batch_axes} must be a contiguous "
+                f"innermost suffix of the granule axes {ptree.axes} (state "
+                f"leaves shard on the leading real axes)"
+            )
+        self.real_axes = tuple(ptree.axes[: self.nd_real])
+        self.real_shape = ptree.dev_shape[: self.nd_real]
+        self.batch_shape = ptree.dev_shape[self.nd_real:]
+        self.B = int(np.prod(self.batch_shape)) if self.batch_shape else 1
+        self._batched = bool(self.batch_axes)
         self.G = ptree.n_granules
         self.K_tiers = ptree.K_tiers
         self.periods = ptree.periods()
@@ -471,7 +544,7 @@ class GraphEngine:
         self.capacity = graph.capacity
         self.dtype = graph.dtype
         self.part = ptree.part
-        self._spec = P(*self.axes)
+        self._spec = P(*self.real_axes)
         self._jit_cache: dict[Any, Callable] = {}
         self._build_tables()
 
@@ -504,17 +577,48 @@ class GraphEngine:
 
         # Per tier: König classes, then compatible-permutation merging, then
         # concatenation into ONE (G, S_t) slab table — the batched exchange.
+        # Under ``batch_axes`` the coloring is refined per *real-axis* shift
+        # first: all routes of one class then share a single injective
+        # device->device map (its ``real_perm`` ppermute, () when the class
+        # never leaves the device), and the within-device move becomes the
+        # ``bat_fwd``/``bat_rev`` batch-row gathers.
+        G_real = int(np.prod(self.real_shape)) if self.real_shape else 1
         self.classes: list[_ExchangeClass] = []
         self.tier_classes: list[list[_ExchangeClass]] = []
         send_i, send_m, recv_i, recv_m = [], [], [], []
+        bat_f, bat_r = [], []
         for t in range(len(self.tiers)):
             pairs = sorted((s, d) for tt, s, d in routes if tt == t)
-            colors = merge_compatible_classes(edge_color_routes(pairs, G))
-            if pairs:
-                # a fixed shift is one permutation, so no decomposition ever
-                # needs more classes than distinct shifts (König: fewer)
-                n_shifts = len(route_shift_groups(pairs, self.dev_shape))
-                assert len(colors) <= n_shifts, (len(colors), n_shifts)
+            if self._batched:
+                shift_groups: dict[tuple, list[tuple[int, int]]] = {}
+                for s, d in pairs:
+                    sc = np.unravel_index(s, self.dev_shape)
+                    dc = np.unravel_index(d, self.dev_shape)
+                    shift = tuple(
+                        int(dc[i]) - int(sc[i]) for i in range(self.nd_real)
+                    )
+                    shift_groups.setdefault(shift, []).append((s, d))
+                colors, rperms = [], []
+                for shift in sorted(shift_groups):
+                    for color in merge_compatible_classes(
+                        edge_color_routes(shift_groups[shift], G)
+                    ):
+                        colors.append(color)
+                        if any(shift):
+                            rperms.append(tuple(sorted(
+                                {(s // self.B, d // self.B) for s, d in color}
+                            )))
+                        else:
+                            rperms.append(())
+            else:
+                colors = merge_compatible_classes(edge_color_routes(pairs, G))
+                rperms = [None] * len(colors)
+                if pairs:
+                    # a fixed shift is one permutation, so no decomposition
+                    # ever needs more classes than distinct shifts (König:
+                    # fewer)
+                    n_shifts = len(route_shift_groups(pairs, self.dev_shape))
+                    assert len(colors) <= n_shifts, (len(colors), n_shifts)
             cmaxes = [
                 max(len(routes[(t, s, d)]) for s, d in color) for color in colors
             ]
@@ -523,9 +627,11 @@ class GraphEngine:
             sm = np.zeros((G, S_t), bool)
             ri = np.zeros((G, S_t), np.int64)
             rm = np.zeros((G, S_t), bool)
+            bf = np.zeros((G_real, self.B, S_t), np.int64)
+            br = np.zeros((G_real, self.B, S_t), np.int64)
             cls_t: list[_ExchangeClass] = []
             col0 = 0
-            for color, cmax in zip(colors, cmaxes):
+            for color, cmax, rperm in zip(colors, cmaxes, rperms):
                 for s, d in color:
                     chans = routes[(t, s, d)]
                     k = len(chans)
@@ -533,9 +639,14 @@ class GraphEngine:
                     sm[s, col0:col0 + k] = True
                     ri[d, col0:col0 + k] = rx_local[chans]
                     rm[d, col0:col0 + k] = True
+                    if self._batched:
+                        rs, bs = divmod(s, self.B)
+                        rd, bd = divmod(d, self.B)
+                        bf[rs, bd, col0:col0 + k] = bs
+                        br[rd, bs, col0:col0 + k] = bd
                 cls = _ExchangeClass(
                     perm=tuple(color), cmax=cmax, tier=t,
-                    depth=self.E_tiers[t], col0=col0,
+                    depth=self.E_tiers[t], col0=col0, real_perm=rperm,
                 )
                 cls_t.append(cls)
                 self.classes.append(cls)
@@ -545,8 +656,12 @@ class GraphEngine:
             send_m.append(sm)
             recv_i.append(ri.astype(np.int32))
             recv_m.append(rm)
+            bat_f.append(bf.astype(np.int32))
+            bat_r.append(br.astype(np.int32))
         self._send_idx, self._send_mask = send_i, send_m
         self._recv_idx, self._recv_mask = recv_i, recv_m
+        self._bat_fwd = bat_f if self._batched else []
+        self._bat_rev = bat_r if self._batched else []
 
         # Trailing tiers with NO exchange classes never synchronize, so
         # their loop nesting is pure overhead: tiers >= _fold_from run as
@@ -561,6 +676,16 @@ class GraphEngine:
         """(G, ...) host table -> (dev_shape..., ...) device array."""
         return jnp.asarray(arr.reshape(self.dev_shape + arr.shape[1:]))
 
+    def _dev_bat(self, arr: np.ndarray) -> jax.Array:
+        """(G_real, B, S_t) batch-gather table -> (dev_shape..., S_t).
+
+        The batch-row axis unflattens into the batch axes so every
+        GraphTables leaf carries the same ``dev_shape`` leading dims (the
+        local view flattens them back to one (B, S_t))."""
+        return jnp.asarray(
+            arr.reshape(self.real_shape + self.batch_shape + arr.shape[2:])
+        )
+
     def tables(self) -> GraphTables:
         return GraphTables(
             rx_idx=tuple(self._dev(t) for t in self._rx_tables),
@@ -570,6 +695,8 @@ class GraphEngine:
             send_mask=tuple(self._dev(t) for t in self._send_mask),
             recv_idx=tuple(self._dev(t) for t in self._recv_idx),
             recv_mask=tuple(self._dev(t) for t in self._recv_mask),
+            bat_fwd=tuple(self._dev_bat(t) for t in self._bat_fwd),
+            bat_rev=tuple(self._dev_bat(t) for t in self._bat_rev),
         )
 
     # ------------------------------------------------------------------ init
@@ -625,13 +752,55 @@ class GraphEngine:
             tables=self.tables(),
         )
 
-    def shardings(self) -> NamedSharding:
-        """NamedSharding for every GraphState leaf (granule-major)."""
+    def shardings(self):
+        """Sharding for every GraphState leaf (granule-major).
+
+        When EVERY granule axis is batched there is nothing to shard —
+        ``NamedSharding(mesh, P())`` would *replicate* the state over the
+        whole mesh and make each jit redundantly re-execute the batch on
+        every device (an 8-device mesh pays 8x the work for identical
+        answers).  The all-batch engine therefore pins state to one
+        device."""
+        if self._batched and not self.real_axes:
+            return jax.sharding.SingleDeviceSharding(
+                self.mesh.devices.flat[0]
+            )
         return NamedSharding(self.mesh, self._spec)
 
     def place(self, state: GraphState) -> GraphState:
         sh = self.shardings()
         return jax.tree.map(lambda x: jax.device_put(x, sh), state)
+
+    # -------------------------------------------------- local <-> global view
+    def _local_view(self, state: PyTree) -> PyTree:
+        """Per-device view of the state: strip the (1,)*nd_real shard dims
+        and flatten the batch axes into ONE leading (B,) axis (no-op
+        reshape when unbatched — then this is plain ``_sq``)."""
+        if not self._batched:
+            return _sq(state, self.nd)
+        return jax.tree.map(
+            lambda x: x.reshape((self.B,) + x.shape[self.nd:]), state
+        )
+
+    def _global_view(self, local: PyTree) -> PyTree:
+        if not self._batched:
+            return _unsq(local, self.nd)
+        return jax.tree.map(
+            lambda x: x.reshape(
+                (1,) * self.nd_real + self.batch_shape + x.shape[1:]
+            ),
+            local,
+        )
+
+    def _wrap(self, fn: Callable) -> Callable:
+        """shard_map over the real mesh axes — or ``fn`` unwrapped when
+        every granule axis is batched (single-device: no collectives at
+        all, the whole epoch is one local computation)."""
+        if not self.real_axes:
+            return fn
+        return shard_map(
+            fn, mesh=self.mesh, in_specs=self._spec, out_specs=self._spec
+        )
 
     # ----------------------------------------------------------- local cycle
     def _local_cycle(self, st: GraphState) -> GraphState:
@@ -661,6 +830,8 @@ class GraphEngine:
         drain/permute/fill chain — with ~1/#classes of the gather/scatter
         traffic.  Other tiers' queues and credit windows are untouched.
         """
+        if self._batched:
+            return self._exchange_tier_batched(st, t)
         cls_t = self.tier_classes[t]
         if not cls_t:
             return st
@@ -694,11 +865,62 @@ class GraphEngine:
         new_credits[t] = per_class(cred, rev=True)
         return st.replace(queues=q, credits=tuple(new_credits))
 
+    def _exchange_tier_batched(self, st: GraphState, t: int) -> GraphState:
+        """Tier t's exchange with the granules stacked on a (B,) batch axis.
+
+        Same drain -> move -> fill -> credit-return dance as
+        ``_exchange_tier``, but the within-device share of every class is a
+        ``bat_fwd``/``bat_rev`` batch-row gather instead of a collective;
+        only classes whose ``real_perm`` is non-empty pay a ppermute (none
+        do when every granule axis is batched).  Garbage rows from the
+        0-padded gather tables are killed by the same send/recv masks that
+        already guard slab padding."""
+        cls_t = self.tier_classes[t]
+        if not cls_t:
+            return st
+        q = st.queues
+        tb = st.tables
+        sidx, smask = tb.send_idx[t], tb.send_mask[t]  # (B, S_t)
+        ridx, rmask = tb.recv_idx[t], tb.recv_mask[t]
+        limit = jnp.where(smask, st.credits[t], 0)
+        q, slab, cnt = jax.vmap(
+            lambda qb, si, lim: qmod.stage_drain(
+                qb, si, self.E_tiers[t], limit=lim
+            )
+        )(q, sidx, limit)
+
+        def move(x, tbl, rev: bool = False):
+            parts = []
+            for cl in cls_t:
+                w = x[:, cl.col0:cl.col0 + cl.cmax]
+                g = tbl[:, cl.col0:cl.col0 + cl.cmax]
+                g = g.reshape(g.shape + (1,) * (w.ndim - 2))
+                part = jnp.take_along_axis(w, g, axis=0)
+                perm = cl.real_perm
+                if perm:
+                    if rev:
+                        perm = tuple((d, s) for s, d in perm)
+                    part = jax.lax.ppermute(part, self.real_axes, list(perm))
+                parts.append(part)
+            return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 1)
+
+        slab_in = move(slab, tb.bat_fwd[t])
+        cnt_in = jnp.where(rmask, move(cnt, tb.bat_fwd[t]), 0)
+        q = jax.vmap(qmod.stage_fill)(q, ridx, slab_in, cnt_in)
+        cred = jnp.where(
+            rmask, jnp.take_along_axis(qmod.free(q), ridx, axis=1), 0
+        )
+        new_credits = list(st.credits)
+        new_credits[t] = move(cred, tb.bat_rev[t], rev=True)
+        return st.replace(queues=q, credits=tuple(new_credits))
+
     def _inner_cycles(self, st: GraphState, K: int) -> GraphState:
         """K granule-local cycles — the innermost hot loop.  ``FusedEngine``
         overrides this with the fused-epoch kernel."""
+        cyc = (jax.vmap(self._local_cycle) if self._batched
+               else self._local_cycle)
         return jax.lax.scan(
-            lambda s, _: (self._local_cycle(s), None), st, None, length=K
+            lambda s, _: (cyc(s), None), st, None, length=K
         )[0]
 
     def _tier_round(self, st: GraphState, t: int) -> GraphState:
@@ -727,11 +949,9 @@ class GraphEngine:
         """shard_map'd single-epoch function (used by dryrun + benchmarks)."""
 
         def run(state):
-            return _unsq(self._epoch(_sq(state, self.nd)), self.nd)
+            return self._global_view(self._epoch(self._local_view(state)))
 
-        return shard_map(
-            run, mesh=self.mesh, in_specs=self._spec, out_specs=self._spec
-        )
+        return self._wrap(run)
 
     def run_epochs(
         self, state: GraphState, n_epochs: int, *, donate: bool = True
@@ -748,14 +968,14 @@ class GraphEngine:
         if key not in self._jit_cache:
 
             def run(state):
-                local = _sq(state, self.nd)
+                local = self._local_view(state)
                 out = jax.lax.scan(
                     lambda s, _: (self._epoch(s), None), local, None, length=n_epochs
                 )[0]
-                return _unsq(out, self.nd)
+                return self._global_view(out)
 
             self._jit_cache[key] = jax.jit(
-                shard_map(run, mesh=self.mesh, in_specs=self._spec, out_specs=self._spec),
+                self._wrap(run),
                 donate_argnums=(0,) if donate else (),
             )
         if donate:
@@ -810,36 +1030,42 @@ class GraphEngine:
         key = ("until", id(anchor), max_epochs, donate)
         if key not in self._jit_cache:
 
+            def not_done(s):
+                # Local sum first (covers a (B,)-shaped batched predicate),
+                # then psum over the real mesh axes if there are any.
+                nd_ = jnp.sum(
+                    1 - done_fn(self._done_view(s)).astype(jnp.int32)
+                )
+                if self.real_axes:
+                    nd_ = jax.lax.psum(nd_, self.real_axes)
+                return nd_
+
             def run(state):
-                local = _sq(state, self.nd)
-                e0 = local.epoch
+                local = self._local_view(state)
+                e0 = _first(local.epoch)
 
                 # The global done flag is computed in the *body* and carried,
                 # so the while condition itself contains no collectives.
                 def cond(carry):
                     s, pending = carry
-                    return (pending > 0) & (s.epoch - e0 < max_epochs)
+                    return (pending > 0) & (_first(s.epoch) - e0 < max_epochs)
 
                 def body(carry):
                     s, _ = carry
                     s = self._epoch(s)
-                    not_done = 1 - done_fn(self._done_view(s)).astype(jnp.int32)
-                    pending = jax.lax.psum(not_done, self.axes)
-                    return s, pending
+                    return s, not_done(s)
 
                 # An already-done state runs zero epochs, so chunked callers
                 # (the session's monitor cadence) can re-enter safely.
-                pending0 = jax.lax.psum(
-                    1 - done_fn(self._done_view(local)).astype(jnp.int32),
-                    self.axes,
+                out, _ = jax.lax.while_loop(
+                    cond, body, (local, not_done(local))
                 )
-                out, _ = jax.lax.while_loop(cond, body, (local, pending0))
-                return _unsq(out, self.nd)
+                return self._global_view(out)
 
             self._jit_cache[key] = (
                 anchor,  # strong ref: keeps the keyed id alive
                 jax.jit(
-                    shard_map(run, mesh=self.mesh, in_specs=self._spec, out_specs=self._spec),
+                    self._wrap(run),
                     donate_argnums=(0,) if donate else (),
                 ),
             )

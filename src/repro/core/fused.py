@@ -49,7 +49,7 @@ from jax.sharding import Mesh
 
 from . import queue as qmod
 from .block import Block
-from .distributed import GraphEngine, _rank_within
+from .distributed import GraphEngine, _dealias_for_donation, _rank_within
 from .graph import ChannelGraph, grid_partition
 from .struct import pytree_dataclass
 from ..kernels import granule_step
@@ -80,6 +80,10 @@ class FusedTables:
     inv_tx_mask: jax.Array  # (dev..., n_reg + n_q) bool
     inv_rx: jax.Array  # (dev..., n_reg + n_q) int32 flat consumer index
     inv_rx_mask: jax.Array  # (dev..., n_reg + n_q) bool
+    # signature-batched exchange gather maps (see GraphTables.bat_fwd/
+    # bat_rev) — empty tuples when the engine runs unbatched
+    bat_fwd: tuple = ()
+    bat_rev: tuple = ()
 
 
 @pytree_dataclass
@@ -108,9 +112,20 @@ class FusedEngine(GraphEngine):
     Accepts everything ``GraphEngine`` accepts, plus:
 
     fuse:    epoch-body strategy — "auto" (one Pallas kernel on TPU, one
-             ``fori_loop`` body elsewhere), or explicitly "xla" |
+             ``fori_loop`` body elsewhere; overridable via the
+             ``REPRO_EPOCH_MODE`` env var), or explicitly "xla" |
              "unroll" | "pallas" (see ``kernels.granule_step``).
-    pallas_interpret: run the Pallas path in interpret mode (CPU CI).
+    pallas_interpret: run the Pallas path in interpret mode.  "auto"
+             (default) interprets everywhere but TPU, so ``fuse="pallas"``
+             is live on CPU CI; booleans force either way
+             (``REPRO_PALLAS_INTERPRET`` overrides both).
+    batch_axes: signature batching — see ``GraphEngine``.  On the fused
+             engine a batched granule axis additionally unlocks the
+             *resident multi-epoch kernel*: every tier whose exchanges
+             stay on-device (trailing batched tiers) folds into the fused
+             epoch body, so one dispatch — one ``pallas_call`` under
+             ``fuse="pallas"`` — runs the whole K_outer x K_inner span
+             with registers, queues and credits resident.
     """
 
     engine_kind = "fused"
@@ -125,12 +140,29 @@ class FusedEngine(GraphEngine):
         tiers: Sequence | None = None,
         *,
         fuse: str = "auto",
-        pallas_interpret: bool = False,
+        pallas_interpret: Any = "auto",
+        batch_axes=None,
     ):
         self.fuse = fuse
-        self.pallas_interpret = bool(pallas_interpret)
-        super().__init__(graph, partition, mesh, K=K, axes=axes, tiers=tiers)
+        self.pallas_interpret = pallas_interpret
+        super().__init__(
+            graph, partition, mesh, K=K, axes=axes, tiers=tiers,
+            batch_axes=batch_axes,
+        )
         self._build_fused_tables()
+        # First tier index from which EVERY exchange is on-device (batched
+        # classes with an empty real_perm; exchange-free tiers trivially
+        # qualify): tiers [_resident_from:] run as ONE epoch_program — the
+        # resident multi-epoch kernel.  Unbatched engines keep the plain
+        # fold region (real_perm is None there, never ()).
+        r = len(self.tiers)
+        while r > 0 and all(
+            cl.real_perm == () for cl in self.tier_classes[r - 1]
+        ):
+            r -= 1
+        self._resident_from = min(r, self._fold_from)
+        self._program_cache: dict[int, tuple] = {}
+        self._t6_rows_cache: tuple | None = None
 
     # ---------------------------------------------------- uniform-grid preset
     @classmethod
@@ -248,20 +280,116 @@ class FusedEngine(GraphEngine):
         inv_rx_m[:, :2] = False
         self._inv_tx, self._inv_tx_mask = inv_tx.astype(np.int32), inv_tx_m
         self._inv_rx, self._inv_rx_mask = inv_rx.astype(np.int32), inv_rx_m
+        if self._batched:
+            self._build_flat_tables()
+
+    def _build_flat_tables(self) -> None:
+        """Flatten the batch of B same-device granules into ONE granule.
+
+        ``jax.vmap`` of the cycle body turns every port-table lookup into a
+        gather with a *batching dimension* — which XLA:CPU lowers to a
+        scalar loop (measured ~5x off linear scaling).  Instead the batch
+        is folded into the channel/slot axes: row r's registers live at
+        ``r*n_reg + c``, its queue rows at ``B*n_reg + r*n_q + k``, its
+        group slots at ``r*n_slot + s`` — and the cycle body runs
+        UNVMAPPED on (B*n,)-shaped arrays with ordinary (fast) gathers.
+        Rows need not share table *values*: each row's window gets its own
+        granule's table, so heterogeneous same-signature members batch
+        exactly.  Tier exchange keeps the (B, n_q) vmap layout — the local
+        view bridges with free reshapes at tier boundaries only."""
+        G, B = self.G, self.B
+        G_real = G // B
+        n_reg, n_q = self.n_reg, self.n_q
+
+        def fmap(t: np.ndarray) -> np.ndarray:
+            # (G_real, B, ...) combined ids -> flat combined ids
+            r = np.arange(B).reshape((1, B) + (1,) * (t.ndim - 2))
+            return np.where(
+                t < n_reg, r * n_reg + t, B * n_reg + r * n_q + (t - n_reg)
+            )
+
+        def flat_ports(tbls):
+            out = []
+            for tbl in tbls:
+                _, n_slot, n_p = tbl.shape
+                t = fmap(tbl.reshape(G_real, B, n_slot, n_p))
+                out.append(t.reshape(G_real, B * n_slot, n_p).astype(np.int32))
+            return out
+
+        self._rx_flat = flat_ports(self._rx_tables_f)
+        self._tx_flat = flat_ports(self._tx_tables_f)
+
+        # Inverse maps over the flat id space — same construction as the
+        # per-granule inverses (SPSC uniqueness holds per row, and rows map
+        # into disjoint flat windows), with every row's sentinels masked.
+        n_tot = B * (n_reg + n_q)
+        inv_tx = np.zeros((G_real, n_tot), np.int64)
+        inv_tx_m = np.zeros((G_real, n_tot), bool)
+        inv_rx = np.zeros((G_real, n_tot), np.int64)
+        inv_rx_m = np.zeros((G_real, n_tot), bool)
+        grange = np.arange(G_real)[:, None]
+        off = 0
+        for txm in self._tx_flat:
+            _, n_fs, n_out = txm.shape
+            flat = np.broadcast_to(
+                off + np.arange(n_fs * n_out), (G_real, n_fs * n_out)
+            )
+            inv_tx[grange, txm.reshape(G_real, -1)] = flat
+            inv_tx_m[grange, txm.reshape(G_real, -1)] = True
+            off += n_fs * n_out
+        off = 0
+        for rxm in self._rx_flat:
+            _, n_fs, n_in = rxm.shape
+            flat = np.broadcast_to(
+                off + np.arange(n_fs * n_in), (G_real, n_fs * n_in)
+            )
+            inv_rx[grange, rxm.reshape(G_real, -1)] = flat
+            inv_rx_m[grange, rxm.reshape(G_real, -1)] = True
+            off += n_fs * n_in
+        sent = (np.arange(B)[:, None] * n_reg + np.array([0, 1])).ravel()
+        inv_tx_m[:, sent] = False
+        inv_rx_m[:, sent] = False
+        self._inv_tx_flat = inv_tx.astype(np.int32)
+        self._inv_tx_mask_flat = inv_tx_m
+        self._inv_rx_flat = inv_rx.astype(np.int32)
+        self._inv_rx_mask_flat = inv_rx_m
+
+    def _dev_flat(self, arr: np.ndarray) -> jax.Array:
+        """(G_real, ...) flat table -> (real_shape..., ...) device array."""
+        return jnp.asarray(arr.reshape(self.real_shape + arr.shape[1:]))
 
     def tables(self) -> FusedTables:
+        # Batched engines carry the FLAT port/inverse tables (real_shape
+        # leading dims; the batch is folded into the slot/channel axes) —
+        # exchange tables keep the per-granule (dev_shape) layout the tier
+        # exchange consumes.
+        if self._batched:
+            port = dict(
+                rx_idx=tuple(self._dev_flat(t) for t in self._rx_flat),
+                tx_idx=tuple(self._dev_flat(t) for t in self._tx_flat),
+                inv_tx=self._dev_flat(self._inv_tx_flat),
+                inv_tx_mask=self._dev_flat(self._inv_tx_mask_flat),
+                inv_rx=self._dev_flat(self._inv_rx_flat),
+                inv_rx_mask=self._dev_flat(self._inv_rx_mask_flat),
+            )
+        else:
+            port = dict(
+                rx_idx=tuple(self._dev(t) for t in self._rx_tables_f),
+                tx_idx=tuple(self._dev(t) for t in self._tx_tables_f),
+                inv_tx=self._dev(self._inv_tx),
+                inv_tx_mask=self._dev(self._inv_tx_mask),
+                inv_rx=self._dev(self._inv_rx),
+                inv_rx_mask=self._dev(self._inv_rx_mask),
+            )
         return FusedTables(
-            rx_idx=tuple(self._dev(t) for t in self._rx_tables_f),
-            tx_idx=tuple(self._dev(t) for t in self._tx_tables_f),
             active=tuple(self._dev(t) for t in self._act_tables),
             send_idx=tuple(self._dev(t) for t in self._send_idx_f),
             send_mask=tuple(self._dev(t) for t in self._send_mask),
             recv_idx=tuple(self._dev(t) for t in self._recv_idx_f),
             recv_mask=tuple(self._dev(t) for t in self._recv_mask),
-            inv_tx=self._dev(self._inv_tx),
-            inv_tx_mask=self._dev(self._inv_tx_mask),
-            inv_rx=self._dev(self._inv_rx),
-            inv_rx_mask=self._dev(self._inv_rx_mask),
+            bat_fwd=tuple(self._dev_bat(t) for t in self._bat_fwd),
+            bat_rev=tuple(self._dev_bat(t) for t in self._bat_rev),
+            **port,
         )
 
     # ------------------------------------------------------------------ init
@@ -299,6 +427,236 @@ class FusedEngine(GraphEngine):
             tb.inv_tx, tb.inv_tx_mask, tb.inv_rx, tb.inv_rx_mask,
         )
 
+    # ------------------------------------------------ flat-batch local views
+    def _local_view(self, state: FusedState) -> FusedState:
+        """Batched fused engines run the FLAT layout: the batch axes fold
+        into the register/queue/slot axes (matching the flat port tables),
+        so the cycle body runs unvmapped with ordinary gathers.  Exchange
+        state (credits + exchange tables) keeps the (B, S_t) layout the
+        tier exchange consumes; ``queues`` bridge by reshape at tier
+        boundaries.  A scratch-only queue array ((B, 1) rows, no boundary
+        channels anywhere) drops to its first row so the queue machinery
+        still vanishes from the compiled body."""
+        if not self._batched:
+            return super()._local_view(state)
+        B, nd, nd_r = self.B, self.nd, self.nd_real
+
+        fold = lambda x: x.reshape(  # noqa: E731 — batch into first data dim
+            (B * x.shape[nd],) + x.shape[nd + 1:]
+        )
+        bat = lambda x: x.reshape((B,) + x.shape[nd:])  # noqa: E731
+        q_fold = fold if self.n_q > 1 else lambda x: bat(x)[0]
+        tb = state.tables
+        tables = tb.replace(
+            rx_idx=jax.tree.map(lambda x: x.reshape(x.shape[nd_r:]), tb.rx_idx),
+            tx_idx=jax.tree.map(lambda x: x.reshape(x.shape[nd_r:]), tb.tx_idx),
+            inv_tx=tb.inv_tx.reshape(tb.inv_tx.shape[nd_r:]),
+            inv_tx_mask=tb.inv_tx_mask.reshape(tb.inv_tx_mask.shape[nd_r:]),
+            inv_rx=tb.inv_rx.reshape(tb.inv_rx.shape[nd_r:]),
+            inv_rx_mask=tb.inv_rx_mask.reshape(tb.inv_rx_mask.shape[nd_r:]),
+            active=jax.tree.map(fold, tb.active),
+            send_idx=jax.tree.map(bat, tb.send_idx),
+            send_mask=jax.tree.map(bat, tb.send_mask),
+            recv_idx=jax.tree.map(bat, tb.recv_idx),
+            recv_mask=jax.tree.map(bat, tb.recv_mask),
+            bat_fwd=jax.tree.map(bat, tb.bat_fwd),
+            bat_rev=jax.tree.map(bat, tb.bat_rev),
+        )
+        return state.replace(
+            reg_val=fold(state.reg_val),
+            reg_v=fold(state.reg_v),
+            queues=jax.tree.map(q_fold, state.queues),
+            block_states=jax.tree.map(fold, state.block_states),
+            credits=jax.tree.map(bat, state.credits),
+            cycle=bat(state.cycle)[0],  # lockstep rows share one counter
+            epoch=bat(state.epoch),
+            tables=tables,
+        )
+
+    def _global_view(self, local: FusedState) -> FusedState:
+        if not self._batched:
+            return super()._global_view(local)
+        B, nd_r = self.B, self.nd_real
+        lead = (1,) * nd_r + self.batch_shape
+
+        unfold = lambda x: x.reshape(  # noqa: E731
+            lead + (x.shape[0] // B,) + x.shape[1:]
+        )
+        unbat = lambda x: x.reshape(lead + x.shape[1:])  # noqa: E731
+        q_unfold = (
+            unfold if self.n_q > 1
+            else lambda x: jnp.broadcast_to(x, lead + x.shape)
+        )
+        tb = local.tables
+        readd = lambda x: x.reshape((1,) * nd_r + x.shape)  # noqa: E731
+        tables = tb.replace(
+            rx_idx=jax.tree.map(readd, tb.rx_idx),
+            tx_idx=jax.tree.map(readd, tb.tx_idx),
+            inv_tx=readd(tb.inv_tx),
+            inv_tx_mask=readd(tb.inv_tx_mask),
+            inv_rx=readd(tb.inv_rx),
+            inv_rx_mask=readd(tb.inv_rx_mask),
+            active=jax.tree.map(unfold, tb.active),
+            send_idx=jax.tree.map(unbat, tb.send_idx),
+            send_mask=jax.tree.map(unbat, tb.send_mask),
+            recv_idx=jax.tree.map(unbat, tb.recv_idx),
+            recv_mask=jax.tree.map(unbat, tb.recv_mask),
+            bat_fwd=jax.tree.map(unbat, tb.bat_fwd),
+            bat_rev=jax.tree.map(unbat, tb.bat_rev),
+        )
+        return local.replace(
+            reg_val=unfold(local.reg_val),
+            reg_v=unfold(local.reg_v),
+            queues=jax.tree.map(q_unfold, local.queues),
+            block_states=jax.tree.map(unfold, local.block_states),
+            credits=jax.tree.map(unbat, local.credits),
+            cycle=jnp.broadcast_to(local.cycle, self.dev_shape[:0] + lead),
+            epoch=unbat(local.epoch),
+            tables=tables,
+        )
+
+    def _q_batch_view(self, q):
+        """Flat (B*n_q, ...) queue leaves -> (B, n_q, ...) for the exchange."""
+        return jax.tree.map(
+            lambda x: x.reshape((self.B, self.n_q) + x.shape[1:]), q
+        )
+
+    def _q_flat_view(self, q):
+        return jax.tree.map(
+            lambda x: x.reshape((self.B * self.n_q,) + x.shape[2:]), q
+        )
+
+    def _exchange_tier_batched(self, st: FusedState, t: int) -> FusedState:
+        """Tier exchange on the flat layout: reshape the queue block to the
+        (B, n_q) batch layout, run the inherited slab exchange, flatten
+        back — two free reshapes per tier boundary."""
+        st2 = super()._exchange_tier_batched(
+            st.replace(queues=self._q_batch_view(st.queues)), t
+        )
+        return st2.replace(queues=self._q_flat_view(st2.queues))
+
+    # ------------------------------------------------- per-row resident rows
+    def _t6_row(self, r: int):
+        """Row r's port/inverse tables in its OWN combined id space — the
+        consts for one batch row's cycle body.  Per-row tables (not one
+        shared set) so heterogeneous same-signature members batch exactly;
+        XLA sees each row's tables as ordinary constants."""
+        if self._t6_rows_cache is None:
+            # host-side numpy, NOT jnp: the cache is built lazily — possibly
+            # under a jit trace, where a jnp constant would be a tracer that
+            # must not outlive that trace.  numpy consts embed per-trace.
+            rows = []
+            for g in range(self.B):
+                rows.append((
+                    tuple(np.asarray(t[g]) for t in self._rx_tables_f),
+                    tuple(np.asarray(t[g]) for t in self._tx_tables_f),
+                    np.asarray(self._inv_tx[g]),
+                    np.asarray(self._inv_tx_mask[g]),
+                    np.asarray(self._inv_rx[g]),
+                    np.asarray(self._inv_rx_mask[g]),
+                ))
+            self._t6_rows_cache = tuple(rows)
+        return self._t6_rows_cache[r]
+
+    def _rows_split(self, st: FusedState) -> tuple:
+        """Flat local state -> per-row cycle carries.
+
+        Each row's registers/queues/block slots become SEPARATE buffers:
+        XLA:CPU keeps a <=granule-sized working set cache-resident through
+        a whole exchange-free cycle window, where the fused flat arrays
+        fall off a sharp elementwise-cost cliff (measured ~4x above ~512
+        rows on one core).  Split once per epoch, not per cycle."""
+        B, n_reg, n_q = self.B, self.n_reg, self.n_q
+        rows = []
+        for r in range(B):
+            q_r = (
+                jax.tree.map(
+                    lambda x: x[r * n_q:(r + 1) * n_q], st.queues
+                )
+                if n_q > 1 else st.queues  # shared scratch row: never read
+            )
+            bst_r = tuple(
+                jax.tree.map(
+                    lambda x, nsg=jax.tree.leaves(bs)[0].shape[0] // B:
+                        x[r * nsg:(r + 1) * nsg],
+                    bs,
+                )
+                for bs in st.block_states
+            )
+            rows.append((
+                st.reg_val[r * n_reg:(r + 1) * n_reg],
+                st.reg_v[r * n_reg:(r + 1) * n_reg],
+                q_r,
+                bst_r,
+                st.cycle,
+            ))
+        return tuple(rows)
+
+    def _rows_join(self, st: FusedState, rows: tuple, credits) -> FusedState:
+        """Per-row carries -> the flat local layout (inverse of
+        ``_rows_split``; rows run in lockstep so row 0's cycle counter
+        stands for all)."""
+        cat = lambda xs: jnp.concatenate(xs, axis=0)  # noqa: E731
+        queues = (
+            jax.tree.map(lambda *xs: cat(xs), *(r[2] for r in rows))
+            if self.n_q > 1 else rows[0][2]
+        )
+        return st.replace(
+            reg_val=cat([r[0] for r in rows]),
+            reg_v=cat([r[1] for r in rows]),
+            queues=queues,
+            block_states=tuple(
+                jax.tree.map(lambda *xs: cat(xs), *(r[3][g] for r in rows))
+                for g in range(len(st.block_states))
+            ),
+            cycle=rows[0][4],
+            credits=credits,
+        )
+
+    def _rows_exchange(self, rows: tuple, credits, t: int, tb) -> tuple:
+        """Tier t's on-device exchange on per-row queues: credit-bounded
+        ``stage_drain`` per row, one tiny (B, S_t, E_t, W) slab moved by
+        the ``bat_fwd`` batch-row gather, ``stage_fill`` per row, and the
+        ``bat_rev`` credit return.  Only the staged slab is ever
+        materialized across rows — the queue buffers stay per-row."""
+        sidx, smask = tb.send_idx[t], tb.send_mask[t]  # (B, S_t)
+        ridx, rmask = tb.recv_idx[t], tb.recv_mask[t]
+        bfw, brv = tb.bat_fwd[t], tb.bat_rev[t]
+        limit = jnp.where(smask, credits[t], 0)
+        qs, slabs, cnts = [], [], []
+        for r in range(self.B):
+            q2, slab, cnt = qmod.stage_drain(
+                rows[r][2], sidx[r], self.E_tiers[t], limit=limit[r]
+            )
+            qs.append(q2)
+            slabs.append(slab)
+            cnts.append(cnt)
+        slab = jnp.stack(slabs)  # (B, S_t, E_t, W)
+        cnt = jnp.stack(cnts)    # (B, S_t)
+
+        def move(x, tbl):
+            parts = []
+            for cl in self.tier_classes[t]:
+                w = x[:, cl.col0:cl.col0 + cl.cmax]
+                g = tbl[:, cl.col0:cl.col0 + cl.cmax]
+                g = g.reshape(g.shape + (1,) * (w.ndim - 2))
+                parts.append(jnp.take_along_axis(w, g, axis=0))
+            return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 1)
+
+        slab_in = move(slab, bfw)
+        cnt_in = jnp.where(rmask, move(cnt, bfw), 0)
+        new_rows, frees = [], []
+        for r in range(self.B):
+            q3 = qmod.stage_fill(qs[r], ridx[r], slab_in[r], cnt_in[r])
+            rv, rb, _, bs, cyc = rows[r]
+            new_rows.append((rv, rb, q3, bs, cyc))
+            frees.append(qmod.free(q3))
+        cred = jnp.where(
+            rmask, jnp.take_along_axis(jnp.stack(frees), ridx, axis=1), 0
+        )
+        credits = credits[:t] + (move(cred, brv),) + credits[t + 1:]
+        return tuple(new_rows), credits
+
     def _local_cycle(self, st: FusedState) -> FusedState:
         """One granule-local cycle on registers + boundary queues."""
         carry = (st.reg_val, st.reg_v, st.queues, st.block_states, st.cycle)
@@ -320,11 +678,14 @@ class FusedEngine(GraphEngine):
         """
         reg_val_in, reg_v_in, q, block_states, cycle = carry
         rx_tbl, tx_tbl, inv_tx, inv_tx_mask, inv_rx, inv_rx_mask = tables6
-        n_reg, W = self.n_reg, self.W
-        # n_q == 1 means only the scratch row exists: this granule set has no
-        # boundary/external channels, so the queue machinery vanishes from
-        # the compiled body entirely (host-static decision).
-        have_q = self.n_q > 1
+        # Dims come from the carry, not the engine: the SAME body then serves
+        # the per-granule layout (n_reg rows) and the signature-batched flat
+        # layout (B*n_reg rows with per-row offset tables) unchanged.
+        n_reg, W = reg_val_in.shape
+        # A 1-row queue array is only the scratch sentinel: this granule set
+        # has no boundary/external channels, so the queue machinery vanishes
+        # from the compiled body entirely (host-static decision).
+        have_q = q.buf.shape[0] > 1
 
         if have_q:
             qsize = (q.head - q.tail) % q.capacity
@@ -413,9 +774,13 @@ class FusedEngine(GraphEngine):
 
         Only the mutating leaves ride the loop carry; port tables enter as
         read-only consts, and the exchange tables/credits/epoch counter
-        never touch the kernel at all.
+        never touch the kernel at all.  Batched engines step the whole
+        granule batch in this same single dispatch (flat layout).
         """
         carry = (st.reg_val, st.reg_v, st.queues, st.block_states, st.cycle)
+        # Batched engines run the same UNVMAPPED body on the flat layout —
+        # one dispatch per epoch AND plain gathers (vmap would lower every
+        # table lookup to a batched gather, a scalar loop on XLA:CPU).
         out = granule_step.epoch_loop(
             self._cycle_body, carry, K,
             consts=self._tables6(st.tables),
@@ -424,6 +789,175 @@ class FusedEngine(GraphEngine):
         return st.replace(
             reg_val=out[0], reg_v=out[1], queues=out[2],
             block_states=out[3], cycle=out[4],
+        )
+
+    # -------------------------------------------- resident multi-epoch kernel
+    def _resident_program(self, t0: int) -> tuple:
+        """The ("C", n)/("X", t) op list realizing tiers [t0:] — the same
+        recursion as ``_tier_round``, flattened so the whole span executes
+        as ONE ``epoch_program`` body (adjacent cycle blocks merged,
+        exchange-free tiers elided)."""
+        if t0 not in self._program_cache:
+
+            def prog(t):
+                if t >= self._fold_from:
+                    return [("C", int(np.prod(self.K_tiers[t:])))]
+                if t == len(self.tiers) - 1:
+                    ops = [("C", self.tiers[t].K)]
+                else:
+                    ops = prog(t + 1) * self.tiers[t].K
+                if self.tier_classes[t]:
+                    ops = ops + [("X", t)]
+                return ops
+
+            merged: list[tuple] = []
+            for op, arg in prog(t0):
+                if op == "C" and merged and merged[-1][0] == "C":
+                    merged[-1] = ("C", merged[-1][1] + arg)
+                else:
+                    merged.append((op, arg))
+            self._program_cache[t0] = tuple(merged)
+        return self._program_cache[t0]
+
+    def _resident_cycle(self, carry, consts):
+        """Cycle body on the resident carry (the 5-leaf cycle carry plus
+        the per-tier credit tuple, which only exchanges touch)."""
+        return self._cycle_body(carry[:5], consts[0]) + (carry[5],)
+
+    def _resident_exchange(self, carry, t: int, consts):
+        """Tier t's exchange *inside* the resident body — on-device only.
+
+        Every class of a resident tier has an empty ``real_perm`` (that is
+        what admitted it), so the whole exchange is slab staging on the
+        local fused queue rows: credit-bounded ``stage_drain`` into the
+        (B, S_t, E_t, W) slab, ``bat_fwd`` batch-row gather,
+        ``stage_fill``, and the ``bat_rev`` credit return.  Under
+        ``fuse="pallas"`` this runs between the kernel's in-VMEM epoch
+        loops — the slab never leaves the kernel."""
+        reg_val, reg_v, q, block_states, cycle, credits = carry
+        sidx, smask, ridx, rmask, bfw, brv = (x[t] for x in consts[1])
+        q = self._q_batch_view(q)  # flat rows -> (B, n_q) for the slab move
+        limit = jnp.where(smask, credits[t], 0)
+        q, slab, cnt = jax.vmap(
+            lambda qb, si, lim: qmod.stage_drain(
+                qb, si, self.E_tiers[t], limit=lim
+            )
+        )(q, sidx, limit)
+
+        def move(x, tbl):
+            parts = []
+            for cl in self.tier_classes[t]:
+                w = x[:, cl.col0:cl.col0 + cl.cmax]
+                g = tbl[:, cl.col0:cl.col0 + cl.cmax]
+                g = g.reshape(g.shape + (1,) * (w.ndim - 2))
+                parts.append(jnp.take_along_axis(w, g, axis=0))
+            return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 1)
+
+        slab_in = move(slab, bfw)
+        cnt_in = jnp.where(rmask, move(cnt, bfw), 0)
+        q = jax.vmap(qmod.stage_fill)(q, ridx, slab_in, cnt_in)
+        cred = jnp.where(
+            rmask, jnp.take_along_axis(qmod.free(q), ridx, axis=1), 0
+        )
+        credits = credits[:t] + (move(cred, brv),) + credits[t + 1:]
+        return (reg_val, reg_v, self._q_flat_view(q), block_states, cycle,
+                credits)
+
+    def _rows_program(self, rows: tuple, credits, tb, t0: int) -> tuple:
+        """Walk tiers [t0:] on the per-row carries: each ("C", n) op runs
+        every row's n-cycle window as its own ``epoch_loop`` over that
+        row's private buffers, each ("X", t) op is ``_rows_exchange``'s
+        slab staging.  Rows are independent between exchanges, so running
+        row r's whole window before row r+1 is legal — and keeps one
+        granule's working set cache-resident per window."""
+        for op, arg in self._resident_program(t0):
+            if op == "C":
+                rows = tuple(
+                    granule_step.epoch_loop(
+                        self._cycle_body, c_r, arg,
+                        consts=self._t6_row(r),
+                        mode=self.fuse, interpret=self.pallas_interpret,
+                    )
+                    for r, c_r in enumerate(rows)
+                )
+            else:
+                rows, credits = self._rows_exchange(rows, credits, arg, tb)
+        return rows, credits
+
+    def run_epochs(
+        self, state: FusedState, n_epochs: int, *, donate: bool = True
+    ) -> FusedState:
+        """Pure-batch engines scan whole epochs on the per-row carries —
+        split once per ``run_epochs`` call, not once per epoch.  Keeping
+        the row structure in the scan carry lets XLA update each row's
+        queue buffers in place across every epoch instead of copying the
+        flat state apart and back together ``n_epochs`` times.  Mixed
+        real+batch and unbatched engines take the inherited path."""
+        if not (self._batched and not self.real_axes):
+            return super().run_epochs(state, n_epochs, donate=donate)
+        key = ("run_rows", n_epochs, donate)
+        if key not in self._jit_cache:
+
+            def run(state):
+                local = self._local_view(state)
+                tb = local.tables
+
+                def one(carry, _):
+                    rows, credits, epoch = carry
+                    rows, credits = self._rows_program(rows, credits, tb, 0)
+                    return (rows, credits, epoch + 1), None
+
+                carry = (self._rows_split(local), local.credits, local.epoch)
+                rows, credits, epoch = jax.lax.scan(
+                    one, carry, None, length=n_epochs
+                )[0]
+                out = self._rows_join(local, rows, credits)
+                return self._global_view(out.replace(epoch=epoch))
+
+            self._jit_cache[key] = jax.jit(
+                self._wrap(run), donate_argnums=(0,) if donate else ()
+            )
+        if donate:
+            state = _dealias_for_donation(state)
+        return self._jit_cache[key](state)
+
+    def _tier_round(self, st: FusedState, t: int) -> FusedState:
+        """Batched engines run every all-on-device span of the tier tree
+        resident — registers, queues and credits never leave the kernel
+        between its inner epochs and tier boundaries — falling back to the
+        inherited loop-and-exchange recursion above ``_resident_from``.
+
+        Pure-batch engines (every mesh axis a batch axis) take the per-row
+        blocked walk: each ("C", n) op runs every row's n-cycle window as
+        its own ``epoch_loop`` over that row's private buffers (see
+        ``_rows_split``), and each ("X", t) op is the slab exchange of
+        ``_rows_exchange``.  Mixed real+batch engines keep the flat-carry
+        ``epoch_program`` (one body under shard_map)."""
+        if not (self._batched and t >= self._resident_from):
+            return super()._tier_round(st, t)
+        tb = st.tables
+        if not self.real_axes:
+            rows, credits = self._rows_program(
+                self._rows_split(st), st.credits, tb, t
+            )
+            return self._rows_join(st, rows, credits)
+        carry = (
+            st.reg_val, st.reg_v, st.queues, st.block_states, st.cycle,
+            st.credits,
+        )
+        consts = (
+            self._tables6(tb),
+            (tb.send_idx, tb.send_mask, tb.recv_idx, tb.recv_mask,
+             tb.bat_fwd, tb.bat_rev),
+        )
+        out = granule_step.epoch_program(
+            self._resident_cycle, carry, self._resident_program(t),
+            exchange_fn=self._resident_exchange, consts=consts,
+            mode=self.fuse, interpret=self.pallas_interpret,
+        )
+        return st.replace(
+            reg_val=out[0], reg_v=out[1], queues=out[2],
+            block_states=out[3], cycle=out[4], credits=out[5],
         )
 
     # ------------------------------------------------- host-side external I/O

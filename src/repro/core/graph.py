@@ -684,6 +684,7 @@ class PartitionLowering:
             key = (int(self.chan_tier[c]), int(src_g[c]), int(dst_g[c]))
             routes.setdefault(key, []).append(int(c))
         self.routes = routes
+        self._signatures: list[str] | None = None
 
     # -- per-granule views (the multiprocess runtime's slices) ---------------
     def tier_channels(self, t: int, granule: int) -> tuple[list[int], list[int]]:
@@ -746,6 +747,47 @@ class PartitionLowering:
             parts.append(f"t{t}:eg={len(eg)}:in={len(ing)}:all={n_eg}")
         parts.append(f"ext={len(self.ext_channels(granule))}")
         return hashlib.sha256("|".join(parts).encode()).hexdigest()[:16]
+
+    # -- signature batching (PR 6) ------------------------------------------
+    def granule_signatures(self) -> list[str]:
+        """``granule_signature`` of every granule, computed once and cached
+        (the signature walk scans the route table, so the cache matters for
+        wide meshes)."""
+        if self._signatures is None:
+            self._signatures = [
+                self.granule_signature(g) for g in range(self.G)
+            ]
+        return self._signatures
+
+    def signature_groups(self) -> dict[str, list[int]]:
+        """Granules grouped by compiled-shape signature.
+
+        Signature -> ascending granule ids.  All granules in one group
+        trace to the *same* stepper jaxpr, so they can be stacked on one
+        leading batch axis and stepped by a single vmapped dispatch — the
+        batching lowering consumed by the in-process engines
+        (``batch_axes``) and the multiprocess launcher
+        (``batch_signatures``)."""
+        groups: dict[str, list[int]] = {}
+        for g, sig in enumerate(self.granule_signatures()):
+            groups.setdefault(sig, []).append(g)
+        return groups
+
+    def batch_plan(self) -> tuple[list[list[int]], dict[int, tuple[int, int]]]:
+        """Signature-batch membership + inverse scatter map.
+
+        Returns ``(batches, where)``: ``batches[b]`` lists the granules
+        stacked into batch ``b`` (groups in first-granule order, members
+        ascending — so batch row == rank within the signature group), and
+        ``where[g] = (b, row)`` locates granule ``g``'s slice for
+        scatter-back at tier exchange / probe routing."""
+        groups = sorted(self.signature_groups().values(), key=lambda m: m[0])
+        where = {
+            g: (b, r)
+            for b, members in enumerate(groups)
+            for r, g in enumerate(members)
+        }
+        return groups, where
 
 
 def lower_partition(graph: "ChannelGraph", ptree: "PartitionTree") -> PartitionLowering:

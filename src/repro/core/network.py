@@ -149,7 +149,10 @@ class Network:
                               partition (instance->granule map or a
                               graph.PartitionTree), axes, tiers (per-tier
                               (axes, K) pairs or graph.Tier, outermost
-                              first — hierarchical sync, DESIGN.md §3).
+                              first — hierarchical sync, DESIGN.md §3),
+                              batch_axes (signature-batched stepping:
+                              axis names, or {name: size} for batch-only
+                              axes off the mesh — DESIGN.md §Perf).
         engine="fused"     -> fused.FusedEngine — the kernel-fused fast
                               path for arbitrary topologies (§Perf):
                               same kwargs as "graph" plus fuse /
@@ -199,6 +202,8 @@ class Network:
             tiers = kw.pop("tiers", None)
             axes = kw.pop("axes", None)  # engine defaults to mesh.axis_names
             partition = kw.pop("partition", None)
+            if "batch_axes" in kw:  # signature-batched stepping (§Perf)
+                extra["batch_axes"] = kw.pop("batch_axes")
             if kw:
                 raise TypeError(
                     f"unknown build kwargs for engine={engine!r}: {sorted(kw)}"

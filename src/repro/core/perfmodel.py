@@ -132,6 +132,71 @@ def bsp_error_bound_tiered(
     )
 
 
+# -- signature-batched dispatch accounting (ISSUE 6, DESIGN.md §Perf) --------
+
+def batched_epoch_time(
+    batch: int, t_step: float, t_dispatch: float, pad_factor: float = 1.0
+) -> float:
+    """Wall time for ONE vmapped dispatch stepping ``batch`` same-signature
+    granules: the per-dispatch overhead (trace/launch/coordination) is paid
+    once and the per-granule compute ``batch`` times.  ``pad_factor >= 1``
+    models heterogeneous batching, where every member is padded to the
+    largest signature in the stack and steps ``pad_factor * t_step``."""
+    return t_dispatch + batch * t_step * pad_factor
+
+
+def unbatched_epoch_time(batch: int, t_step: float, t_dispatch: float) -> float:
+    """Wall time for ``batch`` separate per-granule dispatches."""
+    return batch * (t_dispatch + t_step)
+
+
+def dispatch_amortization(
+    batch: int, t_step: float, t_dispatch: float, pad_factor: float = 1.0
+) -> float:
+    """Predicted speedup of signature-batched over per-granule dispatch:
+
+        S(B) = B * (t_disp + t_step) / (t_disp + B * t_step * pad)
+
+    S(1) = 1 for pad = 1 (batching a single granule is free), and
+    S -> (t_disp + t_step) / (t_step * pad) as B -> inf: the per-dispatch
+    overhead amortizes away and only the padding waste remains."""
+    return unbatched_epoch_time(batch, t_step, t_dispatch) / batched_epoch_time(
+        batch, t_step, t_dispatch, pad_factor
+    )
+
+
+def fit_dispatch_overhead(
+    t_unbatched: float, t_batched: float, batch: int
+) -> tuple[float, float]:
+    """Recover ``(t_step, t_dispatch)`` from ONE measured A/B pair.
+
+    Inverts the two-equation model ``t_unbatched = B*(t_disp + t_step)``,
+    ``t_batched = t_disp + B*t_step`` (pad = 1) — the fit
+    ``benchmarks/run.py`` applies to the wafer rows to validate the model
+    against a second, differently-shaped measured pair.  Degenerate
+    measurements (batched slower than unbatched) clamp to t_disp = 0."""
+    if batch < 2:
+        raise ValueError("need batch >= 2 to separate t_step from t_dispatch")
+    t_disp = max((t_unbatched - t_batched) / (batch - 1), 0.0)
+    t_step = max((t_batched - t_disp) / batch, 0.0)
+    return t_step, t_disp
+
+
+def batching_crossover(
+    t_step: float, t_dispatch: float, pad_factor: float
+) -> float:
+    """Smallest batch size B at which batching WINS (S(B) > 1) despite a
+    ``pad_factor`` padding waste; ``inf`` when padding always loses.
+
+    From B*(t_disp + t_step) > t_disp + B*t_step*pad:
+    batching wins iff the amortized dispatch saving outruns the padding
+    waste — when ``t_step * pad >= t_disp + t_step`` it never does."""
+    gain = t_dispatch + t_step - t_step * pad_factor
+    if gain <= 0.0:
+        return math.inf
+    return max(t_dispatch / gain, 1.0)
+
+
 def dividers_for_rates(f_sims: Sequence[float]) -> list[int]:
     """Clock dividers that realize simulated-frequency ratios exactly.
 

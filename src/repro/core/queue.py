@@ -297,3 +297,46 @@ def fill(q: QueueArray, payloads: jax.Array, count: jax.Array) -> QueueArray:
     )
     head = (q.head + count) % q.capacity
     return q.replace(buf=buf, head=head)
+
+
+def stage_drain(
+    q: QueueArray, idx: jax.Array, max_n: int,
+    limit: jax.Array | None = None,
+):
+    """Drain up to ``max_n`` packets from queue rows ``idx`` into a slab.
+
+    The tier-exchange staging primitive: one gather selects the egress
+    rows, one bulk :func:`drain` empties them into a contiguous
+    ``(len(idx), max_n, W)`` slab (credit-bounded when ``limit`` is
+    given), and only the selected rows' tails advance.  Rows whose count
+    resolves to 0 write back their original tail, so padding ``idx``
+    entries (masked by a 0 ``limit``) are harmless even when duplicated.
+    Returns ``(new_q, slab, count)``.
+    """
+    sub = QueueArray(
+        buf=q.buf[idx], head=q.head[idx], tail=q.tail[idx],
+        capacity=q.capacity,
+    )
+    sub2, slab, count = drain(sub, max_n, limit=limit)
+    return q.replace(tail=q.tail.at[idx].set(sub2.tail)), slab, count
+
+
+def stage_fill(
+    q: QueueArray, idx: jax.Array, payloads: jax.Array, count: jax.Array,
+) -> QueueArray:
+    """Land a slab into queue rows ``idx`` — the inverse of
+    :func:`stage_drain`.
+
+    ``payloads``: (len(idx), max_n, W); ``count``: (len(idx),).  Rows with
+    ``count == 0`` are written back unchanged, so duplicate padding
+    indices are harmless.
+    """
+    sub = QueueArray(
+        buf=q.buf[idx], head=q.head[idx], tail=q.tail[idx],
+        capacity=q.capacity,
+    )
+    sub2 = fill(sub, payloads, count)
+    return q.replace(
+        buf=q.buf.at[idx].set(sub2.buf),
+        head=q.head.at[idx].set(sub2.head),
+    )

@@ -26,7 +26,8 @@ wrapper checks and raises otherwise).
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+import os
+from typing import Any, Callable, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,18 +35,55 @@ from jax.experimental import pallas as pl
 
 PyTree = Any
 
+#: Op list executed by :func:`epoch_program`: ``("C", n)`` runs ``n``
+#: cycles of the cycle body; ``("X", t)`` runs the caller's exchange
+#: function for tier ``t``.  The whole program is ONE fused computation.
+Program = Sequence[Tuple[str, int]]
+
+_MODES = ("auto", "unroll", "xla", "pallas")
+
 
 def resolve_mode(mode: str = "auto") -> str:
     """Pick the execution strategy for a K-cycle epoch body.
+
+    The environment variable ``REPRO_EPOCH_MODE`` (one of
+    ``auto|unroll|xla|pallas``) overrides a caller-passed ``"auto"`` so CI
+    can force the pallas body (under interpret, see
+    :func:`resolve_interpret`) without threading a flag through every
+    engine.  An explicit non-"auto" argument always wins over the env.
 
     "auto" resolves to the Pallas kernel on TPU and the ``fori_loop`` body
     elsewhere — measured on XLA:CPU the loop beats full unrolling ~3x (the
     straight-line body defeats the emitter's locality), so "unroll" is
     opt-in only.
     """
+    if mode == "auto":
+        env = os.environ.get("REPRO_EPOCH_MODE", "auto").strip().lower()
+        if env and env != "auto":
+            if env not in _MODES:
+                raise ValueError(
+                    f"REPRO_EPOCH_MODE={env!r} not in {_MODES}")
+            return env
     if mode != "auto":
         return mode
     return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def resolve_interpret(interpret: Any = "auto") -> bool:
+    """Resolve the pallas ``interpret`` knob.
+
+    ``"auto"`` means: run the kernel natively on TPU, fall back to the
+    Pallas interpreter everywhere else — so ``mode="pallas"`` is never
+    dead code off-TPU (the ISSUE 6 CI requirement).  The env override
+    ``REPRO_PALLAS_INTERPRET=0|1`` forces either way (e.g. to exercise the
+    interpreter on TPU hosts).  Booleans pass through unchanged.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip()
+    if env:
+        return env not in ("0", "false", "False")
+    if interpret == "auto":
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
 
 
 def _check_stable(step: Any, carry: PyTree) -> None:
@@ -62,20 +100,27 @@ def _check_stable(step: Any, carry: PyTree) -> None:
         )
 
 
-def pallas_epoch(
+def pallas_program(
     cycle_fn: Callable[..., PyTree],
     carry: PyTree,
-    k_cycles: int,
+    program: Program,
     *,
+    exchange_fn: Callable[..., PyTree] | None = None,
     consts: PyTree | None = None,
-    interpret: bool = False,
+    interpret: Any = "auto",
 ) -> PyTree:
-    """Run ``k_cycles`` of ``cycle_fn`` inside ONE ``pallas_call``.
+    """Run a ``("C", n)`` / ``("X", t)`` op program inside ONE
+    ``pallas_call`` — the resident multi-epoch kernel.
 
     The carry pytree is flattened into kernel refs; the kernel loads every
-    leaf once, iterates the cycle body with the state resident in kernel
-    memory (VMEM on TPU), and stores every leaf once — the granule state
-    touches HBM exactly twice per epoch regardless of K.  ``consts``
+    leaf once, then walks the whole program — every inner-epoch cycle
+    block as a ``fori_loop`` of the cycle body and every tier exchange as
+    an inline call to ``exchange_fn`` — with the granule state resident in
+    kernel memory (VMEM on TPU) for the program's whole lifetime.  The
+    state touches HBM exactly twice regardless of how many epochs and
+    tier boundaries the program spans; ``pallas_call`` stages the
+    HBM<->VMEM slab transfers at kernel entry/exit asynchronously, so the
+    boundary staging overlaps the surrounding dispatch.  ``consts``
     (lookup tables) are extra read-only refs.  Zero-size leaves carry no
     data and ``pallas_call`` rejects them, so they are filtered out and
     reconstructed inside the kernel.
@@ -98,13 +143,26 @@ def pallas_epoch(
             tuple(r[...] for r in refs[nc:nc + nk]), k_live, k_leaves, k_def
         )
 
-        def body(_, vs):
-            c = rebuild(vs, c_live, c_leaves, c_def)
-            out = cycle_fn(c, consts_v) if consts is not None else cycle_fn(c)
+        def live_out(out):
             out_leaves = jax.tree.leaves(out)
             return tuple(out_leaves[i] for i in c_live)
 
-        cvals = jax.lax.fori_loop(0, k_cycles, body, cvals)
+        def body(_, vs):
+            c = rebuild(vs, c_live, c_leaves, c_def)
+            out = cycle_fn(c, consts_v) if consts is not None else cycle_fn(c)
+            return live_out(out)
+
+        for op, arg in program:
+            if op == "C":
+                if arg == 1:
+                    cvals = body(0, cvals)
+                elif arg > 1:
+                    cvals = jax.lax.fori_loop(0, arg, body, cvals)
+            else:  # "X"
+                c = rebuild(cvals, c_live, c_leaves, c_def)
+                out = (exchange_fn(c, arg, consts_v) if consts is not None
+                       else exchange_fn(c, arg))
+                cvals = live_out(out)
         for r, v in zip(refs[nc + nk:], cvals):
             r[...] = v
 
@@ -114,9 +172,28 @@ def pallas_epoch(
             jax.ShapeDtypeStruct(c_leaves[i].shape, c_leaves[i].dtype)
             for i in c_live
         ),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(*(c_leaves[i] for i in c_live), *(k_leaves[i] for i in k_live))
     return rebuild(list(outs), c_live, c_leaves, c_def)
+
+
+def pallas_epoch(
+    cycle_fn: Callable[..., PyTree],
+    carry: PyTree,
+    k_cycles: int,
+    *,
+    consts: PyTree | None = None,
+    interpret: Any = False,
+) -> PyTree:
+    """Run ``k_cycles`` of ``cycle_fn`` inside ONE ``pallas_call``.
+
+    The single-epoch special case of :func:`pallas_program` (a program of
+    one ``("C", k_cycles)`` op); see there for the memory contract.
+    """
+    return pallas_program(
+        cycle_fn, carry, (("C", k_cycles),), consts=consts,
+        interpret=interpret,
+    )
 
 
 def epoch_loop(
@@ -126,7 +203,7 @@ def epoch_loop(
     *,
     consts: PyTree | None = None,
     mode: str = "auto",
-    interpret: bool = False,
+    interpret: Any = False,
 ) -> PyTree:
     """Execute ``k_cycles`` of ``cycle_fn`` as one fused epoch body.
 
@@ -153,3 +230,69 @@ def epoch_loop(
             cycle_fn, carry, k_cycles, consts=consts, interpret=interpret
         )
     raise ValueError(f"unknown epoch mode {mode!r} (auto|unroll|xla|pallas)")
+
+
+def epoch_program(
+    cycle_fn: Callable[..., PyTree],
+    carry: PyTree,
+    program: Program,
+    *,
+    exchange_fn: Callable[..., PyTree] | None = None,
+    consts: PyTree | None = None,
+    mode: str = "auto",
+    interpret: Any = "auto",
+) -> PyTree:
+    """Execute a multi-epoch op program as ONE fused computation.
+
+    ``program`` is a flat op list: ``("C", n)`` steps the cycle body ``n``
+    cycles; ``("X", t)`` applies ``exchange_fn`` for tier ``t`` (a pure
+    local tier exchange — drain egress queues into slab rows, scatter
+    ingress rows back).  This is the resident-kernel generalization of
+    :func:`epoch_loop`: a whole K_outer x K_inner span between two
+    device-boundary exchanges runs as one body, so under ``mode="pallas"``
+    the register/queue state stays resident in VMEM across every inner
+    epoch and local tier boundary it contains.  The xla/unroll modes
+    execute the *same* op sequence (bit-exact twins for CPU CI), just as
+    jitted XLA loops instead of one kernel.
+
+    Both ``cycle_fn`` and ``exchange_fn`` must preserve the carry's
+    treedef/shapes/dtypes (checked abstractly up front).
+    """
+    program = tuple((op, int(arg)) for op, arg in program)
+    for op, _ in program:
+        if op not in ("C", "X"):
+            raise ValueError(f"unknown program op {op!r} (C|X)")
+    if any(op == "X" for op, _ in program) and exchange_fn is None:
+        raise ValueError("program has ('X', t) ops but no exchange_fn")
+    if not program:
+        return carry
+    step = (lambda c: cycle_fn(c, consts)) if consts is not None else cycle_fn
+    _check_stable(step, carry)
+    for t in sorted({arg for op, arg in program if op == "X"}):
+        _check_stable(
+            (lambda c, _t=t: exchange_fn(c, _t, consts)) if consts is not None
+            else (lambda c, _t=t: exchange_fn(c, _t)),
+            carry,
+        )
+    mode = resolve_mode(mode)
+    if mode == "pallas":
+        return pallas_program(
+            cycle_fn, carry, program, exchange_fn=exchange_fn, consts=consts,
+            interpret=interpret,
+        )
+    if mode not in ("xla", "unroll"):
+        raise ValueError(f"unknown epoch mode {mode!r} (auto|unroll|xla|pallas)")
+    out = carry
+    for op, arg in program:
+        if op == "C":
+            if mode == "unroll":
+                for _ in range(arg):
+                    out = step(out)
+            elif arg == 1:
+                out = step(out)
+            elif arg > 1:
+                out = jax.lax.fori_loop(0, arg, lambda _, c: step(c), out)
+        else:
+            out = (exchange_fn(out, arg, consts) if consts is not None
+                   else exchange_fn(out, arg))
+    return out

@@ -55,8 +55,9 @@ from ..core.graph import (
 from .fault_tolerance import ProcessMonitor, WorkerDiedError, read_log_tail
 from .shmem import ShmRing, slab_slot_bytes
 from .worker import (
-    GranuleSim, GranuleSpec, GroupSpec, TierSpec, configure_compile_cache,
-    credit_ring_name, data_ring_name, ext_ring_name, worker_entry,
+    BatchSpec, BatchedGranuleSim, GranuleSim, GranuleSpec, GroupSpec,
+    TierSpec, configure_compile_cache, credit_ring_name, data_ring_name,
+    ext_ring_name, worker_entry,
 )
 
 PyTree = Any
@@ -118,6 +119,13 @@ class ProcsEngine:
     prebuild:   AOT-compile each distinct granule signature in-launcher
                 (warming the persistent cache) before any worker spawns.
     cache_dir:  JAX persistent compilation cache directory (shared).
+    batch_signatures:
+                group same-signature granules (``lowering.batch_plan``)
+                into ONE worker process each, stepping the whole group as
+                a leading-axis batch with a single vmapped dispatch per
+                program op — fewer processes and fewer dispatches for
+                replicated designs, bit-identical traffic (the batch is a
+                legal lockstep refinement of the free-running schedule).
     """
 
     engine_kind = "procs"
@@ -135,6 +143,7 @@ class ProcsEngine:
         prebuild: bool = True,
         cache_dir: str | None = None,
         log_dir: str | None = None,
+        batch_signatures: bool = False,
     ):
         self.graph = graph
         if isinstance(partition, PartitionTree):
@@ -185,9 +194,30 @@ class ProcsEngine:
         self._specs = [self._granule_spec(g) for g in range(self.G)]
         self.signatures = [s.signature for s in self._specs]
 
+        # ---- signature-batch plan: one worker per granule, or (with
+        # batch_signatures) one worker per signature group stepping the
+        # whole group as a leading-axis batch
+        self.batch_signatures = bool(batch_signatures)
+        if self.batch_signatures:
+            groups, where = low.batch_plan()
+            self._worker_members = [tuple(ms) for ms in groups]
+            self._worker_of = {g: b for g, (b, r) in where.items()}
+            self._row_of = {g: r for g, (b, r) in where.items()}
+        else:
+            self._worker_members = [(g,) for g in range(self.G)]
+            self._worker_of = {g: g for g in range(self.G)}
+            self._row_of = {g: 0 for g in range(self.G)}
+        self._wspecs: list[Any] = [
+            self._specs[ms[0]] if len(ms) == 1
+            else BatchSpec(members=ms, specs=[self._specs[g] for g in ms])
+            for ms in self._worker_members
+        ]
+        self._is_batch = [isinstance(s, BatchSpec) for s in self._wspecs]
+        self.NW = len(self._wspecs)
+
         # ---- the prebuilt-simulator cache: one compile per DISTINCT shape
         self.build_stats: dict[str, Any] = {
-            "n_workers": self.G,
+            "n_workers": self.NW,
             "n_signatures": len(set(self.signatures)),
             "compiled": {},
             "prebuild_seconds": 0.0,
@@ -195,14 +225,19 @@ class ProcsEngine:
         if prebuild:
             configure_compile_cache(self.cache_dir)
             t0 = time.perf_counter()
-            done: set[str] = set()
-            for spec in self._specs:
-                if spec.signature in done:
+            done: set[tuple[str, int]] = set()
+            for wspec in self._wspecs:
+                nb = len(wspec.specs) if isinstance(wspec, BatchSpec) else 1
+                key = (wspec.signature, nb)
+                if key in done:
                     continue
-                done.add(spec.signature)
-                sim = GranuleSim(spec)
+                done.add(key)
+                sim = (BatchedGranuleSim(wspec) if isinstance(wspec, BatchSpec)
+                       else GranuleSim(wspec))
                 stats = sim.prebuild()
-                self.build_stats["compiled"][spec.signature] = stats
+                name = (wspec.signature if nb == 1
+                        else f"{wspec.signature}x{nb}")
+                self.build_stats["compiled"][name] = stats
             self.build_stats["prebuild_seconds"] = time.perf_counter() - t0
 
         self._ctx = get_context("spawn")
@@ -303,14 +338,14 @@ class ProcsEngine:
 
         hb_name = f"{self._ring_prefix}hb"
         self._hb_shm = shared_memory.SharedMemory(
-            name=hb_name, create=True, size=16 * self.G
+            name=hb_name, create=True, size=16 * self.NW
         )
-        self._hb_shm.buf[:] = bytes(16 * self.G)
+        self._hb_shm.buf[:] = bytes(16 * self.NW)
         self._hb = np.frombuffer(self._hb_shm.buf, np.float64)
 
         env_save = _child_env()
         try:
-            for g, spec in enumerate(self._specs):
+            for g, spec in enumerate(self._wspecs):
                 parent, child = self._ctx.Pipe()
                 log_path = os.path.join(self._log_dir, f"worker{g}.log")
                 p = self._ctx.Process(
@@ -329,14 +364,14 @@ class ProcsEngine:
         self._monitor = ProcessMonitor(
             self._procs,
             {g: os.path.join(self._log_dir, f"worker{g}.log")
-             for g in range(self.G)},
+             for g in range(self.NW)},
             heartbeat=lambda g: float(self._hb[g * 2])
             + float(self._hb[g * 2 + 1]),
             hang_timeout_s=self.timeout,
         )
         self._launched = True
         self.launch_stats = {"ready_seconds": {}}
-        for g in range(self.G):
+        for g in range(self.NW):
             t0 = time.perf_counter()
             # no heartbeats exist yet (first beat lands on the init
             # command), so the ready-wait polls exitcodes only under a
@@ -468,10 +503,10 @@ class ProcsEngine:
     def _broadcast(self, cmd: tuple, progress: bool = False) -> list:
         """Send to every worker, then collect every reply — the workers run
         the command concurrently (free-running; no barrier inside)."""
-        for g in range(self.G):
+        for g in range(self.NW):
             self._send(g, cmd)
         out = []
-        for g in range(self.G):
+        for g in range(self.NW):
             kind, payload = self._recv(g, progress=progress)
             if kind == "err":
                 self.close()
@@ -496,17 +531,23 @@ class ProcsEngine:
         if not jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
             key = jax.random.wrap_key_data(key)  # legacy raw uint32 keys
         key_data = np.asarray(jax.device_get(jax.random.key_data(key)))
-        per_worker_params: list[list | None] = [None] * self.G
+        per_granule_params: list[list | None] = [None] * self.G
         if group_params is not None:
             for g in range(self.G):
                 sliced: list = [None] * len(self.graph.groups)
                 for gi, p in group_params.items():
                     mo = self.lowering.member_of[gi][g]
                     sliced[gi] = _tree_np(p, mo)
-                per_worker_params[g] = sliced
-        for g in range(self.G):
-            self._send(g, ("init", key_data, per_worker_params[g]))
-        for g in range(self.G):
+                per_granule_params[g] = sliced
+        for w, members in enumerate(self._worker_members):
+            if group_params is None:
+                payload = None
+            elif self._is_batch[w]:
+                payload = [per_granule_params[g] for g in members]
+            else:
+                payload = per_granule_params[members[0]]
+            self._send(w, ("init", key_data, payload))
+        for g in range(self.NW):
             kind, payload = self._recv(g)
             if kind == "err":
                 self.close()
@@ -575,10 +616,17 @@ class ProcsEngine:
         return self._np_tables_cache[g]
 
     def _views(self) -> list:
-        return [
-            v.replace(tables=self._np_tables(g))
-            for g, v in enumerate(self._broadcast(("view",)))
-        ]
+        """Per-GRANULE state views in granule order (batched workers reply
+        with the stacked batch; each member's row is sliced back out)."""
+        import jax
+
+        out: list = [None] * self.G
+        for w, v in enumerate(self._broadcast(("view",))):
+            for r, g in enumerate(self._worker_members[w]):
+                vv = (jax.tree.map(lambda x: x[r], v) if self._is_batch[w]
+                      else v)
+                out[g] = vv.replace(tables=self._np_tables(g))
+        return out
 
     def eval_done(self, state: ProcsState, done_fn: Callable) -> bool:
         """Evaluate a granule-local predicate on every worker's state view
@@ -614,7 +662,10 @@ class ProcsEngine:
         gi, slot_g = self.graph.locate(inst_id)
         g = int(self.lowering.member_granule[gi][slot_g])
         slot = int(self.lowering.member_slot[gi][slot_g])
-        return self._command(g, ("probe", gi, slot))
+        w = self._worker_of[g]
+        if self._is_batch[w]:
+            return self._command(w, ("probe", gi, slot, self._row_of[g]))
+        return self._command(w, ("probe", gi, slot))
 
     def gather_group(self, state: ProcsState, gi: int) -> PyTree:
         """Group ``gi``'s member states in global instantiation order."""
@@ -634,9 +685,17 @@ class ProcsEngine:
         return jax.tree.map(pick, *per_worker)
 
     def worker_stats(self, state: ProcsState | None = None) -> list[dict]:
+        """One record per GRANULE (batched workers reply with a list, one
+        per batch row — flattened here so the schema is engine-invariant)."""
         if state is not None:
             self._require(state)
-        return self._broadcast(("stats",))
+        out: list[dict] = []
+        for payload in self._broadcast(("stats",)):
+            if isinstance(payload, list):
+                out.extend(payload)
+            else:
+                out.append(payload)
+        return out
 
     def port_stats(self, state: ProcsState) -> dict[str, dict]:
         """Per external port: shm-ring occupancy (packets the host can pop /
@@ -707,8 +766,15 @@ class ProcsEngine:
         every boundary channel's in-flight credit record, every external
         ring's resident packets (fixed-size buffers + counts, so the
         checkpoint template is shape-stable)."""
+        import jax
+
         state = self._require(state)
-        workers = self._broadcast(("gather",))
+        gathered = self._broadcast(("gather",))
+        workers: list = [None] * self.G
+        for w, tree_w in enumerate(gathered):
+            for r, g in enumerate(self._worker_members[w]):
+                workers[g] = (jax.tree.map(lambda x: x[r], tree_w)
+                              if self._is_batch[w] else tree_w)
         credits = {}
         for (t, s, d), chans in sorted(self.lowering.routes.items()):
             for c in chans:
@@ -750,9 +816,14 @@ class ProcsEngine:
             rec = tree["ext"][name]
             ring.restore(np.asarray(rec["buf"])[: int(rec["count"])])
         epoch = int(np.asarray(tree["epoch"]).ravel()[0])
-        for g in range(self.G):
-            self._send(g, ("scatter", tree["workers"][f"g{g}"], epoch))
-        for g in range(self.G):
+        for w, members in enumerate(self._worker_members):
+            if self._is_batch[w]:
+                rows = [tree["workers"][f"g{g}"] for g in members]
+                payload = jax.tree.map(lambda *xs: np.stack(xs), *rows)
+            else:
+                payload = tree["workers"][f"g{members[0]}"]
+            self._send(w, ("scatter", payload, epoch))
+        for g in range(self.NW):
             kind, payload = self._recv(g)
             if kind == "err":
                 self.close()

@@ -119,6 +119,26 @@ class GranuleSpec:
         return out
 
 
+@dataclasses.dataclass
+class BatchSpec:
+    """``nb`` same-signature granules stepped as ONE leading-axis batch
+    (``ProcsEngine(batch_signatures=True)``).
+
+    All member specs share ``PartitionLowering.granule_signature`` — same
+    block shapes, per-tier egress/ingress channel *counts* and ext-port
+    count — so their epoch programs are identical and their per-granule
+    tables stack into (nb, ...) arrays consumed by one vmapped stepper.
+    The rings stay per channel; only the dispatch is batched.
+    """
+
+    members: tuple[int, ...]
+    specs: list[GranuleSpec]
+
+    @property
+    def signature(self) -> str:
+        return self.specs[0].signature
+
+
 def data_ring_name(prefix: str, chan: int) -> str:
     return f"{prefix}d{chan}"
 
@@ -404,6 +424,144 @@ class GranuleSim:
         return {"seconds": time.perf_counter() - t0, "n_functions": n_fns}
 
 
+class BatchedGranuleSim(GranuleSim):
+    """GranuleSim over a signature batch: state leaves carry a leading
+    (nb,) axis and every stepper is the base stepper under ``jax.vmap`` —
+    one dispatch advances all nb granules (ISSUE 6's signature-batched
+    stepping, procs flavor).  Host-facing ext-port ops address one batch
+    row at a time (``row`` becomes a runtime input)."""
+
+    def __init__(self, bspec: BatchSpec):
+        self.bspec = bspec
+        self.nb = len(bspec.specs)
+        self.row_sims = [GranuleSim(s) for s in bspec.specs]
+        super().__init__(bspec.specs[0])
+        # same signature => same per-tier channel counts => same program
+        assert all(rs.program == self.program for rs in self.row_sims), (
+            "signature batch members disagree on epoch program"
+        )
+
+    def init(self, key_data: np.ndarray,
+             group_params: list[list | None] | None = None):
+        jnp = self.jnp
+        states = [
+            self.row_sims[r].init(
+                key_data,
+                group_params[r] if group_params is not None else None,
+            )
+            for r in range(self.nb)
+        ]
+        from ..core.distributed import _dealias_for_donation
+
+        return _dealias_for_donation(
+            self.jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        )
+
+    def _cycles_fn(self, n: int):
+        jax = self.jax
+        row = super()._cycles_fn(1)
+
+        def run(st):
+            return jax.lax.scan(
+                lambda s, _: (jax.vmap(row)(s), None), st, None, length=n
+            )[0]
+
+        return run
+
+    def _drain_fn(self, t: int):
+        return self.jax.vmap(super()._drain_fn(t))
+
+    def _fill_fn(self, t: int):
+        return self.jax.vmap(super()._fill_fn(t))
+
+    def _ingest_fn(self):
+        cap = self.capacity
+
+        def ingest(st, row, lqid, payloads, avail):
+            q = st.queues
+            buf, head, n = qmod.fill_single(
+                q.buf[row, lqid], q.head[row, lqid], q.tail[row, lqid], cap,
+                payloads, limit=avail,
+            )
+            q2 = q.replace(
+                buf=q.buf.at[row, lqid].set(buf),
+                head=q.head.at[row, lqid].set(head),
+            )
+            return st.replace(queues=q2), n
+
+        return ingest
+
+    def _flush_fn(self):
+        cap = self.capacity
+
+        def flush(st, row, lqid, room):
+            q = st.queues
+            pays, tail, cnt = qmod.drain_single(
+                q.buf[row, lqid], q.head[row, lqid], q.tail[row, lqid], cap,
+                cap - 1, limit=room,
+            )
+            q2 = q.replace(tail=q.tail.at[row, lqid].set(tail))
+            return st.replace(queues=q2), pays, cnt
+
+        return flush
+
+    def prebuild(self, template=None) -> dict:
+        jax, jnp = self.jax, self.jnp
+        if template is None:
+            template = self.init(
+                np.asarray(jax.random.key_data(jax.random.key(0)))
+            )
+        t0 = time.perf_counter()
+        n_fns = 0
+        for n in sorted({n for op, n in self.program if op == "C"}):
+            self._compiled[("C", n)] = (
+                jax.jit(self._cycles_fn(n), donate_argnums=0)
+                .lower(template).compile()
+            )
+            n_fns += 1
+        for t, ts in enumerate(self.spec.tiers):
+            if ts.egress_chans:
+                creds = jax.ShapeDtypeStruct(
+                    (self.nb, len(ts.egress_chans)), jnp.int32
+                )
+                self._compiled[("D", t)] = (
+                    jax.jit(self._drain_fn(t), donate_argnums=0)
+                    .lower(template, creds).compile()
+                )
+                n_fns += 1
+            if ts.ingress_chans:
+                n_in = len(ts.ingress_chans)
+                slab = jax.ShapeDtypeStruct(
+                    (self.nb, n_in, ts.E, self.W), self.dtype
+                )
+                cnt = jax.ShapeDtypeStruct((self.nb, n_in), jnp.int32)
+                self._compiled[("F", t)] = (
+                    jax.jit(self._fill_fn(t), donate_argnums=0)
+                    .lower(template, slab, cnt).compile()
+                )
+                n_fns += 1
+        if any(s.ext_ports for s in self.bspec.specs):
+            scal = jax.ShapeDtypeStruct((), jnp.int32)
+            pays = jax.ShapeDtypeStruct(
+                (self.capacity - 1, self.W), self.dtype
+            )
+            self._compiled["ingest"] = (
+                jax.jit(self._ingest_fn(), donate_argnums=0)
+                .lower(template, scal, scal, pays, scal).compile()
+            )
+            self._compiled["flush"] = (
+                jax.jit(self._flush_fn(), donate_argnums=0)
+                .lower(template, scal, scal, scal).compile()
+            )
+            n_fns += 2
+        self._compiled["tick"] = (
+            jax.jit(self._epoch_tick_fn(), donate_argnums=0)
+            .lower(template).compile()
+        )
+        n_fns += 1
+        return {"seconds": time.perf_counter() - t0, "n_functions": n_fns}
+
+
 @pytree_dataclass
 class WorkerState:
     """One granule's device state (no leading device dims) — the squeezed
@@ -454,6 +612,11 @@ class Worker:
         if self.hb is not None:
             self.hb[0] = float(self.epochs_done)
             self.hb[1] = time.time()
+
+    def _probe(self, gi: int, slot: int, row: int):
+        import jax
+
+        return jax.tree.map(lambda x: x[slot], self.state.block_states[gi])
 
     # ------------------------------------------------------------ the epoch
     def _ingest_ext(self) -> None:
@@ -569,9 +732,9 @@ class Worker:
                         self.one_epoch()
                     self.conn.send(("ok", self.epochs_done))
                 elif op == "probe":
-                    _, gi, slot = cmd
-                    out = jax.device_get(jax.tree.map(
-                        lambda x: x[slot], self.state.block_states[gi]
+                    _, gi, slot, *rest = cmd
+                    out = jax.device_get(self._probe(
+                        gi, slot, rest[0] if rest else 0
                     ))
                     self.conn.send(("ok", out))
                 elif op == "view":
@@ -629,6 +792,164 @@ class Worker:
         }
 
 
+class BatchedWorker(Worker):
+    """One process stepping a whole signature batch: a single vmapped
+    dispatch advances all nb granules per program op, while the ring
+    protocol stays per channel — the batch merely refines the free-running
+    schedule (its members run in lockstep, a legal schedule the credit
+    chain already admits), so traffic stays bit-identical to per-granule
+    workers."""
+
+    def __init__(self, bspec: BatchSpec, conn, hb: np.ndarray | None):
+        self.bspec = bspec
+        self.specs = bspec.specs
+        self.spec = bspec.specs[0]  # shared scalars (capacity/W/rings/...)
+        self.conn = conn
+        self.hb = hb
+        self.sim = BatchedGranuleSim(bspec)
+        self.state = None
+        self.epochs_done = 0
+        self.timeout = self.spec.timeout
+        itemsize = np.dtype(self.spec.dtype).itemsize
+        self.rings: dict[tuple[str, int], ShmRing] = {}
+        for s in self.specs:
+            for ts in s.tiers:
+                for c in ts.egress_chans + ts.ingress_chans:
+                    if ("d", c) in self.rings:
+                        continue
+                    self.rings[("d", c)] = ShmRing.attach(
+                        data_ring_name(s.ring_prefix, c),
+                        s.ring_depth + 1,
+                        slab_slot_bytes(ts.E, s.payload_words, itemsize),
+                    )
+                    self.rings[("c", c)] = ShmRing.attach(
+                        credit_ring_name(s.ring_prefix, c),
+                        s.ring_depth + 2, 4,
+                    )
+            for name, chan, lqid, is_in in s.ext_ports:
+                if ("x", chan) not in self.rings:
+                    self.rings[("x", chan)] = ShmRing.attach(
+                        ext_ring_name(s.ring_prefix, chan),
+                        s.capacity, s.payload_words * itemsize,
+                    )
+
+    def _probe(self, gi: int, slot: int, row: int):
+        import jax
+
+        return jax.tree.map(
+            lambda x: x[row, slot], self.state.block_states[gi]
+        )
+
+    def _ingest_ext(self) -> None:
+        jnp = self.sim.jnp
+        for r, s in enumerate(self.specs):
+            for name, chan, lqid, is_in in s.ext_ports:
+                if not is_in:
+                    continue
+                ring = self.rings[("x", chan)]
+                avail = ring.size()
+                if not avail:
+                    continue
+                k = min(avail, s.capacity - 1)
+                pays = ring.peek_packets(k, self.sim.np_dtype, self.sim.W)
+                pad = np.zeros((s.capacity - 1, self.sim.W),
+                               self.sim.np_dtype)
+                pad[:k] = pays
+                self.state, n = self.sim._compiled["ingest"](
+                    self.state, jnp.int32(r), jnp.int32(lqid),
+                    jnp.asarray(pad), jnp.int32(k),
+                )
+                ring.advance(int(n))
+
+    def _flush_ext(self) -> None:
+        jnp = self.sim.jnp
+        for r, s in enumerate(self.specs):
+            for name, chan, lqid, is_in in s.ext_ports:
+                if is_in:
+                    continue
+                ring = self.rings[("x", chan)]
+                room = ring.free()
+                if not room:
+                    continue
+                self.state, pays, cnt = self.sim._compiled["flush"](
+                    self.state, jnp.int32(r), jnp.int32(lqid),
+                    jnp.int32(room),
+                )
+                cnt = int(cnt)
+                if cnt:
+                    landed = ring.push_packets(np.asarray(pays)[:cnt])
+                    assert landed == cnt
+
+    def _exchange(self, t: int) -> None:
+        jnp = self.sim.jnp
+        rows = [s.tiers[t] for s in self.specs]
+        if rows[0].egress_chans:
+            creds = np.array(
+                [[self.rings[("c", c)].pop_u32_wait(self.timeout)
+                  for c in ts.egress_chans] for ts in rows],
+                np.int32,
+            )
+            self.state, slab, cnt = self.sim._compiled[("D", t)](
+                self.state, jnp.asarray(creds)
+            )
+            slab = np.asarray(slab)
+            cnt = np.asarray(cnt)
+            for r, ts in enumerate(rows):
+                for i, c in enumerate(ts.egress_chans):
+                    self.rings[("d", c)].push_slab_wait(
+                        int(cnt[r, i]), slab[r, i], self.timeout
+                    )
+        if rows[0].ingress_chans:
+            n_in = len(rows[0].ingress_chans)
+            nb = len(self.specs)
+            slab_in = np.zeros((nb, n_in, rows[0].E, self.sim.W),
+                               self.sim.np_dtype)
+            cnt_in = np.zeros((nb, n_in), np.int32)
+            for r, ts in enumerate(rows):
+                for i, c in enumerate(ts.ingress_chans):
+                    cnt_in[r, i], slab_in[r, i] = (
+                        self.rings[("d", c)].pop_slab_wait(
+                            (ts.E, self.sim.W), self.sim.np_dtype,
+                            self.timeout,
+                        )
+                    )
+            self.state, free = self.sim._compiled[("F", t)](
+                self.state, jnp.asarray(slab_in), jnp.asarray(cnt_in)
+            )
+            free = np.asarray(free)
+            for r, ts in enumerate(rows):
+                for i, c in enumerate(ts.ingress_chans):
+                    self.rings[("c", c)].push_u32(
+                        int(free[r, i]), self.timeout
+                    )
+
+    def _stats(self) -> list[dict]:
+        import jax
+
+        q = jax.device_get(self.state.queues)
+        size = (q.head - q.tail) % q.capacity  # (nb, n_local)
+        cycles = jax.device_get(self.state.cycle)
+        out = []
+        for r, s in enumerate(self.specs):
+            ports = {}
+            for name, chan, lqid, is_in in s.ext_ports:
+                ports[name] = {
+                    "occupancy": int(size[r, lqid]),
+                    "credit": int(q.capacity - 1 - size[r, lqid]),
+                    "is_input": bool(is_in),
+                }
+            out.append({
+                "granule": s.granule,
+                "cycle": int(cycles[r]),
+                "epoch": self.epochs_done,
+                "ports": ports,
+                "signature": s.signature,
+                "batch_row": r,
+                "batch_size": len(self.specs),
+            })
+        return out
+
+
 def worker_entry(conn, spec_pickle: bytes, worker_index: int,
                  log_path: str | None, cache_dir: str | None,
                  hb_ring_name: str | None) -> None:
@@ -645,9 +966,14 @@ def worker_entry(conn, spec_pickle: bytes, worker_index: int,
         sys.stderr = os.fdopen(2, "w", buffering=1)
     try:
         configure_compile_cache(cache_dir)
-        spec: GranuleSpec = pickle.loads(spec_pickle)
-        print(f"[worker {worker_index}] granule {spec.granule} "
-              f"signature {spec.signature} starting", flush=True)
+        spec = pickle.loads(spec_pickle)
+        if isinstance(spec, BatchSpec):
+            print(f"[worker {worker_index}] granules {spec.members} "
+                  f"signature {spec.signature} starting (batched)",
+                  flush=True)
+        else:
+            print(f"[worker {worker_index}] granule {spec.granule} "
+                  f"signature {spec.signature} starting", flush=True)
         hb = None
         if hb_ring_name:
             from .shmem import attach_shared_memory
@@ -656,7 +982,8 @@ def worker_entry(conn, spec_pickle: bytes, worker_index: int,
             hb = np.frombuffer(
                 hb_shm.buf, np.float64, count=2, offset=worker_index * 16
             )
-        w = Worker(spec, conn, hb)
+        w = (BatchedWorker(spec, conn, hb) if isinstance(spec, BatchSpec)
+             else Worker(spec, conn, hb))
         build = w.sim.prebuild()
         print(f"[worker {worker_index}] prebuilt {build['n_functions']} fns "
               f"in {build['seconds']:.2f}s", flush=True)
