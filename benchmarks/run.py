@@ -29,14 +29,16 @@ ISSUE 3 perf-trajectory numbers: sim-clock Hz for every engine on the
 wafer scenario at equal (K_inner, K_outer)).
 
 Every run also writes a machine-readable summary (default
-``BENCH_PR6.json``): ``{"schema", "git_rev", "smoke", "full", "argv",
+``BENCH_PR7.json``): ``{"schema", "git_rev", "smoke", "full", "argv",
 "failed", "baseline", "suites": {suite: [{"name", "us_per_call",
 "derived"}, ...]}}`` — the same schema in every mode, so the perf
 trajectory can be tracked and diffed PR over PR.  ``baseline`` embeds the
-PR 5 reference rows (git rev + the wafer/backend/engine suites of the
-committed ``BENCH_PR5.json``) so numbers-vs-last-PR stay auditable even
-if the old file disappears — in particular the ``wafer_engine_fused_*``
-rows the ISSUE 6 signature-batched speedups are measured against.
+PR 6 reference rows (git rev + the wafer/backend/engine suites of the
+committed ``BENCH_PR6.json``) so numbers-vs-last-PR stay auditable even
+if the old file disappears (``benchmarks.schema`` enforces this chain on
+every committed ``BENCH_PR{n}.json``) — in particular the
+``wafer_engine_fused_*`` rows the ISSUE 7 overlapped-exchange speedups
+are measured against.
 """
 import argparse
 import inspect
@@ -52,9 +54,9 @@ from . import (
     task_latency, timing_breakdown, wafer_scale,
 )
 
-BENCH_JSON = "BENCH_PR6.json"
+BENCH_JSON = "BENCH_PR7.json"
 SMOKE_JSON = "BENCH_SMOKE.json"
-BASELINE_JSON = "BENCH_PR5.json"  # the committed PR 5 trajectory rows
+BASELINE_JSON = "BENCH_PR6.json"  # the committed PR 6 trajectory rows
 BASELINE_SUITES = ("wafer_scale", "backend_speedup", "engine_speedup")
 SCHEMA = schema_mod.SCHEMA
 
@@ -83,13 +85,14 @@ def _git_rev() -> str:
 
 
 def _baseline() -> dict:
-    """The PR 3/4 reference rows this PR's numbers are measured against.
+    """The previous PR's reference rows this PR's numbers are measured
+    against.
 
-    ``BENCH_PR3.json`` is committed (the PR 3 full-tier trajectory, which
-    PR 4 kept); its wafer/backend/engine suites are embedded here so the
-    speedups stay auditable even if the old file disappears.  On a clone
-    where it is gone, the baseline is recovered from the copy already
-    embedded in the committed ``BENCH_PR5.json``.
+    ``BENCH_PR6.json`` is committed (the PR 6 full-tier trajectory); its
+    wafer/backend/engine suites are embedded here so the speedups stay
+    auditable even if the old file disappears.  On a clone where it is
+    gone, the baseline is recovered from the copy already embedded in the
+    committed ``BENCH_PR7.json``.
     """
     root = os.path.join(os.path.dirname(__file__), "..")
     try:

@@ -19,10 +19,14 @@ Three experiments on the many-core torus (``repro.hw.manycore``):
     round; both face the same machine) with the median per-round ratio as
     a secondary robustness figure in the derived text.
 
-Engine-comparison rows: ``wafer_engine_{graph|fused|batched}_{sched}``
-(wall-us per simulated cycle + sim-clock Hz + ``cyc/s/core``),
-``wafer_fused_speedup_{sched}`` / ``wafer_batched_speedup_{sched}`` (the
-gated best-round ratios).  ``{sched}`` covers the distributed mesh and
+Engine-comparison rows:
+``wafer_engine_{graph|fused|batched|overlap}_{sched}`` (wall-us per
+simulated cycle + sim-clock Hz + ``cyc/s/core``),
+``wafer_fused_speedup_{sched}`` / ``wafer_batched_speedup_{sched}`` /
+``wafer_overlap_speedup_{sched}`` (the gated best-round ratios; the
+``overlap`` contender is the same FusedEngine with ISSUE 7's split
+issue/commit exchange schedule — bit-identical results, transfers in
+flight across loop iterations).  ``{sched}`` covers the distributed mesh and
 single-granule ``hotloop*`` configs that isolate the per-granule fast
 path from fake-device collective overhead.  The ``batched`` contender is
 the SAME FusedEngine with ``batch_axes`` covering the whole mesh — the
@@ -136,7 +140,12 @@ def verify(sim, values):
 for sched, R, C, mesh_shape, mesh_axes, tiles, tiers, n_rounds, n_epochs, batch in {grp_configs}:
     gsim, values = build(GraphEngine, R, C, mesh_shape, mesh_axes, tiles, tiers)
     fsim, _ = build(FusedEngine, R, C, mesh_shape, mesh_axes, tiles, tiers)
-    sims = [('g', gsim), ('f', fsim)]
+    # the ISSUE 7 contender: the SAME FusedEngine with split issue/commit
+    # exchanges, so in-flight slabs cross a loop iteration and the
+    # backend can run them under the next window's compute
+    osim, _ = build(FusedEngine, R, C, mesh_shape, mesh_axes, tiles, tiers,
+                    overlap=True)
+    sims = [('g', gsim), ('f', fsim), ('o', osim)]
     if batch:
         # the signature-batched contender: every mesh axis a batch axis,
         # one stacked dispatch per epoch window (ISSUE 6)
@@ -176,6 +185,11 @@ for sched, R, C, mesh_shape, mesh_axes, tiles, tiers, n_rounds, n_epochs, batch 
     med = ratios[len(ratios) // 2]
     print(f'ENG {sched} {R}x{C} {bg/cyc*1e6:.2f} {bf/cyc*1e6:.2f} '
           f'{bg/bf:.2f} {med:.2f} {cyc/bg:.1f} {cyc/bf:.1f}')
+    bo = min(walls['o'])
+    oratios = sorted(tf / to for tf, to in zip(walls['f'], walls['o']))
+    omed = oratios[len(oratios) // 2]
+    print(f'OVL {sched} {R}x{C} {bf/cyc*1e6:.2f} {bo/cyc*1e6:.2f} '
+          f'{bf/bo:.2f} {omed:.2f} {cyc/bo:.1f}')
     if batch:
         bb = min(walls['b'])
         bratios = sorted(tf / tb for tf, tb in zip(walls['f'], walls['b']))
@@ -323,6 +337,22 @@ def bench(smoke: bool = False, full: bool = False):
 
     bats: dict[str, tuple[int, float, float]] = {}
     for line in out_lines:
+        if line.startswith("OVL"):
+            _, sched, size, uf, uo, best, med, hzo = line.split()
+            uf, uo, best, med = float(uf), float(uo), float(best), float(med)
+            cfg = f"{size} torus, cap 62, {sched}"
+            emit(f"wafer_engine_overlap_{sched}", uo,
+                 f"{hzo} Hz sim clock, {cyc_core(size, uo)} "
+                 f"({cfg}, FusedEngine overlap=True)")
+            # us_per_call carries the RATIO: split issue/commit exchange vs
+            # the serial FusedEngine, best round vs best round over the
+            # same order-rotated rounds — scripts/ci.sh gates on it
+            emit(f"wafer_overlap_speedup_{sched}", best,
+                 f"overlapped exchange {best:.2f}x the serial FusedEngine "
+                 f"sim clock at equal (K_inner, K_outer) — best-round "
+                 f"ratio over order-rotated rounds (median per-round "
+                 f"{med:.2f}x; {cfg})")
+            continue
         if line.startswith("BAT"):
             _, sched, size, nb, uf, ub, best, med, hzb = line.split()
             uf, ub, best, med = float(uf), float(ub), float(best), float(med)

@@ -59,11 +59,16 @@ from repro.hw.manycore import (  # noqa: E402
 
 def build_engine(R: int, C: int, k_inner: int, k_outer: int,
                  capacity: int = WAFER.queue_capacity,
-                 engine: str = "graph") -> tuple[GraphEngine, np.ndarray]:
+                 engine: str = "graph", batch_signatures: bool = False,
+                 overlap="auto") -> tuple[GraphEngine, np.ndarray]:
     """Torus fabric on a (2 pods) x (2x2 granules/pod) tiered mesh — or,
     with ``engine="procs"``, on a (2 pods) x (2 workers/pod) fleet of
     free-running OS processes over shared-memory queues (no mesh at all:
-    the paper's actual deployment model, DESIGN.md §Runtime)."""
+    the paper's actual deployment model, DESIGN.md §Runtime).
+    ``batch_signatures`` stacks same-signature procs workers into one
+    vmapped dispatch per epoch; ``overlap=True`` splits every exchange
+    into issue/commit halves (send-early/receive-late, DESIGN.md §Perf) —
+    bit-identical results either way."""
     values = (np.arange(R * C, dtype=np.int64) % 97 + 1).astype(np.float32)
     cell = ManycoreCell(R, C)
     graph = ChannelGraph.torus(
@@ -80,7 +85,9 @@ def build_engine(R: int, C: int, k_inner: int, k_outer: int,
             (Tier(axes=("pod",), K=k_outer), Tier(axes=("g",), K=k_inner)),
             {"pod": 2, "g": 2},
         )
-        return ProcsEngine(graph, ptree, timeout=120.0), values
+        return ProcsEngine(graph, ptree, timeout=120.0,
+                           batch_signatures=batch_signatures,
+                           overlap=overlap), values
     mesh = make_mesh((2, 2, 2), ("pod", "gr", "gc"))
     part = tiered_grid_partition(R, C, [(2, 1), (2, 2)])
     if engine == "fused":
@@ -90,6 +97,7 @@ def build_engine(R: int, C: int, k_inner: int, k_outer: int,
     eng = Engine(
         graph, part, mesh,
         tiers=[(("pod",), k_outer), ((("gr", "gc")), k_inner)],
+        overlap=overlap,
     )
     return eng, values
 
@@ -105,13 +113,22 @@ def main() -> None:
                     help="queue interpreter, the fused-epoch fast path, or "
                          "the free-running multiprocess runtime (identical "
                          "results; see DESIGN.md §Perf / §Runtime)")
+    ap.add_argument("--batch-signatures", action="store_true",
+                    help="procs only: stack same-signature workers into one "
+                         "vmapped dispatch per epoch (ISSUE 6)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="split every tier exchange into issue/commit halves "
+                         "(send-early/receive-late; bit-identical results, "
+                         "transfers hidden under the next window's compute)")
     args = ap.parse_args()
     R, C = args.rows, args.cols
 
     print(f"wafer-scale fabric: {R}x{C} torus = {R * C} cores, "
           f"{len(jax.devices())} devices, engine={args.engine}")
     eng, values = build_engine(R, C, args.k_inner, args.k_outer,
-                               engine=args.engine)
+                               engine=args.engine,
+                               batch_signatures=args.batch_signatures,
+                               overlap=True if args.overlap else "auto")
     periods = eng.periods
     print(f"  partition: {eng.ptree.summary()}")
     if hasattr(eng, "classes"):

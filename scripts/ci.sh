@@ -19,7 +19,12 @@
 #   * FusedEngine >= GraphEngine on the smoke wafer hot-loop config, and
 #     within collective-noise tolerance on the distributed smoke config;
 #   * signature-batched stepping >= the unbatched FusedEngine on the smoke
-#     wafer, and the cycles/s/core metric is recorded (ISSUE 6).
+#     wafer, and the cycles/s/core metric is recorded (ISSUE 6);
+#   * the split issue/commit (overlapped) exchange stays within noise of
+#     the serial schedule on the smoke wafer, and the receive-late procs
+#     fleet never waits longer than the strict serial fleet (ISSUE 7; the
+#     >=1x overlap win, the procs wait-fraction drop, and the <=15%
+#     perfmodel overlap fit are gated on the committed BENCH_PR7.json).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -50,7 +55,12 @@ if [[ "$stage" == "all" || "$stage" == "smoke" ]]; then
     python -m benchmarks.run --smoke --json BENCH_SMOKE.json
     echo "=== BENCH json schema + perf gates (benchmarks.schema) ==="
     python -m benchmarks.schema BENCH_SMOKE.json --gates smoke
-    python -m benchmarks.schema BENCH_PR6.json --gates trajectory
+    python -m benchmarks.schema BENCH_PR7.json --gates trajectory
+    # every committed trajectory file must validate AND embed its
+    # predecessor's rows as baseline (the PR-over-PR audit chain)
+    for f in BENCH_PR*.json; do
+        python -m benchmarks.schema "$f"
+    done
 fi
 
 if [[ "$stage" == "all" || "$stage" == "procs" ]]; then
@@ -64,6 +74,11 @@ if [[ "$stage" == "all" || "$stage" == "procs" ]]; then
     echo "=== procs runtime: 4-worker tiered wafer example ==="
     timeout 300 python examples/wafer_scale.py --rows 8 --cols 8 \
         --k-inner 4 --engine procs
+    echo "=== procs runtime: batched fleet, overlapped exchange ==="
+    # signature-batched workers + the ISSUE 7 split issue/commit schedule:
+    # one stacked dispatch per worker epoch, receive-late shm-ring pops
+    timeout 300 python examples/wafer_scale.py --rows 8 --cols 8 \
+        --k-inner 4 --engine procs --batch-signatures --overlap
 fi
 
 if [[ "$stage" == "all" || "$stage" == "examples" ]]; then

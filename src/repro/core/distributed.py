@@ -92,6 +92,7 @@ from .graph import (
     lower_partition, normalize_partition, normalize_tiers,
 )
 from .struct import pytree_dataclass, static_field
+from ..kernels import granule_step
 
 PyTree = Any
 
@@ -433,6 +434,19 @@ class GraphEngine:
                should share ``granule_signature`` (one traced stepper);
                the engine works regardless (tables are runtime inputs) but
                the speedup argument is per-signature.
+    overlap:   overlapped exchange (ISSUE 7).  When on, every tier exchange
+               splits into an *issue* phase (drain + start the transfer, at
+               the end of an epoch window) and a *commit* phase (finish the
+               transfer + fill, at the start of the NEXT window), so XLA's
+               latency-hiding scheduler can overlap the collective with the
+               intervening compute.  Bit-identical to the serial schedule
+               by construction: a slab drained at the end of window ``w``
+               is only consumed from the ingress queue at the start of
+               window ``w+1``, and issue/commit touch disjoint queue rows
+               (egress vs ingress) and per-tier credit windows.  "auto"
+               (default off) — the ``REPRO_OVERLAP`` env var overrides
+               auto, an explicit bool overrides both (the ``resolve_mode``
+               precedence from PR 6).
     """
 
     engine_kind = "graph"
@@ -446,9 +460,12 @@ class GraphEngine:
         axes: Sequence[str] | None = None,
         tiers: Sequence | None = None,
         batch_axes=None,
+        overlap: Any = "auto",
     ):
         self.graph = graph
         self.mesh = mesh
+        # resolved at build time (env read once): explicit arg > env > auto
+        self.overlap = granule_step.resolve_overlap(overlap)
         if batch_axes is None:
             bmap: dict[str, int | None] = {}
         elif isinstance(batch_axes, dict):
@@ -817,6 +834,122 @@ class GraphEngine:
             return jnp.zeros_like(x)
         return jax.lax.ppermute(x, self.axes, list(perm))
 
+    def _class_shift(self, x: jax.Array, t: int, rev: bool = False):
+        """Move the tier-t slab columns class by class — one ``ppermute``
+        per class (each a partial permutation of granules); ``rev`` runs
+        the reverse permutations (the credit return)."""
+        parts = []
+        for cl in self.tier_classes[t]:
+            perm = tuple((d, s) for s, d in cl.perm) if rev else cl.perm
+            parts.append(self._pshift(x[cl.col0:cl.col0 + cl.cmax], perm))
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+
+    def _bat_move(self, x, tbl, t: int, rev: bool = False):
+        """The batched slab move: within-device share of every class is a
+        ``bat_fwd``/``bat_rev`` batch-row gather instead of a collective;
+        only classes whose ``real_perm`` is non-empty pay a ppermute (none
+        do when every granule axis is batched).  Garbage rows from the
+        0-padded gather tables are killed by the same send/recv masks that
+        already guard slab padding."""
+        parts = []
+        for cl in self.tier_classes[t]:
+            w = x[:, cl.col0:cl.col0 + cl.cmax]
+            g = tbl[:, cl.col0:cl.col0 + cl.cmax]
+            g = g.reshape(g.shape + (1,) * (w.ndim - 2))
+            part = jnp.take_along_axis(w, g, axis=0)
+            perm = cl.real_perm
+            if perm:
+                if rev:
+                    perm = tuple((d, s) for s, d in perm)
+                part = jax.lax.ppermute(part, self.real_axes, list(perm))
+            parts.append(part)
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 1)
+
+    def _exchange_issue(self, st: GraphState, t: int):
+        """Tier t's exchange, ISSUE half: drain every egress queue of the
+        tier (credit-bounded) and start the transfer — the forward
+        ``ppermute`` per class.  Returns ``(st, pending)`` where pending
+        is the in-flight ``(slab_in, cnt_in)`` pair (``None`` when the
+        tier has no exchange classes).  Reads egress queues + this tier's
+        credit window only, so it commutes bit-exactly with other tiers'
+        commits (disjoint queue rows, per-tier credits)."""
+        if self._batched:
+            return self._exchange_issue_batched(st, t)
+        cls_t = self.tier_classes[t]
+        if not cls_t:
+            return st, None
+        q = st.queues
+        tb = st.tables
+        sidx, smask = tb.send_idx[t], tb.send_mask[t]
+        # drain all egress queues of the tier, bounded by receiver credit
+        sub = qmod.QueueArray(
+            buf=q.buf[sidx], head=q.head[sidx], tail=q.tail[sidx],
+            capacity=q.capacity,
+        )
+        limit = jnp.where(smask, st.credits[t], 0)
+        sub2, slab, cnt = qmod.drain(sub, self.E_tiers[t], limit=limit)
+        q = q.replace(tail=q.tail.at[sidx].set(sub2.tail))
+        slab_in = self._class_shift(slab, t)
+        cnt_in = jnp.where(tb.recv_mask[t], self._class_shift(cnt, t), 0)
+        return st.replace(queues=q), (slab_in, cnt_in)
+
+    def _exchange_commit(self, st: GraphState, t: int, pending) -> GraphState:
+        """Tier t's exchange, COMMIT half: land the in-flight slab in the
+        ingress queues (ONE bulk ``fill``) and return fresh credits to the
+        senders on the reverse permutations.  Writes ingress queues + this
+        tier's credit window only."""
+        if self._batched:
+            return self._exchange_commit_batched(st, t, pending)
+        if pending is None:
+            return st
+        slab_in, cnt_in = pending
+        tb = st.tables
+        ridx, rmask = tb.recv_idx[t], tb.recv_mask[t]
+        q = qmod_fill_at(st.queues, ridx, slab_in, cnt_in)
+        # receivers advertise new free space; returns to the senders on the
+        # reverse permutations
+        cred = jnp.where(rmask, jnp.take(qmod.free(q), ridx), 0)
+        new_credits = list(st.credits)
+        new_credits[t] = self._class_shift(cred, t, rev=True)
+        return st.replace(queues=q, credits=tuple(new_credits))
+
+    def _exchange_issue_batched(self, st: GraphState, t: int):
+        """ISSUE half with the granules stacked on a (B,) batch axis —
+        credit-bounded ``stage_drain`` per row + the forward ``bat_fwd``
+        slab move (collective only for classes with a real shift)."""
+        cls_t = self.tier_classes[t]
+        if not cls_t:
+            return st, None
+        tb = st.tables
+        sidx, smask = tb.send_idx[t], tb.send_mask[t]  # (B, S_t)
+        limit = jnp.where(smask, st.credits[t], 0)
+        q, slab, cnt = jax.vmap(
+            lambda qb, si, lim: qmod.stage_drain(
+                qb, si, self.E_tiers[t], limit=lim
+            )
+        )(st.queues, sidx, limit)
+        slab_in = self._bat_move(slab, tb.bat_fwd[t], t)
+        cnt_in = jnp.where(
+            tb.recv_mask[t], self._bat_move(cnt, tb.bat_fwd[t], t), 0
+        )
+        return st.replace(queues=q), (slab_in, cnt_in)
+
+    def _exchange_commit_batched(self, st: GraphState, t: int, pending):
+        """COMMIT half on the batch layout: ``stage_fill`` per row + the
+        ``bat_rev`` credit return."""
+        if pending is None:
+            return st
+        slab_in, cnt_in = pending
+        tb = st.tables
+        ridx, rmask = tb.recv_idx[t], tb.recv_mask[t]
+        q = jax.vmap(qmod.stage_fill)(st.queues, ridx, slab_in, cnt_in)
+        cred = jnp.where(
+            rmask, jnp.take_along_axis(qmod.free(q), ridx, axis=1), 0
+        )
+        new_credits = list(st.credits)
+        new_credits[t] = self._bat_move(cred, tb.bat_rev[t], t, rev=True)
+        return st.replace(queues=q, credits=tuple(new_credits))
+
     def _exchange_tier(self, st: GraphState, t: int) -> GraphState:
         """Run tier t's batched exchange (runs inside shard_map).
 
@@ -829,90 +962,13 @@ class GraphEngine:
         classes, so this is bit-identical to the historical per-class
         drain/permute/fill chain — with ~1/#classes of the gather/scatter
         traffic.  Other tiers' queues and credit windows are untouched.
+
+        The serial schedule is literally commit∘issue — the overlapped
+        schedule (``overlap=True``) runs the same two halves with compute
+        in between, which is why the two are bit-identical.
         """
-        if self._batched:
-            return self._exchange_tier_batched(st, t)
-        cls_t = self.tier_classes[t]
-        if not cls_t:
-            return st
-        q = st.queues
-        tb = st.tables
-        sidx, smask = tb.send_idx[t], tb.send_mask[t]
-        ridx, rmask = tb.recv_idx[t], tb.recv_mask[t]
-        # drain all egress queues of the tier, bounded by receiver credit
-        sub = qmod.QueueArray(
-            buf=q.buf[sidx], head=q.head[sidx], tail=q.tail[sidx],
-            capacity=q.capacity,
-        )
-        limit = jnp.where(smask, st.credits[t], 0)
-        sub2, slab, cnt = qmod.drain(sub, self.E_tiers[t], limit=limit)
-        q = q.replace(tail=q.tail.at[sidx].set(sub2.tail))
-        # one hop per class (each a partial permutation of granules)
-        def per_class(x, rev: bool = False):
-            parts = []
-            for cl in cls_t:
-                perm = tuple((d, s) for s, d in cl.perm) if rev else cl.perm
-                parts.append(self._pshift(x[cl.col0:cl.col0 + cl.cmax], perm))
-            return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
-
-        slab_in = per_class(slab)
-        cnt_in = jnp.where(rmask, per_class(cnt), 0)
-        q = qmod_fill_at(q, ridx, slab_in, cnt_in)
-        # receivers advertise new free space; returns to the senders on the
-        # reverse permutations
-        cred = jnp.where(rmask, jnp.take(qmod.free(q), ridx), 0)
-        new_credits = list(st.credits)
-        new_credits[t] = per_class(cred, rev=True)
-        return st.replace(queues=q, credits=tuple(new_credits))
-
-    def _exchange_tier_batched(self, st: GraphState, t: int) -> GraphState:
-        """Tier t's exchange with the granules stacked on a (B,) batch axis.
-
-        Same drain -> move -> fill -> credit-return dance as
-        ``_exchange_tier``, but the within-device share of every class is a
-        ``bat_fwd``/``bat_rev`` batch-row gather instead of a collective;
-        only classes whose ``real_perm`` is non-empty pay a ppermute (none
-        do when every granule axis is batched).  Garbage rows from the
-        0-padded gather tables are killed by the same send/recv masks that
-        already guard slab padding."""
-        cls_t = self.tier_classes[t]
-        if not cls_t:
-            return st
-        q = st.queues
-        tb = st.tables
-        sidx, smask = tb.send_idx[t], tb.send_mask[t]  # (B, S_t)
-        ridx, rmask = tb.recv_idx[t], tb.recv_mask[t]
-        limit = jnp.where(smask, st.credits[t], 0)
-        q, slab, cnt = jax.vmap(
-            lambda qb, si, lim: qmod.stage_drain(
-                qb, si, self.E_tiers[t], limit=lim
-            )
-        )(q, sidx, limit)
-
-        def move(x, tbl, rev: bool = False):
-            parts = []
-            for cl in cls_t:
-                w = x[:, cl.col0:cl.col0 + cl.cmax]
-                g = tbl[:, cl.col0:cl.col0 + cl.cmax]
-                g = g.reshape(g.shape + (1,) * (w.ndim - 2))
-                part = jnp.take_along_axis(w, g, axis=0)
-                perm = cl.real_perm
-                if perm:
-                    if rev:
-                        perm = tuple((d, s) for s, d in perm)
-                    part = jax.lax.ppermute(part, self.real_axes, list(perm))
-                parts.append(part)
-            return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 1)
-
-        slab_in = move(slab, tb.bat_fwd[t])
-        cnt_in = jnp.where(rmask, move(cnt, tb.bat_fwd[t]), 0)
-        q = jax.vmap(qmod.stage_fill)(q, ridx, slab_in, cnt_in)
-        cred = jnp.where(
-            rmask, jnp.take_along_axis(qmod.free(q), ridx, axis=1), 0
-        )
-        new_credits = list(st.credits)
-        new_credits[t] = move(cred, tb.bat_rev[t], rev=True)
-        return st.replace(queues=q, credits=tuple(new_credits))
+        st, pending = self._exchange_issue(st, t)
+        return self._exchange_commit(st, t, pending)
 
     def _inner_cycles(self, st: GraphState, K: int) -> GraphState:
         """K granule-local cycles — the innermost hot loop.  ``FusedEngine``
@@ -938,10 +994,77 @@ class GraphEngine:
             st = jax.lax.scan(body, st, None, length=self.tiers[t].K)[0]
         return self._exchange_tier(st, t)
 
+    # --------------------------------------------- overlapped (split) schedule
+    def _pend_tiers(self, t0: int) -> tuple:
+        """Static tier order of the pending chain ``_round_split(st, t0)``
+        returns: the suffix of tiers whose exchanges fire *at the end* of a
+        tier-t0 round, deepest first — issued there, committed by the
+        caller at the start of its next window (``_commit_chain``)."""
+        if t0 >= self._fold_from:
+            return ()
+        inner = () if t0 == len(self.tiers) - 1 else self._pend_tiers(t0 + 1)
+        return inner + ((t0,) if self.tier_classes[t0] else ())
+
+    def _commit_chain(self, st: GraphState, t0: int, pend: tuple) -> GraphState:
+        """Commit a pending chain from ``_round_split(·, t0)`` — fills land
+        deepest tier first, the same order the serial schedule fills them
+        (they are disjoint across tiers either way)."""
+        tiers = self._pend_tiers(t0)
+        assert len(tiers) == len(pend), (tiers, len(pend))
+        for t, p in zip(tiers, pend):
+            st = self._exchange_commit(st, t, p)
+        return st
+
+    def _round_split(self, st: GraphState, t: int):
+        """One round of tier t with *split* exchanges: every sub-round's
+        boundary transfers are ISSUED at its window end and COMMITTED at
+        the start of the next sub-round's window (inside the scan body:
+        commit-previous, then compute — so the in-flight data crosses a
+        loop iteration and XLA's scheduler can overlap the transfer with
+        the next window's compute).  The final boundary's chain — tier t's
+        own exchange stacked on the inner tiers that fired with it — is
+        returned *pending* for the caller to commit at ITS next window.
+
+        Bit-identity with ``_tier_round``: issue reads egress queues +
+        credits[t] only, commit writes ingress queues + credits[t] only,
+        and those row sets are disjoint across all tiers — so hoisting
+        commits past later issues reorders nothing; and every commit still
+        precedes the first cycle that could consume the filled packets
+        (the start of window ``w+1`` for a slab drained at the end of
+        ``w``), which is exactly where the serial schedule fills them
+        relative to the dataflow."""
+        if t >= self._fold_from:
+            return self._inner_cycles(st, int(np.prod(self.K_tiers[t:]))), ()
+        if t == len(self.tiers) - 1:
+            st, pend = self._inner_cycles(st, self.tiers[t].K), ()
+        else:
+            st, pend = self._round_split(st, t + 1)
+            if self.tiers[t].K > 1:
+
+                def body(carry, _):
+                    s, p = carry
+                    s = self._commit_chain(s, t + 1, p)
+                    return self._round_split(s, t + 1), None
+
+                (st, pend), _ = jax.lax.scan(
+                    body, (st, pend), None, length=self.tiers[t].K - 1
+                )
+        if self.tier_classes[t]:
+            st, p_t = self._exchange_issue(st, t)
+            pend = pend + (p_t,)
+        return st, pend
+
     def _epoch(self, st: GraphState) -> GraphState:
         """One outermost round = ``cycles_per_epoch`` local cycles, every
-        tier exchanged at its own cadence (runs inside shard_map)."""
-        st = self._tier_round(st, 0)
+        tier exchanged at its own cadence (runs inside shard_map).  Under
+        ``overlap`` the split schedule runs instead; the last boundary's
+        chain commits before returning (epoch boundaries are host-I/O
+        points, so no transfer may stay in flight across them)."""
+        if self.overlap:
+            st, pend = self._round_split(st, 0)
+            st = self._commit_chain(st, 0, pend)
+        else:
+            st = self._tier_round(st, 0)
         return st.replace(epoch=st.epoch + 1)
 
     # ------------------------------------------------------------------ run

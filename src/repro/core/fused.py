@@ -142,12 +142,13 @@ class FusedEngine(GraphEngine):
         fuse: str = "auto",
         pallas_interpret: Any = "auto",
         batch_axes=None,
+        overlap: Any = "auto",
     ):
         self.fuse = fuse
         self.pallas_interpret = pallas_interpret
         super().__init__(
             graph, partition, mesh, K=K, axes=axes, tiers=tiers,
-            batch_axes=batch_axes,
+            batch_axes=batch_axes, overlap=overlap,
         )
         self._build_fused_tables()
         # First tier index from which EVERY exchange is on-device (batched
@@ -526,12 +527,18 @@ class FusedEngine(GraphEngine):
             lambda x: x.reshape((self.B * self.n_q,) + x.shape[2:]), q
         )
 
-    def _exchange_tier_batched(self, st: FusedState, t: int) -> FusedState:
-        """Tier exchange on the flat layout: reshape the queue block to the
-        (B, n_q) batch layout, run the inherited slab exchange, flatten
-        back — two free reshapes per tier boundary."""
-        st2 = super()._exchange_tier_batched(
+    def _exchange_issue_batched(self, st: FusedState, t: int):
+        """Exchange halves on the flat layout: reshape the queue block to
+        the (B, n_q) batch layout, run the inherited slab staging, flatten
+        back — free reshapes at tier boundaries only."""
+        st2, pending = super()._exchange_issue_batched(
             st.replace(queues=self._q_batch_view(st.queues)), t
+        )
+        return st2.replace(queues=self._q_flat_view(st2.queues)), pending
+
+    def _exchange_commit_batched(self, st: FusedState, t: int, pending):
+        st2 = super()._exchange_commit_batched(
+            st.replace(queues=self._q_batch_view(st.queues)), t, pending
         )
         return st2.replace(queues=self._q_flat_view(st2.queues))
 
@@ -613,49 +620,55 @@ class FusedEngine(GraphEngine):
             credits=credits,
         )
 
-    def _rows_exchange(self, rows: tuple, credits, t: int, tb) -> tuple:
-        """Tier t's on-device exchange on per-row queues: credit-bounded
+    def _rows_exchange_issue(self, rows: tuple, credits, t: int, tb):
+        """ISSUE half of the per-row on-device exchange: credit-bounded
         ``stage_drain`` per row, one tiny (B, S_t, E_t, W) slab moved by
-        the ``bat_fwd`` batch-row gather, ``stage_fill`` per row, and the
-        ``bat_rev`` credit return.  Only the staged slab is ever
+        the ``bat_fwd`` batch-row gather.  Only the staged slab is ever
         materialized across rows — the queue buffers stay per-row."""
         sidx, smask = tb.send_idx[t], tb.send_mask[t]  # (B, S_t)
-        ridx, rmask = tb.recv_idx[t], tb.recv_mask[t]
-        bfw, brv = tb.bat_fwd[t], tb.bat_rev[t]
+        rmask = tb.recv_mask[t]
+        bfw = tb.bat_fwd[t]
         limit = jnp.where(smask, credits[t], 0)
-        qs, slabs, cnts = [], [], []
+        new_rows, slabs, cnts = [], [], []
         for r in range(self.B):
             q2, slab, cnt = qmod.stage_drain(
                 rows[r][2], sidx[r], self.E_tiers[t], limit=limit[r]
             )
-            qs.append(q2)
+            rv, rb, _, bs, cyc = rows[r]
+            new_rows.append((rv, rb, q2, bs, cyc))
             slabs.append(slab)
             cnts.append(cnt)
         slab = jnp.stack(slabs)  # (B, S_t, E_t, W)
         cnt = jnp.stack(cnts)    # (B, S_t)
+        slab_in = self._bat_move(slab, bfw, t)
+        cnt_in = jnp.where(rmask, self._bat_move(cnt, bfw, t), 0)
+        return tuple(new_rows), (slab_in, cnt_in)
 
-        def move(x, tbl):
-            parts = []
-            for cl in self.tier_classes[t]:
-                w = x[:, cl.col0:cl.col0 + cl.cmax]
-                g = tbl[:, cl.col0:cl.col0 + cl.cmax]
-                g = g.reshape(g.shape + (1,) * (w.ndim - 2))
-                parts.append(jnp.take_along_axis(w, g, axis=0))
-            return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 1)
-
-        slab_in = move(slab, bfw)
-        cnt_in = jnp.where(rmask, move(cnt, bfw), 0)
+    def _rows_exchange_commit(self, rows: tuple, credits, t: int, tb,
+                              pending):
+        """COMMIT half: ``stage_fill`` per row + the ``bat_rev`` credit
+        return."""
+        ridx, rmask = tb.recv_idx[t], tb.recv_mask[t]
+        slab_in, cnt_in = pending
         new_rows, frees = [], []
         for r in range(self.B):
-            q3 = qmod.stage_fill(qs[r], ridx[r], slab_in[r], cnt_in[r])
+            q3 = qmod.stage_fill(rows[r][2], ridx[r], slab_in[r], cnt_in[r])
             rv, rb, _, bs, cyc = rows[r]
             new_rows.append((rv, rb, q3, bs, cyc))
             frees.append(qmod.free(q3))
         cred = jnp.where(
             rmask, jnp.take_along_axis(jnp.stack(frees), ridx, axis=1), 0
         )
-        credits = credits[:t] + (move(cred, brv),) + credits[t + 1:]
+        credits = (credits[:t] + (self._bat_move(cred, tb.bat_rev[t], t),)
+                   + credits[t + 1:])
         return tuple(new_rows), credits
+
+    def _rows_exchange(self, rows: tuple, credits, t: int, tb) -> tuple:
+        """Tier t's on-device exchange on per-row queues — literally
+        commit∘issue, so the serial and overlapped schedules share every
+        instruction and differ only in ordering."""
+        rows, pending = self._rows_exchange_issue(rows, credits, t, tb)
+        return self._rows_exchange_commit(rows, credits, t, tb, pending)
 
     def _local_cycle(self, st: FusedState) -> FusedState:
         """One granule-local cycle on registers + boundary queues."""
@@ -796,7 +809,11 @@ class FusedEngine(GraphEngine):
         """The ("C", n)/("X", t) op list realizing tiers [t0:] — the same
         recursion as ``_tier_round``, flattened so the whole span executes
         as ONE ``epoch_program`` body (adjacent cycle blocks merged,
-        exchange-free tiers elided)."""
+        exchange-free tiers elided).  Under ``overlap`` every boundary's
+        run of ("X", t) ops is rewritten to all-issues-then-all-commits
+        (``granule_step.overlap_program``) so transfers are in flight
+        across the sync point — inside the pallas lowering that is the
+        double-buffered DMA staging."""
         if t0 not in self._program_cache:
 
             def prog(t):
@@ -816,7 +833,10 @@ class FusedEngine(GraphEngine):
                     merged[-1] = ("C", merged[-1][1] + arg)
                 else:
                     merged.append((op, arg))
-            self._program_cache[t0] = tuple(merged)
+            program = tuple(merged)
+            if self.overlap:
+                program = granule_step.overlap_program(program)
+            self._program_cache[t0] = program
         return self._program_cache[t0]
 
     def _resident_cycle(self, carry, consts):
@@ -824,18 +844,18 @@ class FusedEngine(GraphEngine):
         the per-tier credit tuple, which only exchanges touch)."""
         return self._cycle_body(carry[:5], consts[0]) + (carry[5],)
 
-    def _resident_exchange(self, carry, t: int, consts):
-        """Tier t's exchange *inside* the resident body — on-device only.
+    def _resident_exchange_issue(self, carry, t: int, consts):
+        """ISSUE half of tier t's exchange *inside* the resident body.
 
         Every class of a resident tier has an empty ``real_perm`` (that is
-        what admitted it), so the whole exchange is slab staging on the
-        local fused queue rows: credit-bounded ``stage_drain`` into the
-        (B, S_t, E_t, W) slab, ``bat_fwd`` batch-row gather,
-        ``stage_fill``, and the ``bat_rev`` credit return.  Under
-        ``fuse="pallas"`` this runs between the kernel's in-VMEM epoch
-        loops — the slab never leaves the kernel."""
+        what admitted it), so the issue is slab staging on the local fused
+        queue rows: credit-bounded ``stage_drain`` into the
+        (B, S_t, E_t, W) slab + the ``bat_fwd`` batch-row gather.  Under
+        ``fuse="pallas"`` the returned pending pair is what the kernel
+        parks in the double-buffered VMEM staging slots (async DMA started
+        at issue, waited at commit)."""
         reg_val, reg_v, q, block_states, cycle, credits = carry
-        sidx, smask, ridx, rmask, bfw, brv = (x[t] for x in consts[1])
+        sidx, smask, _, rmask, bfw, _ = (x[t] for x in consts[1])
         q = self._q_batch_view(q)  # flat rows -> (B, n_q) for the slab move
         limit = jnp.where(smask, credits[t], 0)
         q, slab, cnt = jax.vmap(
@@ -843,33 +863,44 @@ class FusedEngine(GraphEngine):
                 qb, si, self.E_tiers[t], limit=lim
             )
         )(q, sidx, limit)
+        slab_in = self._bat_move(slab, bfw, t)
+        cnt_in = jnp.where(rmask, self._bat_move(cnt, bfw, t), 0)
+        carry = (reg_val, reg_v, self._q_flat_view(q), block_states, cycle,
+                 credits)
+        return carry, (slab_in, cnt_in)
 
-        def move(x, tbl):
-            parts = []
-            for cl in self.tier_classes[t]:
-                w = x[:, cl.col0:cl.col0 + cl.cmax]
-                g = tbl[:, cl.col0:cl.col0 + cl.cmax]
-                g = g.reshape(g.shape + (1,) * (w.ndim - 2))
-                parts.append(jnp.take_along_axis(w, g, axis=0))
-            return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 1)
-
-        slab_in = move(slab, bfw)
-        cnt_in = jnp.where(rmask, move(cnt, bfw), 0)
+    def _resident_exchange_commit(self, carry, t: int, pending, consts):
+        """COMMIT half: ``stage_fill`` the in-flight slab + the ``bat_rev``
+        credit return."""
+        reg_val, reg_v, q, block_states, cycle, credits = carry
+        _, _, ridx, rmask, _, brv = (x[t] for x in consts[1])
+        slab_in, cnt_in = pending
+        q = self._q_batch_view(q)
         q = jax.vmap(qmod.stage_fill)(q, ridx, slab_in, cnt_in)
         cred = jnp.where(
             rmask, jnp.take_along_axis(qmod.free(q), ridx, axis=1), 0
         )
-        credits = credits[:t] + (move(cred, brv),) + credits[t + 1:]
+        credits = credits[:t] + (self._bat_move(cred, brv, t),) + credits[t + 1:]
         return (reg_val, reg_v, self._q_flat_view(q), block_states, cycle,
                 credits)
+
+    def _resident_exchange(self, carry, t: int, consts):
+        """Tier t's serial exchange inside the resident body — commit∘issue
+        (see the halves above); under ``fuse="pallas"`` this runs between
+        the kernel's in-VMEM epoch loops, the slab never leaves the
+        kernel."""
+        carry, pending = self._resident_exchange_issue(carry, t, consts)
+        return self._resident_exchange_commit(carry, t, pending, consts)
 
     def _rows_program(self, rows: tuple, credits, tb, t0: int) -> tuple:
         """Walk tiers [t0:] on the per-row carries: each ("C", n) op runs
         every row's n-cycle window as its own ``epoch_loop`` over that
         row's private buffers, each ("X", t) op is ``_rows_exchange``'s
-        slab staging.  Rows are independent between exchanges, so running
+        slab staging (split into the ("XI", t)/("XC", t) halves under
+        ``overlap``).  Rows are independent between exchanges, so running
         row r's whole window before row r+1 is legal — and keeps one
         granule's working set cache-resident per window."""
+        pending: dict[int, tuple] = {}
         for op, arg in self._resident_program(t0):
             if op == "C":
                 rows = tuple(
@@ -880,8 +911,17 @@ class FusedEngine(GraphEngine):
                     )
                     for r, c_r in enumerate(rows)
                 )
+            elif op == "XI":
+                rows, pending[arg] = self._rows_exchange_issue(
+                    rows, credits, arg, tb
+                )
+            elif op == "XC":
+                rows, credits = self._rows_exchange_commit(
+                    rows, credits, arg, tb, pending.pop(arg)
+                )
             else:
                 rows, credits = self._rows_exchange(rows, credits, arg, tb)
+        assert not pending, f"uncommitted exchanges: {sorted(pending)}"
         return rows, credits
 
     def run_epochs(
@@ -952,13 +992,33 @@ class FusedEngine(GraphEngine):
         )
         out = granule_step.epoch_program(
             self._resident_cycle, carry, self._resident_program(t),
-            exchange_fn=self._resident_exchange, consts=consts,
+            exchange_fn=self._resident_exchange,
+            issue_fn=self._resident_exchange_issue,
+            commit_fn=self._resident_exchange_commit,
+            consts=consts,
             mode=self.fuse, interpret=self.pallas_interpret,
         )
         return st.replace(
             reg_val=out[0], reg_v=out[1], queues=out[2],
             block_states=out[3], cycle=out[4], credits=out[5],
         )
+
+    def _pend_tiers(self, t0: int) -> tuple:
+        """Resident spans commit their own split exchanges inside the
+        ``epoch_program`` (pallas pendings live in kernel-local staging
+        buffers and cannot cross the kernel boundary), so they contribute
+        nothing to the caller's pending chain."""
+        if self._batched and t0 >= self._resident_from:
+            return ()
+        return super()._pend_tiers(t0)
+
+    def _round_split(self, st: FusedState, t: int):
+        """The overlapped round: resident spans run their (overlapped)
+        op-list program as one body — split ops committed internally —
+        and the tiers above take the inherited split recursion."""
+        if self._batched and t >= self._resident_from:
+            return self._tier_round(st, t), ()
+        return super()._round_split(st, t)
 
     # ------------------------------------------------- host-side external I/O
     def _ext_loc(self, cid: int) -> tuple[tuple[int, ...], int]:

@@ -152,7 +152,11 @@ class Network:
                               first — hierarchical sync, DESIGN.md §3),
                               batch_axes (signature-batched stepping:
                               axis names, or {name: size} for batch-only
-                              axes off the mesh — DESIGN.md §Perf).
+                              axes off the mesh — DESIGN.md §Perf),
+                              overlap (split issue/commit exchange —
+                              bit-identical pipelining of tier transfers
+                              with compute; "auto"/bool, REPRO_OVERLAP
+                              env override — DESIGN.md §Perf).
         engine="fused"     -> fused.FusedEngine — the kernel-fused fast
                               path for arbitrary topologies (§Perf):
                               same kwargs as "graph" plus fuse /
@@ -165,7 +169,9 @@ class Network:
                               per OS process over shared-memory queues,
                               no mesh needed; kwargs: partition (flat map
                               or PartitionTree), n_workers, K, ring_depth,
-                              timeout, prebuild, cache_dir, log_dir.
+                              timeout, prebuild, cache_dir, log_dir,
+                              batch_signatures, overlap (send-early/
+                              receive-late worker exchanges).
 
         (The uniform-grid presets ``distributed.GridEngine`` and
         ``fused.FusedEngine.grid`` are constructed directly — they build
@@ -204,6 +210,8 @@ class Network:
             partition = kw.pop("partition", None)
             if "batch_axes" in kw:  # signature-batched stepping (§Perf)
                 extra["batch_axes"] = kw.pop("batch_axes")
+            if "overlap" in kw:  # split issue/commit exchange (ISSUE 7)
+                extra["overlap"] = kw.pop("overlap")
             if kw:
                 raise TypeError(
                     f"unknown build kwargs for engine={engine!r}: {sorted(kw)}"

@@ -197,6 +197,68 @@ def batching_crossover(
     return max(t_dispatch / gain, 1.0)
 
 
+# -- overlapped exchange accounting (ISSUE 7, DESIGN.md §Perf) ---------------
+
+def serial_epoch_time(t_step: float, t_comm: float,
+                      t_residual: float = 0.0) -> float:
+    """Wall time for one epoch under the serial schedule: the exchange
+    (drain + transfer + fill) strictly follows the window's compute, so
+    the two costs add.  ``t_residual`` is the schedule-independent part
+    (dispatch, host work) paid either way."""
+    return t_step + t_comm + t_residual
+
+
+def overlapped_epoch_time(t_step: float, t_comm: float,
+                          t_residual: float = 0.0) -> float:
+    """Wall time for one epoch under the split issue/commit schedule.
+
+    Transfers issued at window end complete under the next window's
+    compute, so the additive ``t_step + t_comm`` becomes
+    ``max(t_step, t_comm)``: whichever of compute and communication is
+    longer sets the pace and fully hides the other.  ``t_residual``
+    collects what neither phase can hide — the drain/fill bookkeeping at
+    the sync point and per-dispatch overhead — and is what
+    ``fit_overlap_residual`` recovers from a measured row."""
+    return max(t_step, t_comm) + t_residual
+
+
+def overlap_fraction(t_step: float, t_comm: float) -> float:
+    """Fraction of the serial epoch the split schedule can hide:
+    ``min(T_step, T_comm) / (T_step + T_comm)`` — 0 when either phase is
+    empty (nothing to overlap), 1/2 at perfect balance (the best case:
+    half the serial time disappears)."""
+    tot = t_step + t_comm
+    if tot <= 0.0:
+        return 0.0
+    return min(t_step, t_comm) / tot
+
+
+def overlap_speedup(t_step: float, t_comm: float,
+                    t_residual: float = 0.0) -> float:
+    """Predicted serial/overlapped epoch-time ratio (>= 1; equals
+    ``1 / (1 - overlap_fraction)`` when ``t_residual`` is 0)."""
+    over = overlapped_epoch_time(t_step, t_comm, t_residual)
+    if over <= 0.0:
+        return 1.0
+    return serial_epoch_time(t_step, t_comm, t_residual) / over
+
+
+def fit_overlap_residual(t_step: float, t_comm: float,
+                         t_overlapped_meas: float) -> float:
+    """Recover ``t_residual`` from ONE measured overlapped epoch time and
+    the serial run's phase split (step vs drain+transfer+fill).
+
+    Inverts ``t_meas = max(t_step, t_comm) + residual``; clamped at 0 for
+    a measurement faster than the model floor (timer noise).  The fit
+    ``benchmarks/run.py`` applies: fit the residual on one wafer row,
+    predict the other rows' overlapped times with it, and report the
+    worst relative error (the acceptance gate is <= 15%) — the residual
+    absorbs whatever fraction of the exchange the backend's scheduler
+    failed to hide, so the VALIDATED claim is that the residual is a
+    stable per-configuration constant, not that overlap is perfect."""
+    return max(t_overlapped_meas - max(t_step, t_comm), 0.0)
+
+
 def dividers_for_rates(f_sims: Sequence[float]) -> list[int]:
     """Clock dividers that realize simulated-frequency ratios exactly.
 

@@ -32,12 +32,16 @@ from typing import Any, Callable, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 PyTree = Any
 
 #: Op list executed by :func:`epoch_program`: ``("C", n)`` runs ``n``
 #: cycles of the cycle body; ``("X", t)`` runs the caller's exchange
-#: function for tier ``t``.  The whole program is ONE fused computation.
+#: function for tier ``t``; ``("XI", t)`` / ``("XC", t)`` are the split
+#: form of the same exchange — issue (drain + start transfer) and commit
+#: (finish transfer + fill) — so intervening ops overlap the transfer.
+#: The whole program is ONE fused computation.
 Program = Sequence[Tuple[str, int]]
 
 _MODES = ("auto", "unroll", "xla", "pallas")
@@ -86,6 +90,69 @@ def resolve_interpret(interpret: Any = "auto") -> bool:
     return bool(interpret)
 
 
+def resolve_overlap(overlap: Any = "auto") -> bool:
+    """Resolve the overlapped-exchange knob (split issue/commit phases).
+
+    Same precedence as :func:`resolve_mode`: an explicit non-"auto"
+    argument (bool, or one of ``on|off|1|0|true|false``) always wins; the
+    environment variable ``REPRO_OVERLAP`` overrides a caller-passed
+    ``"auto"`` so CI can flip every engine to the split schedule without
+    threading a flag through; "auto" resolves to off — the serial
+    schedule stays the default, and the split schedule is bit-identical
+    by construction so flipping it per-run is always safe.
+    """
+    def parse(v: Any, src: str) -> bool:
+        if isinstance(v, bool):
+            return v
+        s = str(v).strip().lower()
+        if s in ("1", "on", "true", "yes"):
+            return True
+        if s in ("0", "off", "false", "no"):
+            return False
+        raise ValueError(f"{src}={v!r} not a boolean (on|off|1|0|auto)")
+
+    if not (isinstance(overlap, str) and overlap.strip().lower() == "auto"):
+        return parse(overlap, "overlap")
+    env = os.environ.get("REPRO_OVERLAP", "auto").strip().lower()
+    if env and env != "auto":
+        return parse(env, "REPRO_OVERLAP")
+    return False
+
+
+def overlap_program(program: Program) -> Program:
+    """Rewrite a serial op program into the split-exchange schedule.
+
+    Every maximal run of consecutive ``("X", t)`` ops — the tiers firing
+    at one sync boundary — becomes all their issues followed by all their
+    commits: ``X_a, X_b -> XI_a, XI_b, XC_a, XC_b``.  A slab drained at
+    the end of epoch window *w* is only consumed at the start of window
+    *w+1*, and drains touch only egress queues while fills touch only
+    ingress queues (disjoint state), so this reorder is bit-safe: every
+    tier's drain still precedes its own fill, and every fill still
+    precedes the first cycle that could pop its packets.  What it buys:
+    all of a boundary's transfers are in flight at once, and each
+    transfer's completion is only awaited at fill time (next-window
+    start), giving the scheduler/DMA engine the whole boundary to hide
+    the transfer latency.
+    """
+    out: list[Tuple[str, int]] = []
+    run: list[int] = []
+
+    def flush() -> None:
+        out.extend(("XI", t) for t in run)
+        out.extend(("XC", t) for t in run)
+        run.clear()
+
+    for op, arg in program:
+        if op == "X":
+            run.append(arg)
+        else:
+            flush()
+            out.append((op, arg))
+    flush()
+    return tuple(out)
+
+
 def _check_stable(step: Any, carry: PyTree) -> None:
     """Abstractly evaluate one cycle and verify the carry contract."""
     out = jax.eval_shape(step, carry)
@@ -106,6 +173,8 @@ def pallas_program(
     program: Program,
     *,
     exchange_fn: Callable[..., PyTree] | None = None,
+    issue_fn: Callable[..., Tuple[PyTree, PyTree]] | None = None,
+    commit_fn: Callable[..., PyTree] | None = None,
     consts: PyTree | None = None,
     interpret: Any = "auto",
 ) -> PyTree:
@@ -124,6 +193,15 @@ def pallas_program(
     (lookup tables) are extra read-only refs.  Zero-size leaves carry no
     data and ``pallas_call`` rejects them, so they are filtered out and
     reconstructed inside the kernel.
+
+    Split ops ``("XI", t)`` / ``("XC", t)`` double-buffer the exchange
+    slabs: the issued slab pytree is written into one of two VMEM staging
+    buffers per tier and moved by an async DMA copy that is started at
+    issue and only awaited at commit, so every op between the two phases
+    — the other tiers' issues and fills, and on TPU the next window's
+    step loop — runs while the copy is in flight.  Two slots per tier
+    (selected by a compile-time firing counter) let a second issue start
+    before the previous window's copy is awaited.
     """
     c_leaves, c_def = jax.tree.flatten(carry)
     k_leaves, k_def = jax.tree.flatten(consts if consts is not None else ())
@@ -137,11 +215,35 @@ def pallas_program(
             full[i] = v
         return jax.tree.unflatten(treedef, full)
 
+    def call_with_consts(fn, *a, consts_v):
+        return fn(*a, consts_v) if consts is not None else fn(*a)
+
+    # Per-tier staging for split exchanges: the pending pytree's shape is
+    # derived abstractly, then each live leaf gets (src, dst) VMEM staging
+    # buffers with two slots and a 2-slot DMA semaphore.
+    split_tiers = sorted({arg for op, arg in program if op == "XI"})
+    scratch_shapes: list = []
+    stage_info: dict = {}
+    for t in split_tiers:
+        _, p_shape = jax.eval_shape(
+            lambda c, _t=t: call_with_consts(issue_fn, c, _t, consts_v=consts),
+            carry)
+        p_leaves, p_def = jax.tree.flatten(p_shape)
+        p_live = [i for i, l in enumerate(p_leaves) if l.size > 0]
+        base = len(scratch_shapes)
+        for i in p_live:
+            leaf = p_leaves[i]
+            scratch_shapes.append(pltpu.VMEM((2,) + leaf.shape, leaf.dtype))
+            scratch_shapes.append(pltpu.VMEM((2,) + leaf.shape, leaf.dtype))
+            scratch_shapes.append(pltpu.SemaphoreType.DMA((2,)))
+        stage_info[t] = (p_leaves, p_def, p_live, base)
+
     def kernel(*refs):
         cvals = tuple(r[...] for r in refs[:nc])
         consts_v = rebuild(
             tuple(r[...] for r in refs[nc:nc + nk]), k_live, k_leaves, k_def
         )
+        scratch = refs[nc + nk + nc:]
 
         def live_out(out):
             out_leaves = jax.tree.leaves(out)
@@ -152,18 +254,53 @@ def pallas_program(
             out = cycle_fn(c, consts_v) if consts is not None else cycle_fn(c)
             return live_out(out)
 
+        def stage_refs(t, j):
+            base = stage_info[t][3]
+            return scratch[base + 3 * j], scratch[base + 3 * j + 1], \
+                scratch[base + 3 * j + 2]
+
+        fired = {t: 0 for t in split_tiers}
+        pending_slot: dict = {}
         for op, arg in program:
             if op == "C":
                 if arg == 1:
                     cvals = body(0, cvals)
                 elif arg > 1:
                     cvals = jax.lax.fori_loop(0, arg, body, cvals)
-            else:  # "X"
+            elif op == "X":
                 c = rebuild(cvals, c_live, c_leaves, c_def)
                 out = (exchange_fn(c, arg, consts_v) if consts is not None
                        else exchange_fn(c, arg))
                 cvals = live_out(out)
-        for r, v in zip(refs[nc + nk:], cvals):
+            elif op == "XI":
+                c = rebuild(cvals, c_live, c_leaves, c_def)
+                out, pend = (issue_fn(c, arg, consts_v) if consts is not None
+                             else issue_fn(c, arg))
+                cvals = live_out(out)
+                slot = fired[arg] % 2
+                fired[arg] += 1
+                pending_slot[arg] = slot
+                p_vals = jax.tree.leaves(pend)
+                for j, i in enumerate(stage_info[arg][2]):
+                    src, dst, sem = stage_refs(arg, j)
+                    src[slot] = p_vals[i]
+                    pltpu.make_async_copy(
+                        src.at[slot], dst.at[slot], sem.at[slot]).start()
+            else:  # "XC"
+                slot = pending_slot.pop(arg)
+                p_leaves_t, p_def_t, p_live_t, _ = stage_info[arg]
+                vals = []
+                for j in range(len(p_live_t)):
+                    src, dst, sem = stage_refs(arg, j)
+                    pltpu.make_async_copy(
+                        src.at[slot], dst.at[slot], sem.at[slot]).wait()
+                    vals.append(dst[slot])
+                pend = rebuild(vals, p_live_t, p_leaves_t, p_def_t)
+                c = rebuild(cvals, c_live, c_leaves, c_def)
+                out = (commit_fn(c, arg, pend, consts_v)
+                       if consts is not None else commit_fn(c, arg, pend))
+                cvals = live_out(out)
+        for r, v in zip(refs[nc + nk:nc + nk + nc], cvals):
             r[...] = v
 
     outs = pl.pallas_call(
@@ -172,6 +309,7 @@ def pallas_program(
             jax.ShapeDtypeStruct(c_leaves[i].shape, c_leaves[i].dtype)
             for i in c_live
         ),
+        scratch_shapes=scratch_shapes,
         interpret=resolve_interpret(interpret),
     )(*(c_leaves[i] for i in c_live), *(k_leaves[i] for i in k_live))
     return rebuild(list(outs), c_live, c_leaves, c_def)
@@ -232,12 +370,48 @@ def epoch_loop(
     raise ValueError(f"unknown epoch mode {mode!r} (auto|unroll|xla|pallas)")
 
 
+def validate_program(program: Program) -> Tuple[Tuple[str, int], ...]:
+    """Normalize + statically validate an op program.
+
+    Checks the op vocabulary and the split-exchange pairing discipline:
+    every ``("XI", t)`` must be followed by exactly one ``("XC", t)``
+    before the tier issues again, and the program must end with every
+    issue committed (a pending transfer crossing the program boundary
+    would leak the in-flight slab).
+    """
+    program = tuple((op, int(arg)) for op, arg in program)
+    pending: set = set()
+    for op, arg in program:
+        if op not in ("C", "X", "XI", "XC"):
+            raise ValueError(f"unknown program op {op!r} (C|X|XI|XC)")
+        if op == "XI":
+            if arg in pending:
+                raise ValueError(
+                    f"tier {arg} issued twice without an intervening commit")
+            pending.add(arg)
+        elif op == "XC":
+            if arg not in pending:
+                raise ValueError(f"tier {arg} committed with no pending issue")
+            pending.remove(arg)
+        elif op == "X" and arg in pending:
+            raise ValueError(
+                f"tier {arg} has a serial exchange while a split one is "
+                f"pending")
+    if pending:
+        raise ValueError(
+            f"program ends with uncommitted exchanges for tiers "
+            f"{sorted(pending)}")
+    return program
+
+
 def epoch_program(
     cycle_fn: Callable[..., PyTree],
     carry: PyTree,
     program: Program,
     *,
     exchange_fn: Callable[..., PyTree] | None = None,
+    issue_fn: Callable[..., Tuple[PyTree, PyTree]] | None = None,
+    commit_fn: Callable[..., PyTree] | None = None,
     consts: PyTree | None = None,
     mode: str = "auto",
     interpret: Any = "auto",
@@ -255,15 +429,29 @@ def epoch_program(
     execute the *same* op sequence (bit-exact twins for CPU CI), just as
     jitted XLA loops instead of one kernel.
 
-    Both ``cycle_fn`` and ``exchange_fn`` must preserve the carry's
-    treedef/shapes/dtypes (checked abstractly up front).
+    Split ops ``("XI", t)`` / ``("XC", t)`` (see :func:`overlap_program`)
+    run the exchange in two phases: ``issue_fn(carry, t[, consts]) ->
+    (carry, pending)`` drains and starts the transfer, and
+    ``commit_fn(carry, t, pending[, consts]) -> carry`` finishes it and
+    fills.  In the xla/unroll lowerings the pending pytree is threaded
+    between the two phases as ordinary values, so every op emitted between
+    issue and commit is data-independent of the in-flight slab and XLA's
+    latency-hiding scheduler is free to overlap the transfer with it; the
+    pallas lowering stages the slab through double-buffered VMEM with an
+    async copy (started at issue, awaited at commit).  All lowerings
+    remain bit-exact twins.
+
+    ``cycle_fn``, ``exchange_fn``, and the issue/commit round trip must
+    preserve the carry's treedef/shapes/dtypes (checked abstractly up
+    front).
     """
-    program = tuple((op, int(arg)) for op, arg in program)
-    for op, _ in program:
-        if op not in ("C", "X"):
-            raise ValueError(f"unknown program op {op!r} (C|X)")
+    program = validate_program(program)
     if any(op == "X" for op, _ in program) and exchange_fn is None:
         raise ValueError("program has ('X', t) ops but no exchange_fn")
+    if any(op in ("XI", "XC") for op, _ in program) and (
+            issue_fn is None or commit_fn is None):
+        raise ValueError(
+            "program has split ('XI'/'XC') ops but no issue_fn/commit_fn")
     if not program:
         return carry
     step = (lambda c: cycle_fn(c, consts)) if consts is not None else cycle_fn
@@ -274,15 +462,25 @@ def epoch_program(
             else (lambda c, _t=t: exchange_fn(c, _t)),
             carry,
         )
+    for t in sorted({arg for op, arg in program if op == "XI"}):
+        def _roundtrip(c, _t=t):
+            if consts is not None:
+                c2, pend = issue_fn(c, _t, consts)
+                return commit_fn(c2, _t, pend, consts)
+            c2, pend = issue_fn(c, _t)
+            return commit_fn(c2, _t, pend)
+        _check_stable(_roundtrip, carry)
     mode = resolve_mode(mode)
     if mode == "pallas":
         return pallas_program(
-            cycle_fn, carry, program, exchange_fn=exchange_fn, consts=consts,
+            cycle_fn, carry, program, exchange_fn=exchange_fn,
+            issue_fn=issue_fn, commit_fn=commit_fn, consts=consts,
             interpret=interpret,
         )
     if mode not in ("xla", "unroll"):
         raise ValueError(f"unknown epoch mode {mode!r} (auto|unroll|xla|pallas)")
     out = carry
+    pending: dict = {}
     for op, arg in program:
         if op == "C":
             if mode == "unroll":
@@ -292,7 +490,15 @@ def epoch_program(
                 out = step(out)
             elif arg > 1:
                 out = jax.lax.fori_loop(0, arg, lambda _, c: step(c), out)
-        else:
+        elif op == "X":
             out = (exchange_fn(out, arg, consts) if consts is not None
                    else exchange_fn(out, arg))
+        elif op == "XI":
+            out, pending[arg] = (
+                issue_fn(out, arg, consts) if consts is not None
+                else issue_fn(out, arg))
+        else:  # "XC"
+            out = (commit_fn(out, arg, pending.pop(arg), consts)
+                   if consts is not None
+                   else commit_fn(out, arg, pending.pop(arg)))
     return out

@@ -48,6 +48,7 @@ from typing import Any, Callable, Sequence
 import numpy as np
 
 from ..core import queue as qmod
+from ..kernels import granule_step
 from ..core.graph import (
     ChannelGraph, PartitionLowering, PartitionTree, Tier, lower_partition,
     normalize_partition, normalize_tiers,
@@ -126,6 +127,13 @@ class ProcsEngine:
                 program op — fewer processes and fewer dispatches for
                 replicated designs, bit-identical traffic (the batch is a
                 legal lockstep refinement of the free-running schedule).
+    overlap:    split every tier exchange into issue (drain + push) and
+                commit (pop + fill) phases — at a boundary all outgoing
+                slabs are pushed before the worker blocks on any incoming
+                one (send-early/receive-late), so peer latencies overlap
+                instead of adding.  Bit-identical traffic (the credit
+                protocol per channel is unchanged).  "auto"/bool with
+                ``REPRO_OVERLAP`` env override; auto = off.
     """
 
     engine_kind = "procs"
@@ -144,6 +152,7 @@ class ProcsEngine:
         cache_dir: str | None = None,
         log_dir: str | None = None,
         batch_signatures: bool = False,
+        overlap: Any = "auto",
     ):
         self.graph = graph
         if isinstance(partition, PartitionTree):
@@ -179,7 +188,23 @@ class ProcsEngine:
         self.dtype = np.dtype(graph.dtype if graph.dtype is not None
                               else np.float32)
         self.part = ptree.part
-        self.ring_depth = max(int(ring_depth), 2)
+        # A boundary slab ring must hold one exchange window in flight PLUS
+        # the next window the overlapped (send-early/receive-late) schedule
+        # pushes before the previous one is consumed.  Shallower rings
+        # deadlock the free-running fleet (historically surfacing only as
+        # the CI watchdog timeout) — fail fast at build time instead.
+        ring_depth = int(ring_depth)
+        if ring_depth < 2:
+            raise ValueError(
+                f"ring_depth={ring_depth} is too shallow: boundary slab "
+                f"rings must hold two exchange windows (>= 2 slab records "
+                f"of E_t slots each; tier slab depths E_t={self.E_tiers}) "
+                f"so the overlapped schedule can push window w+1 before "
+                f"window w is consumed — a shallower ring deadlocks the "
+                f"free-running fleet instead of failing fast"
+            )
+        self.ring_depth = ring_depth
+        self.overlap = granule_step.resolve_overlap(overlap)
         self.timeout = float(timeout)
         self.cache_dir = cache_dir if cache_dir is not None else _DEFAULT_CACHE
 
@@ -301,6 +326,7 @@ class ProcsEngine:
             ring_prefix=self._ring_prefix,
             ring_depth=self.ring_depth,
             timeout=self.timeout,
+            overlap=self.overlap,
         )
 
     # ------------------------------------------------------------- lifecycle

@@ -110,6 +110,7 @@ class GranuleSpec:
     ring_prefix: str
     ring_depth: int
     timeout: float
+    overlap: bool = False  # split issue/commit exchange (send-early/receive-late)
 
     @property
     def cycles_per_epoch(self) -> int:
@@ -185,7 +186,14 @@ class GranuleSim:
         """Flatten the nested tier rounds into ("C", n_cycles) / ("X", tier)
         ops — the same schedule as ``GraphEngine._tier_round``, with
         trailing tiers that have no channels ON THIS GRANULE folded into
-        one contiguous cycle block (pure local compute chunks bigger)."""
+        one contiguous cycle block (pure local compute chunks bigger).
+
+        With ``spec.overlap`` the serial exchanges are rewritten to split
+        ("XI", t) / ("XC", t) phases by ``granule_step.overlap_program`` —
+        at a multi-tier boundary all issues precede all commits, so every
+        outgoing slab is pushed before the worker blocks on any incoming
+        one (send-early/receive-late).  The compiled stepper set is
+        unchanged: XI reuses the drain stepper, XC the fill stepper."""
         tiers = self.spec.tiers
         fold_from = len(tiers)
         while fold_from > 0 and not (
@@ -208,7 +216,12 @@ class GranuleSim:
             ops.append(("X", t))
             return ops
 
-        return tier_round(0)
+        program = tier_round(0)
+        if self.spec.overlap:
+            from ..kernels.granule_step import overlap_program
+
+            program = overlap_program(program)
+        return program
 
     # ------------------------------------------------------------- templates
     def init(self, key_data: np.ndarray,
@@ -589,6 +602,8 @@ class Worker:
         self.state = None
         self.epochs_done = 0
         self.timeout = spec.timeout
+        self.wait_s = 0.0  # time blocked on peer rings (credits/slabs)
+        self.run_s = 0.0  # wallclock inside "run" commands
         cap_b = spec.capacity
         itemsize = np.dtype(spec.dtype).itemsize
         self.rings: dict[tuple[str, int], ShmRing] = {}
@@ -666,46 +681,104 @@ class Worker:
                 landed = ring.push_packets(np.asarray(pays)[:cnt])
                 assert landed == cnt  # room was the drain limit
 
-    def _exchange(self, t: int) -> None:
+    def _timed(self, fn, *args):
+        """Run one potentially-blocking ring op, accumulating its wallclock
+        into ``wait_s`` (the procs blocking-wait metric; same accounting in
+        serial and overlapped schedules, so the fraction is comparable)."""
+        t0 = time.perf_counter()
+        out = fn(*args)
+        self.wait_s += time.perf_counter() - t0
+        return out
+
+    def _pop_order(self, rings):
+        """Yield ring indices as each becomes non-empty (round-robin poll):
+        the receive-late fill consumes whichever peer's slab lands first
+        instead of serializing on channel order.  Poll time with no ring
+        ready counts as blocking wait; past the deadline the remaining
+        indices are yielded so the blocking pop raises ``RingTimeout``
+        with its usual diagnostics."""
+        pending = list(range(len(rings)))
+        deadline = time.monotonic() + self.timeout
+        delay = 20e-6
+        while pending:
+            progressed = False
+            for i in list(pending):
+                if not rings[i].empty():
+                    pending.remove(i)
+                    progressed = True
+                    yield i
+            if pending and not progressed:
+                if time.monotonic() > deadline:
+                    while pending:
+                        yield pending.pop(0)
+                    return
+                t0 = time.perf_counter()
+                time.sleep(delay)
+                delay = min(delay * 2, 1e-3)
+                self.wait_s += time.perf_counter() - t0
+
+    def _exchange_issue(self, t: int) -> None:
+        """Window-end send: pop credits, drain egress queues, push slabs."""
         jnp = self.sim.jnp
         ts = self.spec.tiers[t]
-        if ts.egress_chans:
-            # pop one credit per egress channel: the receiver's post-fill
-            # free space from the PREVIOUS exchange (seeded capacity-1)
-            creds = np.array(
-                [self.rings[("c", c)].pop_u32_wait(self.timeout)
-                 for c in ts.egress_chans],
-                np.int32,
+        if not ts.egress_chans:
+            return
+        # pop one credit per egress channel: the receiver's post-fill
+        # free space from the PREVIOUS exchange (seeded capacity-1)
+        creds = np.array(
+            [self._timed(self.rings[("c", c)].pop_u32_wait, self.timeout)
+             for c in ts.egress_chans],
+            np.int32,
+        )
+        self.state, slab, cnt = self.sim._compiled[("D", t)](
+            self.state, jnp.asarray(creds)
+        )
+        slab = np.asarray(slab)
+        cnt = np.asarray(cnt)
+        for i, c in enumerate(ts.egress_chans):
+            self._timed(self.rings[("d", c)].push_slab_wait,
+                        int(cnt[i]), slab[i], self.timeout)
+
+    def _exchange_commit(self, t: int) -> None:
+        """Receive-late fill: pop slabs (first-ready order), fill ingress
+        queues, push back post-fill free space as the next credits."""
+        jnp = self.sim.jnp
+        ts = self.spec.tiers[t]
+        if not ts.ingress_chans:
+            return
+        n_in = len(ts.ingress_chans)
+        slab_in = np.zeros((n_in, ts.E, self.sim.W), self.sim.np_dtype)
+        cnt_in = np.zeros((n_in,), np.int32)
+        rings = [self.rings[("d", c)] for c in ts.ingress_chans]
+        # receive-late is part of the overlap feature; the serial schedule
+        # keeps strict channel-order blocking pops (the honest baseline)
+        order = self._pop_order(rings) if self.spec.overlap else range(n_in)
+        for i in order:
+            cnt_in[i], slab_in[i] = self._timed(
+                rings[i].pop_slab_wait,
+                (ts.E, self.sim.W), self.sim.np_dtype, self.timeout,
             )
-            self.state, slab, cnt = self.sim._compiled[("D", t)](
-                self.state, jnp.asarray(creds)
-            )
-            slab = np.asarray(slab)
-            cnt = np.asarray(cnt)
-            for i, c in enumerate(ts.egress_chans):
-                self.rings[("d", c)].push_slab_wait(
-                    int(cnt[i]), slab[i], self.timeout
-                )
-        if ts.ingress_chans:
-            n_in = len(ts.ingress_chans)
-            slab_in = np.zeros((n_in, ts.E, self.sim.W), self.sim.np_dtype)
-            cnt_in = np.zeros((n_in,), np.int32)
-            for i, c in enumerate(ts.ingress_chans):
-                cnt_in[i], slab_in[i] = self.rings[("d", c)].pop_slab_wait(
-                    (ts.E, self.sim.W), self.sim.np_dtype, self.timeout
-                )
-            self.state, free = self.sim._compiled[("F", t)](
-                self.state, jnp.asarray(slab_in), jnp.asarray(cnt_in)
-            )
-            free = np.asarray(free)
-            for i, c in enumerate(ts.ingress_chans):
-                self.rings[("c", c)].push_u32(int(free[i]), self.timeout)
+        self.state, free = self.sim._compiled[("F", t)](
+            self.state, jnp.asarray(slab_in), jnp.asarray(cnt_in)
+        )
+        free = np.asarray(free)
+        for i, c in enumerate(ts.ingress_chans):
+            self._timed(self.rings[("c", c)].push_u32,
+                        int(free[i]), self.timeout)
+
+    def _exchange(self, t: int) -> None:
+        self._exchange_issue(t)
+        self._exchange_commit(t)
 
     def one_epoch(self) -> None:
         self._ingest_ext()
         for op, arg in self.sim.program:
             if op == "C":
                 self.state = self.sim._compiled[("C", arg)](self.state)
+            elif op == "XI":
+                self._exchange_issue(arg)
+            elif op == "XC":
+                self._exchange_commit(arg)
             else:
                 self._exchange(arg)
         self._flush_ext()
@@ -725,11 +798,15 @@ class Worker:
                     _, key_data, group_params = cmd
                     self.state = self.sim.init(key_data, group_params)
                     self.epochs_done = 0
+                    self.wait_s = 0.0
+                    self.run_s = 0.0
                     self.beat()
                     self.conn.send(("ok", 0))
                 elif op == "run":
+                    t0 = time.perf_counter()
                     for _ in range(int(cmd[1])):
                         self.one_epoch()
+                    self.run_s += time.perf_counter() - t0
                     self.conn.send(("ok", self.epochs_done))
                 elif op == "probe":
                     _, gi, slot, *rest = cmd
@@ -789,6 +866,9 @@ class Worker:
             "epoch": self.epochs_done,
             "ports": ports,
             "signature": self.spec.signature,
+            "wait_s": self.wait_s,
+            "run_s": self.run_s,
+            "wait_fraction": (self.wait_s / self.run_s) if self.run_s else 0.0,
         }
 
 
@@ -810,6 +890,8 @@ class BatchedWorker(Worker):
         self.state = None
         self.epochs_done = 0
         self.timeout = self.spec.timeout
+        self.wait_s = 0.0
+        self.run_s = 0.0
         itemsize = np.dtype(self.spec.dtype).itemsize
         self.rings: dict[tuple[str, int], ShmRing] = {}
         for s in self.specs:
@@ -880,48 +962,55 @@ class BatchedWorker(Worker):
                     landed = ring.push_packets(np.asarray(pays)[:cnt])
                     assert landed == cnt
 
-    def _exchange(self, t: int) -> None:
+    def _exchange_issue(self, t: int) -> None:
         jnp = self.sim.jnp
         rows = [s.tiers[t] for s in self.specs]
-        if rows[0].egress_chans:
-            creds = np.array(
-                [[self.rings[("c", c)].pop_u32_wait(self.timeout)
-                  for c in ts.egress_chans] for ts in rows],
-                np.int32,
+        if not rows[0].egress_chans:
+            return
+        creds = np.array(
+            [[self._timed(self.rings[("c", c)].pop_u32_wait, self.timeout)
+              for c in ts.egress_chans] for ts in rows],
+            np.int32,
+        )
+        self.state, slab, cnt = self.sim._compiled[("D", t)](
+            self.state, jnp.asarray(creds)
+        )
+        slab = np.asarray(slab)
+        cnt = np.asarray(cnt)
+        for r, ts in enumerate(rows):
+            for i, c in enumerate(ts.egress_chans):
+                self._timed(self.rings[("d", c)].push_slab_wait,
+                            int(cnt[r, i]), slab[r, i], self.timeout)
+
+    def _exchange_commit(self, t: int) -> None:
+        jnp = self.sim.jnp
+        rows = [s.tiers[t] for s in self.specs]
+        if not rows[0].ingress_chans:
+            return
+        n_in = len(rows[0].ingress_chans)
+        nb = len(self.specs)
+        slab_in = np.zeros((nb, n_in, rows[0].E, self.sim.W),
+                           self.sim.np_dtype)
+        cnt_in = np.zeros((nb, n_in), np.int32)
+        flat = [(r, i, self.rings[("d", c)])
+                for r, ts in enumerate(rows)
+                for i, c in enumerate(ts.ingress_chans)]
+        order = (self._pop_order([ring for _, _, ring in flat])
+                 if self.spec.overlap else range(len(flat)))
+        for k in order:
+            r, i, ring = flat[k]
+            cnt_in[r, i], slab_in[r, i] = self._timed(
+                ring.pop_slab_wait,
+                (rows[r].E, self.sim.W), self.sim.np_dtype, self.timeout,
             )
-            self.state, slab, cnt = self.sim._compiled[("D", t)](
-                self.state, jnp.asarray(creds)
-            )
-            slab = np.asarray(slab)
-            cnt = np.asarray(cnt)
-            for r, ts in enumerate(rows):
-                for i, c in enumerate(ts.egress_chans):
-                    self.rings[("d", c)].push_slab_wait(
-                        int(cnt[r, i]), slab[r, i], self.timeout
-                    )
-        if rows[0].ingress_chans:
-            n_in = len(rows[0].ingress_chans)
-            nb = len(self.specs)
-            slab_in = np.zeros((nb, n_in, rows[0].E, self.sim.W),
-                               self.sim.np_dtype)
-            cnt_in = np.zeros((nb, n_in), np.int32)
-            for r, ts in enumerate(rows):
-                for i, c in enumerate(ts.ingress_chans):
-                    cnt_in[r, i], slab_in[r, i] = (
-                        self.rings[("d", c)].pop_slab_wait(
-                            (ts.E, self.sim.W), self.sim.np_dtype,
-                            self.timeout,
-                        )
-                    )
-            self.state, free = self.sim._compiled[("F", t)](
-                self.state, jnp.asarray(slab_in), jnp.asarray(cnt_in)
-            )
-            free = np.asarray(free)
-            for r, ts in enumerate(rows):
-                for i, c in enumerate(ts.ingress_chans):
-                    self.rings[("c", c)].push_u32(
-                        int(free[r, i]), self.timeout
-                    )
+        self.state, free = self.sim._compiled[("F", t)](
+            self.state, jnp.asarray(slab_in), jnp.asarray(cnt_in)
+        )
+        free = np.asarray(free)
+        for r, ts in enumerate(rows):
+            for i, c in enumerate(ts.ingress_chans):
+                self._timed(self.rings[("c", c)].push_u32,
+                            int(free[r, i]), self.timeout)
 
     def _stats(self) -> list[dict]:
         import jax
@@ -946,6 +1035,10 @@ class BatchedWorker(Worker):
                 "signature": s.signature,
                 "batch_row": r,
                 "batch_size": len(self.specs),
+                "wait_s": self.wait_s,
+                "run_s": self.run_s,
+                "wait_fraction": (self.wait_s / self.run_s)
+                if self.run_s else 0.0,
             })
         return out
 
