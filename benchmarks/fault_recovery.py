@@ -1,0 +1,190 @@
+"""Self-healing fleet MTTR rows (ISSUE 8; DESIGN.md §Fault tolerance).
+
+Measures the cost model documented in ``repro.runtime.recovery``::
+
+    MTTR ≈ detect + backoff + respawn(warm) + restore + replay
+
+1. **Detection**: a plan-killed worker (``kill:1@2``) under the default
+   ``on_fault="raise"`` policy — wall time from run start to the typed
+   ``WorkerDiedError`` (exitcode poll, not the heartbeat timeout) on a
+   small 2-worker PipeStage ring.
+2. **Respawn cold vs warm** (smoke wafer — the config whose AOT
+   prebuild is worth caching): first build+launch against a fresh
+   persistent compilation cache vs the recovery path's ``_reopen()``
+   (fresh processes + rings, warm cache) — the prebuilt-simulator
+   cache is what makes automatic recovery affordable.
+3. **Recovery overhead** on the smoke wafer (8x8 manycore torus, 4
+   workers, K=8 — the config whose epochs cost enough to be worth
+   snapshotting): the SAME fault-free run under ``on_fault="recover"``
+   (periodic coordinated snapshots at the default cadence) vs
+   ``on_fault="raise"`` — the steady-state price of being recoverable.
+4. **End-to-end MTTR** (same wafer): a kill drill under
+   ``on_fault="recover"`` minus the fault-free run time ≈ detect +
+   respawn + restore + replay.
+
+Rows (schema repro-bench-v1; gates in ``benchmarks.schema``):
+    recovery_detect_kill      s from run start to WorkerDiedError
+    recovery_respawn_cold     s: build + launch, cold persistent cache
+    recovery_respawn_warm     s: ``_reopen()`` — the recovery respawn path
+    recovery_warm_vs_cold     warm/cold ratio        (gate: <= 0.7)
+    recovery_overhead_smoke   recover/raise run-time ratio, fault-free
+                              smoke wafer            (gate: <= 1.5)
+    recovery_mttr_kill        s: faulted run - fault-free run
+"""
+import tempfile
+import time
+
+import jax
+
+from .common import emit
+from .procs_runtime import _wafer_scenario
+from repro.core import Simulation
+from repro.hw.pipestage import make_ring
+
+_TIMEOUT = 60.0
+
+
+def _ring_engine(cache_dir=None, **kw):
+    from repro.runtime.launcher import ProcsEngine
+
+    graph = make_ring(4, capacity=8).graph()
+    return ProcsEngine(graph, [0, 0, 1, 1], n_workers=2, K=4,
+                       timeout=_TIMEOUT, cache_dir=cache_dir, **kw)
+
+
+def _wafer_engine(**kw):
+    from repro.runtime.launcher import ProcsEngine
+
+    graph, part, _ = _wafer_scenario(8, 8, 8)
+    return ProcsEngine(graph, part, n_workers=4, K=8, timeout=_TIMEOUT, **kw)
+
+
+def _timed_run(eng, epochs: int, runs: int = 2) -> list[float]:
+    """Per-run wall times; run 0 is cold (worker run-path warmup), later
+    runs are warm — the kill drill is compared cold-vs-cold so compile
+    time cannot masquerade as recovery time."""
+    sim = Simulation(eng)
+    sim.reset(jax.random.key(0))
+    times = []
+    for _ in range(runs):
+        t0 = time.perf_counter()
+        sim.run(epochs=epochs)
+        sim.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return times
+
+
+def bench_respawn(smoke: bool = False) -> None:
+    # Measured on the smoke wafer: its AOT prebuild (2 granule
+    # signatures) is what the prebuilt-simulator cache saves a recovery
+    # respawn — on a trivial graph both sides are just spawn + jax
+    # import and the ratio is scheduler noise.
+    cache = tempfile.mkdtemp(prefix="recovery_bench_cache_")
+    t0 = time.perf_counter()
+    eng = _wafer_engine(cache_dir=cache)
+    eng.launch()
+    t_cold = time.perf_counter() - t0
+    emit("recovery_respawn_cold", t_cold * 1e6,
+         f"{t_cold:.2f}s first build+launch, cold persistent cache "
+         "(wafer AOT prebuild + 4 worker spawns)")
+    warms = []
+    for _ in range(2):
+        eng.close()
+        t0 = time.perf_counter()
+        eng._reopen()  # the recovery controller's respawn path
+        warms.append(time.perf_counter() - t0)
+    eng.close()
+    t_warm = min(warms)
+    emit("recovery_respawn_warm", t_warm * 1e6,
+         f"{t_warm:.2f}s _reopen(): fresh processes + rings against the "
+         "warm cache — what a mid-run recovery actually pays")
+    ratio = t_warm / max(t_cold, 1e-9)
+    emit("recovery_warm_vs_cold", ratio,
+         f"warm respawn = {ratio:.2f}x the cold build+launch "
+         "(prebuilt-simulator cache amortizes recovery; gate <= 0.7)")
+
+
+def bench_overhead(smoke: bool = False):
+    # PAIRED measurement: the two fleets run back-to-back inside each
+    # round and the ratio is taken per pair (best of 3) — a ~0.5s run on
+    # a contended smoke box drifts by tens of ms between rounds, which
+    # unpaired min-of-runs turns into a phantom overhead.  The idle fleet
+    # blocks on its command pipe, so holding both open is free.
+    epochs = 64
+    eng_plain = _wafer_engine()
+    eng_rec = _wafer_engine(on_fault="recover")  # shipped snapshot_every=16
+
+    def once(sim):
+        t0 = time.perf_counter()
+        sim.run(epochs=epochs)
+        sim.block_until_ready()
+        return time.perf_counter() - t0
+
+    sim_p = Simulation(eng_plain)
+    sim_p.reset(jax.random.key(0))
+    sim_r = Simulation(eng_rec)
+    sim_r.reset(jax.random.key(0))
+    t_plain_cold = once(sim_p)  # cold: worker first-run dispatch warmup
+    once(sim_r)
+    pairs = [(once(sim_p), once(sim_r)) for _ in range(3)]
+    t_plain = min(p for p, _ in pairs)
+    ratio = min(r / p for p, r in pairs)
+    snaps = eng_rec.fault_stats()["snapshots"]
+    eng_plain.close()
+    eng_rec.close()
+    emit("recovery_baseline_run", t_plain / epochs * 1e6,
+         f"{t_plain:.3f}s fault-free {epochs}-epoch smoke-wafer run "
+         f"(4 workers, K=8, cold {t_plain_cold:.3f}s), on_fault=raise")
+    emit("recovery_overhead_smoke", ratio,
+         f"fault-free recover-mode run = {ratio:.2f}x the raise-mode run, "
+         f"best of 3 paired rounds ({snaps} coordinated snapshots over "
+         f"{4 * epochs} epochs at the default snapshot_every=16; "
+         "gate <= 1.5)")
+    return t_plain_cold, epochs
+
+
+def bench_mttr(smoke: bool = False, t_plain_cold: float = 0.0,
+               epochs: int = 16) -> None:
+    from repro.runtime import WorkerDiedError
+
+    # detection latency: default raise policy, plan-killed ring worker
+    eng = _ring_engine(fault_plan="kill:1@2")
+    sim = Simulation(eng)
+    sim.reset(jax.random.key(0))
+    t0 = time.perf_counter()
+    try:
+        sim.run(epochs=8)
+        raise AssertionError("plan-killed run completed without a fault")
+    except WorkerDiedError:
+        t_detect = time.perf_counter() - t0
+    eng.close()
+    emit("recovery_detect_kill", t_detect * 1e6,
+         f"{t_detect:.2f}s run start -> WorkerDiedError for a SIGKILLed "
+         "worker (liveness poll, incl. ~2 epochs of run)")
+
+    # end-to-end MTTR: healed kill drill vs the COLD fault-free wafer run
+    # (the kill fires on the drill's first run, so both sides pay the
+    # same worker run-path warmup and the difference is recovery alone)
+    eng = _wafer_engine(on_fault="recover", backoff_s=0.0,
+                        fault_plan="kill:1@2")
+    (t_drill,) = _timed_run(eng, epochs, runs=1)
+    stats = eng.fault_stats()
+    eng.close()
+    assert stats["restarts"] == 1, stats
+    rec = stats["last_recovery"]
+    mttr = max(t_drill - t_plain_cold, 0.0)
+    emit("recovery_mttr_kill", mttr * 1e6,
+         f"{mttr:.2f}s MTTR ~= detect + respawn + restore + replay "
+         f"(restore {rec['restore_seconds']:.2f}s, replayed "
+         f"{rec['confirmed_epochs_replayed']} epochs from snapshot at "
+         f"epoch {rec['restored_epoch']})")
+
+
+def bench(smoke: bool = False) -> None:
+    bench_respawn(smoke=smoke)
+    t_plain_cold, epochs = bench_overhead(smoke=smoke)
+    bench_mttr(smoke=smoke, t_plain_cold=t_plain_cold, epochs=epochs)
+
+
+if __name__ == "__main__":
+    bench()

@@ -17,6 +17,10 @@ paper-artifact mapping):
     procs_runtime      §III/§IV free-running multiprocess runtime:
                        prebuilt-cache build-time-vs-instances + 4-worker
                        shm-fleet throughput vs the in-process baseline
+    fault_recovery     §Fault tolerance (ISSUE 8): MTTR decomposition of
+                       the self-healing fleet — detection latency, warm
+                       vs cold respawn, snapshot overhead, healed-kill
+                       end-to-end MTTR
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only name] [--smoke|--full]
                                              [--json PATH]
@@ -29,14 +33,15 @@ ISSUE 3 perf-trajectory numbers: sim-clock Hz for every engine on the
 wafer scenario at equal (K_inner, K_outer)).
 
 Every run also writes a machine-readable summary (default
-``BENCH_PR7.json``): ``{"schema", "git_rev", "smoke", "full", "argv",
+``BENCH_PR8.json``): ``{"schema", "git_rev", "smoke", "full", "argv",
 "failed", "baseline", "suites": {suite: [{"name", "us_per_call",
 "derived"}, ...]}}`` — the same schema in every mode, so the perf
 trajectory can be tracked and diffed PR over PR.  ``baseline`` embeds the
 PR 6 reference rows (git rev + the wafer/backend/engine suites of the
 committed ``BENCH_PR6.json``) so numbers-vs-last-PR stay auditable even
 if the old file disappears (``benchmarks.schema`` enforces this chain on
-every committed ``BENCH_PR{n}.json``) — in particular the
+every committed ``BENCH_PR{n}.json``; PR 7 committed no json, so PR 8
+re-chains its baseline to PR 6) — in particular the
 ``wafer_engine_fused_*`` rows the ISSUE 7 overlapped-exchange speedups
 are measured against.
 """
@@ -50,11 +55,11 @@ import traceback
 
 from . import (
     accuracy_vs_rate, backend_speedup, build_time, common, engine_speedup,
-    procs_runtime, queue_perf, schema as schema_mod, sim_throughput,
-    task_latency, timing_breakdown, wafer_scale,
+    fault_recovery, procs_runtime, queue_perf, schema as schema_mod,
+    sim_throughput, task_latency, timing_breakdown, wafer_scale,
 )
 
-BENCH_JSON = "BENCH_PR7.json"
+BENCH_JSON = "BENCH_PR8.json"
 SMOKE_JSON = "BENCH_SMOKE.json"
 BASELINE_JSON = "BENCH_PR6.json"  # the committed PR 6 trajectory rows
 BASELINE_SUITES = ("wafer_scale", "backend_speedup", "engine_speedup")
@@ -71,6 +76,7 @@ SUITES = [
     ("accuracy_vs_rate", accuracy_vs_rate.bench),
     ("wafer_scale", wafer_scale.bench),
     ("procs_runtime", procs_runtime.bench),
+    ("fault_recovery", fault_recovery.bench),
 ]
 
 

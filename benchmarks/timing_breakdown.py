@@ -26,7 +26,7 @@ communication-time ratio (the residual is the exchange fraction the
 backend's scheduler failed to hide, so it tracks exchange volume), and
 predict the OTHER config's overlapped epoch time
 (``overlapped_epoch_time``) — the relative error is the
-``breakdown_overlap_model`` row, gated <= 15% on the committed
+``breakdown_overlap_model`` row, gated <= 30% on the committed
 trajectory file by ``benchmarks.schema``.
 
 The **procs wait rows** run the same 2-tier free-running fleet twice —

@@ -171,7 +171,11 @@ class Network:
                               or PartitionTree), n_workers, K, ring_depth,
                               timeout, prebuild, cache_dir, log_dir,
                               batch_signatures, overlap (send-early/
-                              receive-late worker exchanges).
+                              receive-late worker exchanges), on_fault
+                              ("raise"|"recover" self-healing policy,
+                              REPRO_ON_FAULT env override), snapshot_every,
+                              max_restarts, backoff_s, fault_plan
+                              (deterministic drills, REPRO_FAULT_PLAN).
 
         (The uniform-grid presets ``distributed.GridEngine`` and
         ``fused.FusedEngine.grid`` are constructed directly — they build

@@ -403,6 +403,11 @@ class Simulation:
         if self.kind == "single":
             d["push_count"] = np.asarray(jax.device_get(st.push_count))
             d["pop_count"] = np.asarray(jax.device_get(st.pop_count))
+        fs = getattr(self.engine, "fault_stats", None)
+        if fs is not None:
+            # the procs runtime's self-healing surface (ISSUE 8): policy,
+            # restart count, snapshot cadence/epoch, replayed epochs
+            d["faults"] = fs()
         return d
 
     def add_monitor(self, fn: Callable[["Simulation"], None],

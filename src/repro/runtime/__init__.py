@@ -12,12 +12,23 @@ instances" and build time stays flat in instance count.
   launcher         ProcsEngine — Network.build(engine="procs"): spawn,
                    wire, and drive the fleet behind the Simulation facade
   fault_tolerance  watchdogs, crash/restart loops, WorkerDiedError with
-                   captured worker log tails
+                   captured worker log tails, fleet stall diagnosis
+                   (credit wait-for graph -> FleetStallError)
+  faultinject      deterministic, plan-driven worker faults for drills
+                   (REPRO_FAULT_PLAN: kill/exit0/hang/slow/mute/corrupt)
+  recovery         coordinated snapshots + respawn/restore/replay — the
+                   self-healing policy behind ProcsEngine(on_fault=
+                   "recover") / REPRO_ON_FAULT (ISSUE 8)
 """
-from .fault_tolerance import WorkerDiedError
+from .fault_tolerance import FleetStallError, WorkerDiedError
+from .faultinject import FaultAction, parse_fault_plan
 from .launcher import ProcsEngine, ProcsState
-from .shmem import RingTimeout, ShmRing
+from .recovery import RECOVERABLE, RecoveryController, resolve_on_fault
+from .shmem import RingCorruptionError, RingTimeout, ShmRing
 
 __all__ = [
-    "ProcsEngine", "ProcsState", "RingTimeout", "ShmRing", "WorkerDiedError",
+    "FaultAction", "FleetStallError", "ProcsEngine", "ProcsState",
+    "RECOVERABLE", "RecoveryController", "RingCorruptionError",
+    "RingTimeout", "ShmRing", "WorkerDiedError", "parse_fault_plan",
+    "resolve_on_fault",
 ]

@@ -15,11 +15,17 @@ launcher, ``repro.runtime.launcher``):
   * ``FailureInjector`` — deterministic fault injection for tests/drills
     (the paper's cloud runs lose ECS tasks; we simulate that).
   * ``WorkerDiedError`` / ``ProcessMonitor`` — the free-running runtime's
-    failure surface: the launcher polls worker liveness (exitcode) and
-    per-epoch heartbeats while awaiting replies, and a dead or hung
-    granule simulator raises a ``WorkerDiedError`` carrying the worker's
-    captured log tail — a diagnosis, never a silent hang
-    (``tests/test_runtime.py`` kills a worker mid-run to prove it).
+    failure surface: the launcher polls worker liveness (ANY exit while
+    replies are pending, clean or not) and per-epoch heartbeats while
+    awaiting replies, and a dead or hung granule simulator raises a
+    ``WorkerDiedError`` carrying the worker's captured log tail — a
+    diagnosis, never a silent hang (``tests/test_runtime.py`` kills a
+    worker mid-run to prove it).
+  * ``FleetStallError`` + the stall-graph helpers (ISSUE 8) — when no
+    heartbeat advances fleet-wide, the per-worker "blocked on ring X"
+    status words are decoded into a credit wait-for graph; a cycle is a
+    true deadlock and raises ``FleetStallError`` naming it, an acyclic
+    chain names its root worker instead.
 """
 from __future__ import annotations
 
@@ -63,10 +69,10 @@ class Watchdog:
 
 
 class WorkerDiedError(RuntimeError):
-    """A granule worker process died (nonzero exitcode / signal) or went
-    silent past the heartbeat timeout.  The message carries the worker id,
-    its exit status, and the tail of its captured log so the failure is
-    diagnosable from the exception alone."""
+    """A granule worker process died (any unexpected exit, clean or not)
+    or went silent past the heartbeat timeout.  The message carries the
+    worker id, its exit status, and the tail of its captured log so the
+    failure is diagnosable from the exception alone."""
 
     def __init__(self, worker: int, reason: str, log_tail: str = ""):
         self.worker = worker
@@ -76,6 +82,88 @@ class WorkerDiedError(RuntimeError):
         if log_tail:
             msg += f"\n--- worker {worker} log tail ---\n{log_tail}"
         super().__init__(msg)
+
+
+class FleetStallError(RuntimeError):
+    """No heartbeat advanced fleet-wide AND the credit wait-for graph —
+    reconstructed from the per-worker "blocked on ring X" status words in
+    the heartbeat shm — contains a cycle: a true deadlock, not a slow or
+    dead worker.  Carries the detected cycle so the diagnosis names the
+    exact channels instead of a generic hang."""
+
+    def __init__(self, cycle: list[int], details: list[str]):
+        self.cycle = list(cycle)
+        self.details = list(details)
+        ring = " -> ".join(f"w{w}" for w in self.cycle + self.cycle[:1])
+        msg = "fleet-wide stall: credit wait-for cycle " + ring
+        if details:
+            msg += "\n  " + "\n  ".join(details)
+        super().__init__(msg)
+
+
+# ------------------------------------------------- stall diagnosis (ISSUE 8)
+# Workers publish a "blocked on ring X" status word in their heartbeat
+# record before every blocking ring op (0 = running).  The launcher decodes
+# those words into a wait-for graph over workers when the whole fleet goes
+# quiet: pop-waits point at the ring's producer, push-waits at its consumer.
+OP_CREDIT_POP, OP_SLAB_POP, OP_SLAB_PUSH, OP_CREDIT_PUSH = 1, 2, 3, 4
+STALL_OPS = {OP_CREDIT_POP: "credit-pop", OP_SLAB_POP: "slab-pop",
+             OP_SLAB_PUSH: "slab-push", OP_CREDIT_PUSH: "credit-push"}
+_STALL_BASE = 1_000_000
+
+
+def encode_blocked(op: int, chan: int) -> int:
+    """Status word for "blocked in ring op ``op`` on channel ``chan``"."""
+    return op * _STALL_BASE + chan
+
+
+def decode_blocked(code: int) -> tuple[int, int]:
+    """Inverse of ``encode_blocked`` → (op, chan)."""
+    return divmod(int(code), _STALL_BASE)
+
+
+def stall_wait_edges(blocked: dict[int, int],
+                     chan_workers: dict[int, tuple[int, int]],
+                     ) -> tuple[dict[int, int], dict[int, str]]:
+    """Wait-for edges ``waiter -> holder`` from per-worker status words.
+
+    ``blocked`` maps worker -> status word (0 = not blocked);
+    ``chan_workers`` maps channel id -> (producer_worker, consumer_worker)
+    of the channel's slab direction.  Self-edges (both ends of a channel
+    batched into one worker) are dropped.  Returns (edges, details)."""
+    edges: dict[int, int] = {}
+    details: dict[int, str] = {}
+    for w, code in blocked.items():
+        if code <= 0:
+            continue
+        op, chan = decode_blocked(code)
+        if op not in STALL_OPS or chan not in chan_workers:
+            continue
+        sw, dw = chan_workers[chan]
+        # Waiting to POP a slab (or PUSH a credit) → the slab producer is
+        # behind; waiting to POP a credit (or PUSH a slab) → the consumer.
+        peer = dw if op in (OP_CREDIT_POP, OP_SLAB_PUSH) else sw
+        if peer == w:
+            continue
+        edges[w] = peer
+        details[w] = (f"worker {w} blocked on {STALL_OPS[op]} c{chan} "
+                      f"(w{sw}->w{dw}), held up by worker {peer}")
+    return edges, details
+
+
+def find_stall_cycle(edges: dict[int, int]) -> list[int] | None:
+    """First cycle in a functional wait-for graph, or None."""
+    for start in sorted(edges):
+        path: list[int] = []
+        seen: dict[int, int] = {}
+        w = start
+        while w in edges and w not in seen:
+            seen[w] = len(path)
+            path.append(w)
+            w = edges[w]
+        if w in seen:
+            return path[seen[w]:]
+    return None
 
 
 def read_log_tail(path: str | None, max_bytes: int = 2048) -> str:
@@ -104,47 +192,82 @@ class ProcessMonitor:
 
     def __init__(self, procs: dict[int, Any], log_paths: dict[int, str],
                  heartbeat: Callable[[int], float] | None = None,
-                 hang_timeout_s: float = 120.0):
+                 hang_timeout_s: float = 120.0,
+                 diagnose: Callable[[tuple[int, ...]], Exception | None]
+                 | None = None):
         self.procs = procs
         self.log_paths = log_paths
         self.heartbeat = heartbeat  # worker -> last-beat wallclock
         self.hang_timeout_s = hang_timeout_s
+        self.diagnose = diagnose    # fleet-wide stall -> richer exception
         self._last_progress = {w: time.time() for w in procs}
         self._last_beat = {w: -1.0 for w in procs}
 
     def check(self, waiting_on: tuple[int, ...] | None = None) -> None:
         now = time.time()
         for w, p in self.procs.items():
-            if p is not None and p.exitcode is not None and p.exitcode != 0:
+            if p is not None and p.exitcode is not None:
+                # check() only runs while a reply is pending, so ANY exit
+                # here — clean or not — is a fault.  exitcode 0 used to be
+                # invisible to this check and only surfaced via the slow
+                # heartbeat timeout (ISSUE 8 satellite).
+                how = (f"died with exitcode {p.exitcode}" if p.exitcode
+                       else "exited cleanly (exitcode 0) while replies "
+                            "were still pending")
                 raise WorkerDiedError(
-                    w, f"died with exitcode {p.exitcode}",
-                    read_log_tail(self.log_paths.get(w)),
+                    w, how, read_log_tail(self.log_paths.get(w)),
                 )
         if self.heartbeat is None or not waiting_on:
             return
+        hung, quiet = [], []
         for w in waiting_on:
             beat = self.heartbeat(w)
             if beat != self._last_beat[w]:
                 self._last_beat[w] = beat
                 self._last_progress[w] = now
-            elif now - self._last_progress[w] > self.hang_timeout_s:
-                raise WorkerDiedError(
-                    w,
-                    f"made no progress for {self.hang_timeout_s:.0f}s "
-                    "(hung or deadlocked)",
-                    read_log_tail(self.log_paths.get(w)),
-                )
+                continue
+            silent = now - self._last_progress[w]
+            if silent > self.hang_timeout_s:
+                hung.append(w)
+            if silent > self.hang_timeout_s / 2:
+                quiet.append(w)
+        if not hung:
+            return
+        # When EVERY pending worker has gone quiet (half-timeout grace
+        # absorbs threshold-crossing skew), the hang is fleet-wide: hand
+        # the full set to the diagnoser, which reconstructs the credit
+        # wait-for graph and names the deadlock cycle / root worker.
+        if self.diagnose is not None and set(quiet) >= set(waiting_on):
+            exc = self.diagnose(tuple(waiting_on))
+            if exc is not None:
+                raise exc
+        w = hung[0]
+        raise WorkerDiedError(
+            w,
+            f"made no progress for {self.hang_timeout_s:.0f}s "
+            "(hung or deadlocked)",
+            read_log_tail(self.log_paths.get(w)),
+        )
 
 
 class FailureInjector:
-    """Raises RuntimeError at the given (absolute) step numbers, once each."""
+    """Deterministic fault injection: fires once at each of the given
+    (absolute) step numbers.  Without ``on_fail`` it raises RuntimeError
+    (the training-loop drill); with it, the callback runs instead — the
+    plan-driven worker faults of ``repro.runtime.faultinject`` (kill,
+    hang, corrupt-a-slab, ...) are built on this same trigger."""
 
-    def __init__(self, fail_at: tuple[int, ...] = ()):
+    def __init__(self, fail_at: tuple[int, ...] = (),
+                 on_fail: Callable[[int], None] | None = None):
         self.fail_at = set(fail_at)
+        self.on_fail = on_fail
 
     def maybe_fail(self, step: int) -> None:
         if step in self.fail_at:
             self.fail_at.discard(step)
+            if self.on_fail is not None:
+                self.on_fail(step)
+                return
             raise RuntimeError(f"injected failure at step {step}")
 
 

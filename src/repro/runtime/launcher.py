@@ -28,9 +28,25 @@ O(#instances) — the paper's flat-build-time property, measured in
 ``benchmarks/procs_runtime.py``.
 
 **Failure surface** (``runtime.fault_tolerance``): every reply wait polls
-worker exitcodes and per-epoch heartbeats; a dead or silent worker
-raises ``WorkerDiedError`` with that worker's captured log tail, and the
-remaining workers are torn down — never a hang on a half-dead fleet.
+worker exitcodes (ANY exit while replies are pending, clean or not) and
+per-epoch heartbeats; a dead or silent worker raises ``WorkerDiedError``
+with that worker's captured log tail, and the remaining workers are torn
+down — never a hang on a half-dead fleet.  When the WHOLE fleet goes
+quiet, the per-worker "blocked on ring X" status words in the heartbeat
+shm are decoded into the credit wait-for graph: a cycle raises
+``FleetStallError`` naming the deadlock, an acyclic graph names the root
+worker.  Checked rings surface slab corruption as
+``RingCorruptionError`` (``runtime.shmem``).
+
+**Self-healing** (``runtime.recovery``, ISSUE 8): with
+``on_fault="recover"`` (env ``REPRO_ON_FAULT``) the engine takes
+coordinated snapshots every ``snapshot_every`` epochs at command
+boundaries (the fleet is quiesced there, so ``gather_state`` is a
+consistent cut) and, on any recoverable fault, tears down the remnant
+fleet, respawns workers from the warm prebuilt-simulator cache,
+scatters the last snapshot, and replays the lost epochs — final state
+and host Rx traffic bit-identical to a fault-free run.  Deterministic
+drills via ``runtime.faultinject`` (``REPRO_FAULT_PLAN``).
 """
 from __future__ import annotations
 
@@ -53,12 +69,17 @@ from ..core.graph import (
     ChannelGraph, PartitionLowering, PartitionTree, Tier, lower_partition,
     normalize_partition, normalize_tiers,
 )
-from .fault_tolerance import ProcessMonitor, WorkerDiedError, read_log_tail
-from .shmem import ShmRing, slab_slot_bytes
+from .fault_tolerance import (
+    FleetStallError, ProcessMonitor, WorkerDiedError, find_stall_cycle,
+    read_log_tail, stall_wait_edges,
+)
+from .faultinject import actions_for, resolve_fault_plan
+from .recovery import RecoveryController, resolve_on_fault
+from .shmem import RingCorruptionError, RingTimeout, ShmRing, slab_slot_bytes
 from .worker import (
-    BatchSpec, BatchedGranuleSim, GranuleSim, GranuleSpec, GroupSpec,
-    TierSpec, configure_compile_cache, credit_ring_name, data_ring_name,
-    ext_ring_name, worker_entry,
+    HB_RECORD_BYTES, HB_RECORD_F64, BatchSpec, BatchedGranuleSim, GranuleSim,
+    GranuleSpec, GroupSpec, TierSpec, configure_compile_cache,
+    credit_ring_name, data_ring_name, ext_ring_name, worker_entry,
 )
 
 PyTree = Any
@@ -67,6 +88,34 @@ _DEFAULT_CACHE = (
     os.environ.get("REPRO_PROCS_CACHE_DIR")
     or os.path.join(tempfile.gettempdir(), "repro_procs_cache")
 )
+
+
+def _worker_mp_context():
+    """Multiprocessing context for worker processes.
+
+    Default is a ``forkserver`` preloaded with ``repro.runtime.worker``:
+    the server pays the jax/repro import ONCE, then every worker — and
+    critically every recovery *respawn* — is a cheap fork of it.  Safe
+    because importing the worker module initializes no XLA backend and
+    starts no threads (each fork creates its own client); the server
+    starts inside the ``_child_env`` window, so its frozen environment is
+    the canonical single-CPU-device worker env.  ``REPRO_WORKER_SPAWN=
+    spawn`` restores plain spawn (each worker re-imports jax, several
+    seconds apiece)."""
+    method = os.environ.get("REPRO_WORKER_SPAWN", "forkserver")
+    if method not in ("forkserver", "spawn"):
+        raise ValueError(
+            f"REPRO_WORKER_SPAWN={method!r}: expected 'forkserver' or "
+            "'spawn'"
+        )
+    if method == "forkserver":
+        try:
+            ctx = get_context("forkserver")
+            ctx.set_forkserver_preload(["repro.runtime.worker"])
+            return ctx
+        except (ValueError, OSError):  # platform without forkserver
+            pass
+    return get_context("spawn")
 
 # Engines are tracked weakly: a garbage-collected engine tears itself down
 # via __del__, and whatever is still alive at interpreter exit is closed
@@ -134,6 +183,26 @@ class ProcsEngine:
                 instead of adding.  Bit-identical traffic (the credit
                 protocol per channel is unchanged).  "auto"/bool with
                 ``REPRO_OVERLAP`` env override; auto = off.
+    on_fault:   "raise" (default) propagates the first fleet fault;
+                "recover" auto-heals: snapshot periodically, and on a
+                dead/hung/corrupted/deadlocked fleet respawn + restore +
+                replay (``runtime.recovery``).  "auto"/str with
+                ``REPRO_ON_FAULT`` env override; auto = raise.
+    snapshot_every:
+                coordinated-snapshot cadence in epochs (recover mode; the
+                snapshot is taken at the first command boundary on each
+                multiple, where the fleet is quiesced).  The default
+                trades the steady-state gather tax (benchmarked at
+                ~1.2x a raise-mode run on the smoke wafer, budget 1.5x)
+                against the replay bound of one cadence of epochs.
+    max_restarts:
+                recovery attempts before giving up (the original fault is
+                re-raised, chained).
+    backoff_s:  base of the exponential respawn backoff (doubles per
+                consecutive restart).
+    fault_plan: deterministic fault injection for drills — a plan string
+                (see ``runtime.faultinject``) or a sequence of
+                ``FaultAction``; default: env ``REPRO_FAULT_PLAN``.
     """
 
     engine_kind = "procs"
@@ -153,6 +222,11 @@ class ProcsEngine:
         log_dir: str | None = None,
         batch_signatures: bool = False,
         overlap: Any = "auto",
+        on_fault: str = "auto",
+        snapshot_every: int = 16,
+        max_restarts: int = 3,
+        backoff_s: float = 0.25,
+        fault_plan: Any = None,
     ):
         self.graph = graph
         if isinstance(partition, PartitionTree):
@@ -207,6 +281,9 @@ class ProcsEngine:
         self.overlap = granule_step.resolve_overlap(overlap)
         self.timeout = float(timeout)
         self.cache_dir = cache_dir if cache_dir is not None else _DEFAULT_CACHE
+        self.on_fault = resolve_on_fault(on_fault)
+        self.fault_plan = resolve_fault_plan(fault_plan)
+        self._incarnation = 0  # bumped on every recovery respawn
 
         low = lower_partition(graph, ptree)
         self.lowering = low
@@ -239,6 +316,20 @@ class ProcsEngine:
         ]
         self._is_batch = [isinstance(s, BatchSpec) for s in self._wspecs]
         self.NW = len(self._wspecs)
+        # channel id -> (producer worker, consumer worker) of its slab
+        # direction: the topology the stall diagnoser decodes status
+        # words against
+        self._chan_workers = {
+            c: (self._worker_of[s], self._worker_of[d])
+            for (t, s, d), chans in self.lowering.routes.items()
+            for c in chans
+        }
+        bad = [a for a in self.fault_plan if a.worker >= self.NW]
+        if bad:
+            raise ValueError(
+                f"fault plan targets worker(s) {[a.worker for a in bad]} "
+                f"but the fleet has {self.NW} worker(s)"
+            )
 
         # ---- the prebuilt-simulator cache: one compile per DISTINCT shape
         self.build_stats: dict[str, Any] = {
@@ -265,7 +356,10 @@ class ProcsEngine:
                 self.build_stats["compiled"][name] = stats
             self.build_stats["prebuild_seconds"] = time.perf_counter() - t0
 
-        self._ctx = get_context("spawn")
+        # forkserver preloaded with the worker module: respawns fork the
+        # already-imported server instead of re-importing jax (recovery
+        # MTTR); starts lazily inside the launch() _child_env window
+        self._ctx = _worker_mp_context()
         self._procs: dict[int, Any] = {}
         self._conns: dict[int, Any] = {}
         self._rings: dict[str, ShmRing] = {}
@@ -275,6 +369,10 @@ class ProcsEngine:
         self._launched = False
         self._closed = False
         self._monitor: ProcessMonitor | None = None
+        self._recovery = RecoveryController(
+            self, snapshot_every=snapshot_every, max_restarts=max_restarts,
+            backoff_s=backoff_s,
+        )
         _live_engines.add(self)
 
     # ------------------------------------------------------------- lowering
@@ -342,11 +440,15 @@ class ProcsEngine:
                 if tt != t:
                     continue
                 for c in chans:
+                    # slab + host-port rings are integrity-checked (per-
+                    # record seq + crc32); 4-byte credit rings are not —
+                    # their payload IS the protocol invariant
                     self._rings[data_ring_name(self._ring_prefix, c)] = (
                         ShmRing.create(
                             data_ring_name(self._ring_prefix, c),
                             self.ring_depth + 1,
                             slab_slot_bytes(self.E_tiers[t], self.W, itemsize),
+                            checked=True, label=f"slab:c{c}",
                         )
                     )
                     self._rings[credit_ring_name(self._ring_prefix, c)] = (
@@ -359,14 +461,15 @@ class ProcsEngine:
             self._rings[ext_ring_name(self._ring_prefix, cid)] = ShmRing.create(
                 ext_ring_name(self._ring_prefix, cid),
                 self.capacity, self.W * itemsize,
+                checked=True, label=f"ext:{name}",
             )
         self._seed_credit_rings()
 
         hb_name = f"{self._ring_prefix}hb"
         self._hb_shm = shared_memory.SharedMemory(
-            name=hb_name, create=True, size=16 * self.NW
+            name=hb_name, create=True, size=HB_RECORD_BYTES * self.NW
         )
-        self._hb_shm.buf[:] = bytes(16 * self.NW)
+        self._hb_shm.buf[:] = bytes(HB_RECORD_BYTES * self.NW)
         self._hb = np.frombuffer(self._hb_shm.buf, np.float64)
 
         env_save = _child_env()
@@ -374,10 +477,12 @@ class ProcsEngine:
             for g, spec in enumerate(self._wspecs):
                 parent, child = self._ctx.Pipe()
                 log_path = os.path.join(self._log_dir, f"worker{g}.log")
+                faults = actions_for(self.fault_plan, g, self._incarnation)
                 p = self._ctx.Process(
                     target=worker_entry,
                     args=(child, pickle.dumps(spec), g, log_path,
-                          self.cache_dir, hb_name),
+                          self.cache_dir, hb_name,
+                          pickle.dumps(faults) if faults else None),
                     daemon=True,
                     name=f"repro-granule-{g}",
                 )
@@ -391,9 +496,10 @@ class ProcsEngine:
             self._procs,
             {g: os.path.join(self._log_dir, f"worker{g}.log")
              for g in range(self.NW)},
-            heartbeat=lambda g: float(self._hb[g * 2])
-            + float(self._hb[g * 2 + 1]),
+            heartbeat=lambda g: float(self._hb[g * HB_RECORD_F64])
+            + float(self._hb[g * HB_RECORD_F64 + 1]),
             hang_timeout_s=self.timeout,
+            diagnose=self._diagnose_stall,
         )
         self._launched = True
         self.launch_stats = {"ready_seconds": {}}
@@ -455,6 +561,36 @@ class ProcsEngine:
                 pass
         _live_engines.discard(self)
 
+    def _reopen(self) -> None:
+        """Respawn the fleet after a fault (the recovery path): fresh ring
+        namespace, fresh worker processes, the SAME lowering — and a warm
+        persistent compilation cache, so the respawn skips every compile
+        the first launch paid for.  The restart count gates incarnation-
+        scoped fault-plan actions (``:r<N>``), so a fired drill fault does
+        not re-fire during its own replay."""
+        if not self._closed:
+            self.close()
+        self._incarnation += 1
+        self._closed = False
+        self._launched = False
+        self._procs = {}
+        self._conns = {}
+        self._rings = {}
+        self._hb_shm = None
+        self._hb = None
+        self._monitor = None
+        self._ring_prefix = f"sb{os.getpid() % 100000:x}{secrets.token_hex(3)}"
+        # specs embed the ring prefix — rebuild them for the new namespace
+        self._specs = [self._granule_spec(g) for g in range(self.G)]
+        self._wspecs = [
+            self._specs[ms[0]] if len(ms) == 1
+            else BatchSpec(members=ms, specs=[self._specs[g] for g in ms])
+            for ms in self._worker_members
+        ]
+        self._np_tables_cache = {}
+        _live_engines.add(self)
+        self.launch()
+
     def __del__(self):  # best-effort; atexit covers the normal path
         try:
             self.close()
@@ -466,11 +602,40 @@ class ProcsEngine:
         if self._monitor is not None:
             try:
                 self._monitor.check(waiting_on)
-            except WorkerDiedError:
-                # a dead granule poisons the whole fleet (its peers would
-                # hang on its rings) — tear everything down before raising
+            except (WorkerDiedError, FleetStallError):
+                # a dead or deadlocked granule poisons the whole fleet (its
+                # peers would hang on its rings) — tear everything down
+                # before raising
                 self.close()
                 raise
+
+    def _diagnose_stall(self, waiting_on: tuple[int, ...]):
+        """Fleet-wide no-heartbeat diagnosis (monitor callback): decode
+        every worker's "blocked on ring X" status word into the credit
+        wait-for graph.  A cycle is a true deadlock → ``FleetStallError``
+        naming it; an acyclic graph blames its root worker; no usable
+        information returns None (the monitor falls back to the plain
+        hung-worker error)."""
+        if self._hb is None:
+            return None
+        blocked = {w: int(self._hb[w * HB_RECORD_F64 + 2])
+                   for w in range(self.NW)}
+        edges, details = stall_wait_edges(blocked, self._chan_workers)
+        cycle = find_stall_cycle(edges)
+        if cycle is not None:
+            return FleetStallError(cycle, [details[w] for w in cycle])
+        roots = set(edges.values()) - set(edges)
+        if edges and roots:
+            w = min(roots)
+            return WorkerDiedError(
+                w,
+                f"is the root of a fleet-wide stall: {len(edges)} worker(s) "
+                f"transitively blocked on it while it made no progress for "
+                f"{self.timeout:.0f}s",
+                read_log_tail(self._monitor.log_paths.get(w)
+                              if self._monitor else None),
+            )
+        return None
 
     def _send(self, g: int, cmd: tuple) -> None:
         """Send one command; a closed pipe means the worker is gone —
@@ -496,6 +661,33 @@ class ProcsEngine:
                 g, f"died with exitcode {rc} (command pipe closed)", tail
             )
 
+    def _recv_raw(self, g: int):
+        """recv() one reply from a worker whose pipe is ready — EOF-
+        hardened (a worker can die between poll() and recv(); poll returns
+        True at EOF), and typed ``("fault", ...)`` replies (worker-side
+        ring corruption / ring timeout) are rebuilt into their original
+        exception with the fleet torn down — the recovery controller
+        catches them one frame up."""
+        try:
+            kind, payload = self._conns[g].recv()
+        except (EOFError, OSError):
+            p = self._procs.get(g)
+            if p is not None:
+                p.join(timeout=1.0)
+            rc = p.exitcode if p is not None else None
+            tail = read_log_tail(
+                self._monitor.log_paths[g] if self._monitor else None
+            )
+            self.close()
+            how = (f"died with exitcode {rc}" if rc
+                   else "exited cleanly (exitcode 0) while replies were "
+                        "still pending")
+            raise WorkerDiedError(g, f"{how} (reply pipe closed)", tail)
+        if kind == "fault":
+            self.close()
+            raise _rebuild_fault(g, payload)
+        return kind, payload
+
     def _recv(self, g: int, timeout: float | None = None,
               progress: bool = False, hang_check: bool = True):
         """Await one reply.  ``progress=True`` (run commands): no absolute
@@ -516,7 +708,7 @@ class ProcsEngine:
                 raise WorkerDiedError(
                     g, f"no reply within {timeout or self.timeout:.0f}s", tail
                 )
-        return conn.recv()
+        return self._recv_raw(g)
 
     def _command(self, g: int, cmd: tuple, timeout: float | None = None):
         self._send(g, cmd)
@@ -528,18 +720,46 @@ class ProcsEngine:
 
     def _broadcast(self, cmd: tuple, progress: bool = False) -> list:
         """Send to every worker, then collect every reply — the workers run
-        the command concurrently (free-running; no barrier inside)."""
+        the command concurrently (free-running; no barrier inside).
+
+        Replies are consumed READY-FIRST, not in worker order: a typed
+        fault reply (ring corruption, worker-side timeout) surfaces the
+        moment it lands even while earlier-numbered workers are wedged by
+        that same fault — detection latency is one poll interval, and the
+        monitor's fleet-wide stall diagnosis reasons over exactly the
+        still-pending set."""
         for g in range(self.NW):
             self._send(g, cmd)
-        out = []
-        for g in range(self.NW):
-            kind, payload = self._recv(g, progress=progress)
-            if kind == "err":
+        out: list = [None] * self.NW
+        pending = set(range(self.NW))
+        deadline = (None if progress
+                    else time.monotonic() + self.timeout)
+        while pending:
+            ready = [g for g in sorted(pending) if self._conns[g].poll(0)]
+            for g in ready:
+                kind, payload = self._recv_raw(g)
+                if kind == "err":
+                    self.close()
+                    raise RuntimeError(
+                        f"worker {g} command {cmd[0]!r} failed:\n{payload}"
+                    )
+                out[g] = payload
+                pending.discard(g)
+            if not pending:
+                break
+            if ready:
+                if deadline is not None:  # any reply rearms the deadline
+                    deadline = time.monotonic() + self.timeout
+                continue
+            self._check_workers(waiting_on=tuple(sorted(pending)))
+            if deadline is not None and time.monotonic() > deadline:
+                g = min(pending)
+                tail = read_log_tail(self._monitor.log_paths[g])
                 self.close()
-                raise RuntimeError(
-                    f"worker {g} command {cmd[0]!r} failed:\n{payload}"
+                raise WorkerDiedError(
+                    g, f"no reply within {self.timeout:.0f}s", tail
                 )
-            out.append(payload)
+            time.sleep(0.02)
         return out
 
     # ------------------------------------------------------ engine protocol
@@ -548,6 +768,7 @@ class ProcsEngine:
 
         self.launch()
         self._generation += 1
+        self._recovery.note_reset()
         for ring in self._rings.values():
             ring.reset()
         self._seed_credit_rings()
@@ -598,10 +819,21 @@ class ProcsEngine:
         """Free-run ``n_epochs`` on every worker.  Returns when the slowest
         worker reaches the target epoch — the only global synchronization
         is this *observation* at the command boundary; during the run each
-        worker is gated solely by its own channels' credits."""
+        worker is gated solely by its own channels' credits.
+
+        With ``on_fault="recover"`` the run goes through the recovery
+        controller: coordinated snapshots on the ``snapshot_every`` epoch
+        grid, and any recoverable fleet fault (dead / hung / corrupted /
+        deadlocked) is healed by respawn + restore + replay instead of
+        raised."""
         state = self._require(state)
         if n_epochs <= 0:
             return state
+        if self.on_fault == "recover":
+            return self._recovery.run_epochs(state, int(n_epochs))
+        return self._run_epochs_raw(state, int(n_epochs))
+
+    def _run_epochs_raw(self, state: ProcsState, n_epochs: int) -> ProcsState:
         epochs = self._broadcast(("run", int(n_epochs)), progress=True)
         done = epochs[0]
         assert all(e == done for e in epochs), epochs
@@ -757,12 +989,14 @@ class ProcsEngine:
 
     def host_push(self, state: ProcsState, name: str, payload):
         state = self._require(state)
+        self._recovery.note_ext_io(state)
         arr = np.asarray(payload, self.dtype).reshape(1, self.W)
         n = self._ext_ring(self.graph.ext_in, name).push_packets(arr)
         return state, np.bool_(n == 1)
 
     def host_pop(self, state: ProcsState, name: str):
         state = self._require(state)
+        self._recovery.note_ext_io(state)
         got = self._ext_ring(self.graph.ext_out, name).pop_packets(
             1, self.dtype, self.W
         )
@@ -772,6 +1006,7 @@ class ProcsEngine:
 
     def host_push_many(self, state: ProcsState, name: str, payloads):
         state = self._require(state)
+        self._recovery.note_ext_io(state)
         arr = np.asarray(payloads, self.dtype).reshape(-1, self.W)
         arr = arr[: self.capacity - 1]
         n = self._ext_ring(self.graph.ext_in, name).push_packets(arr)
@@ -779,6 +1014,7 @@ class ProcsEngine:
 
     def host_pop_many(self, state: ProcsState, name: str, max_n: int):
         state = self._require(state)
+        self._recovery.note_ext_io(state)
         got = self._ext_ring(self.graph.ext_out, name).pop_packets(
             max_n, self.dtype, self.W
         )
@@ -809,26 +1045,37 @@ class ProcsEngine:
                 # at a command boundary exactly one credit is in flight
                 assert len(snap) == 1, (c, len(snap))
                 credits[f"c{c}"] = snap[0].copy()
-        ext = {}
-        for name, (cid, is_in) in self.graph.ext_ports().items():
-            ring = self._rings[ext_ring_name(self._ring_prefix, cid)]
-            snap = ring.snapshot()
-            buf = np.zeros((self.capacity - 1, ring.slot_bytes), np.uint8)
-            buf[: len(snap)] = snap
-            ext[name] = {"buf": buf, "count": np.int32(len(snap))}
         return {
             "cycle": np.asarray(state.cycle),
             "epoch": np.asarray(state.epoch),
             "workers": {f"g{g}": w for g, w in enumerate(workers)},
             "credits": credits,
-            "ext": ext,
+            "ext": self._gather_ext(),
         }
+
+    def _gather_ext(self) -> dict:
+        """External rings' resident packets + seq counters (also used by
+        the recovery controller to refresh a snapshot after host I/O at an
+        unchanged epoch).  Checked rings snapshot WITH their headers, and
+        the (producer, consumer) sequence counters ride along so a restore
+        into a FRESH segment resumes the exact seq timeline — the bit-
+        identical-recovery requirement."""
+        ext = {}
+        for name, (cid, is_in) in self.graph.ext_ports().items():
+            ring = self._rings[ext_ring_name(self._ring_prefix, cid)]
+            snap = ring.snapshot()
+            buf = np.zeros((self.capacity - 1, ring.stride), np.uint8)
+            buf[: len(snap)] = snap
+            ext[name] = {"buf": buf, "count": np.int32(len(snap)),
+                         "seq": np.asarray(ring.seq_state(), np.int64)}
+        return ext
 
     def scatter_state(self, state: ProcsState, tree: PyTree) -> ProcsState:
         """Restore a ``gather_state`` tree into the running fleet."""
         import jax
 
         state = self._require(state)
+        self._recovery.note_scatter()
         tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
         for (t, s, d), chans in sorted(self.lowering.routes.items()):
             for c in chans:
@@ -840,7 +1087,9 @@ class ProcsEngine:
         for name, (cid, is_in) in self.graph.ext_ports().items():
             ring = self._rings[ext_ring_name(self._ring_prefix, cid)]
             rec = tree["ext"][name]
-            ring.restore(np.asarray(rec["buf"])[: int(rec["count"])])
+            seq = (tuple(int(x) for x in np.asarray(rec["seq"]).ravel())
+                   if "seq" in rec else None)
+            ring.restore(np.asarray(rec["buf"])[: int(rec["count"])], seq=seq)
         epoch = int(np.asarray(tree["epoch"]).ravel()[0])
         for w, members in enumerate(self._worker_members):
             if self._is_batch[w]:
@@ -858,6 +1107,31 @@ class ProcsEngine:
             cycle=np.int32(np.asarray(tree["cycle"]).ravel()[0]),
             epoch=np.int32(epoch),
         )
+
+    # -------------------------------------------------------- fault surface
+    def fault_stats(self) -> dict:
+        """Recovery/fault counters — ``Simulation.stats()["faults"]``."""
+        return self._recovery.stats()
+
+    def _handle_at(self, epoch: int) -> ProcsState:
+        """A fresh state handle pinned at ``epoch`` — the recovery restore
+        path's replacement for the handle that rode into the fault."""
+        return ProcsState(
+            cycle=np.int32(int(epoch) * self.cycles_per_epoch),
+            epoch=np.int32(int(epoch)),
+            generation=self._generation,
+        )
+
+
+def _rebuild_fault(worker: int, payload: dict) -> Exception:
+    """Rebuild a worker's typed ``("fault", ...)`` reply into its original
+    exception (ring corruption / ring timeout) so the recovery controller
+    sees the same type it would from a launcher-side detection."""
+    if payload.get("error") == "RingCorruptionError":
+        return RingCorruptionError(**payload["args"])
+    return RingTimeout(
+        f"worker {worker}: {payload.get('message', 'ring timeout')}"
+    )
 
 
 def _tree_np(tree: PyTree, idx: np.ndarray) -> PyTree:

@@ -1,0 +1,224 @@
+"""Coordinated snapshots + automatic fleet recovery (ISSUE 8 tentpole).
+
+The free-running runtime's failure surface (``runtime.fault_tolerance``,
+``runtime.shmem``) turns every fleet pathology into a typed exception:
+``WorkerDiedError`` (dead or hung process), ``FleetStallError`` (credit
+wait-for cycle), ``RingCorruptionError`` (seq/crc mismatch on a checked
+ring), ``RingTimeout`` (worker-side ring deadline).  This module is the
+policy layer above that surface: with ``ProcsEngine(on_fault="recover")``
+(env ``REPRO_ON_FAULT``) those faults are *healed* instead of raised.
+
+**Snapshot consistency.**  A coordinated snapshot is just
+``gather_state`` taken at a command boundary: every worker has replied to
+its ``run`` command, so the whole fleet sits at the SAME epoch with every
+data ring empty (asserted by the gather), exactly one credit in flight
+per channel, and the external rings quiescent.  That cut is consistent by
+construction — no marker algorithm needed, the command protocol IS the
+barrier.  The controller chunks ``run_epochs`` so a boundary lands on
+every multiple of ``snapshot_every`` and snapshots there.
+
+**Recovery sequence.**  On a recoverable fault mid-chunk:
+
+  1. the detection path has already torn down the remnant fleet
+     (``ProcsEngine.close()`` before the raise);
+  2. back off ``backoff_s * 2**(restarts-1)`` (a crash loop must not spin);
+  3. ``engine._reopen()`` — fresh ring namespace, fresh processes, same
+     lowering, warm persistent compilation cache (respawn pays no
+     recompiles — the prebuilt-simulator property doing double duty);
+  4. ``scatter_state`` the last snapshot (granule states, in-flight
+     credits, external-ring packets AND their integrity seq counters);
+  5. resume the chunk loop from the snapshot epoch — the lost epochs are
+     simply re-run.
+
+Replay determinism is inherited, not engineered: the runtime is bit-
+identical to the lockstep engines from any quiesced state, so re-running
+epochs ``s..t`` from the epoch-``s`` snapshot produces the same state and
+the same host-visible traffic as the fault-free timeline.  Host I/O
+between runs is handled by snapshot refresh: the engine marks the
+snapshot ext-dirty on any host push/pop, and the controller re-captures
+just the external rings (same epoch) or the full tree (epoch moved)
+before the next run — so recovery never re-delivers packets the host
+already popped, and never loses ones it pushed.
+
+**MTTR model** (measured in ``benchmarks/fault_recovery.py``)::
+
+    MTTR ≈ detect + backoff + respawn(warm) + restore + replay
+    detect  ~ heartbeat timeout (kill: one poll interval via exitcode)
+    respawn ~ forkserver fork (jax import pre-paid) + prebuild cache hit
+    replay  ≤ snapshot_every * epoch_time  (the cadence knob)
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Any
+
+from .fault_tolerance import FleetStallError, WorkerDiedError
+from .shmem import RingCorruptionError, RingTimeout
+
+#: Fleet faults the controller heals; anything else (a worker traceback,
+#: a protocol bug) propagates — recovery must not mask logic errors.
+RECOVERABLE = (WorkerDiedError, FleetStallError, RingCorruptionError,
+               RingTimeout)
+
+_POLICIES = ("raise", "recover")
+
+
+def resolve_on_fault(on_fault: Any = "auto") -> str:
+    """Resolve the fault policy: explicit argument > ``REPRO_ON_FAULT`` >
+    default "raise" — the same precedence as the other runtime knobs."""
+    if on_fault is None:
+        on_fault = "auto"
+    on_fault = str(on_fault).lower()
+    if on_fault == "auto":
+        on_fault = (os.environ.get("REPRO_ON_FAULT", "raise").lower()
+                    or "raise")
+    if on_fault not in _POLICIES:
+        raise ValueError(
+            f"on_fault={on_fault!r}: choose 'raise' or 'recover' "
+            "(or 'auto' to defer to REPRO_ON_FAULT)"
+        )
+    return on_fault
+
+
+class RecoveryController:
+    """Snapshot cadence + respawn/restore/replay policy for one engine.
+
+    Deliberately knows the engine only through its public protocol plus
+    three recovery hooks (``_run_epochs_raw``, ``_reopen``,
+    ``_handle_at``) — no launcher import, no ring knowledge."""
+
+    def __init__(self, engine, *, snapshot_every: int = 16,
+                 max_restarts: int = 3, backoff_s: float = 0.25):
+        self.engine = engine
+        self.snapshot_every = max(1, int(snapshot_every))
+        self.max_restarts = int(max_restarts)
+        self.backoff_s = float(backoff_s)
+        self.restarts = 0
+        self.snapshots = 0
+        self.recovered_epochs = 0
+        self._snapshot = None
+        self._snapshot_epoch = -1
+        self._ext_dirty = False
+        self._last_recovery: dict | None = None
+
+    # ------------------------------------------------- engine notifications
+    def note_reset(self) -> None:
+        """``init`` rewound the fleet — any snapshot is from a dead
+        timeline."""
+        self._snapshot = None
+        self._snapshot_epoch = -1
+        self._ext_dirty = False
+
+    def note_ext_io(self, state) -> None:
+        """Host pushed/popped an external ring: the snapshot's ext entries
+        are stale.  Cheap to note, repaired lazily before the next run."""
+        if self._snapshot is not None:
+            self._ext_dirty = True
+
+    def note_scatter(self) -> None:
+        """An explicit user restore replaced the fleet's history — the
+        snapshot no longer describes the current timeline."""
+        self._snapshot = None
+        self._snapshot_epoch = -1
+        self._ext_dirty = False
+
+    # ------------------------------------------------------------ main loop
+    def run_epochs(self, state, n_epochs: int):
+        """Chunked run: a command boundary (and a snapshot) on every
+        multiple of ``snapshot_every``; any recoverable fault inside a
+        chunk triggers respawn + restore + replay of that chunk."""
+        eng = self.engine
+        target = int(state.epoch) + int(n_epochs)
+        self._ensure_snapshot(state)
+        while int(state.epoch) < target:
+            here = int(state.epoch)
+            nxt = min(target, self._next_boundary(here))
+            try:
+                state = eng._run_epochs_raw(state, nxt - here)
+            except RECOVERABLE as fault:
+                state = self._recover(fault, state)
+                continue
+            if (int(state.epoch) % self.snapshot_every == 0
+                    and int(state.epoch) != self._snapshot_epoch):
+                self._take_snapshot(state)
+        return state
+
+    def _next_boundary(self, epoch: int) -> int:
+        return (epoch // self.snapshot_every + 1) * self.snapshot_every
+
+    # ------------------------------------------------------------ snapshots
+    def _take_snapshot(self, state) -> None:
+        self._snapshot = self.engine.gather_state(state)
+        self._snapshot_epoch = int(state.epoch)
+        self._ext_dirty = False
+        self.snapshots += 1
+
+    def _ensure_snapshot(self, state) -> None:
+        """Entering a run: make the snapshot describe the CURRENT quiesced
+        fleet, so a fault in the first chunk has something exact to
+        restore.  Host I/O since the last snapshot only touched the
+        external rings (the fleet was idle), so an unchanged epoch needs
+        only the cheap ext-entry refresh; a moved epoch (user scattered or
+        ran through another path) needs the full gather."""
+        if self._snapshot is None or int(state.epoch) != self._snapshot_epoch:
+            self._take_snapshot(state)
+        elif self._ext_dirty:
+            self._snapshot["ext"] = self.engine._gather_ext()
+            self._ext_dirty = False
+
+    # ------------------------------------------------------------- recovery
+    def _recover(self, fault, state):
+        eng = self.engine
+        self.restarts += 1
+        if self.restarts > self.max_restarts:
+            raise RuntimeError(
+                f"fleet recovery exhausted after {self.max_restarts} "
+                f"restart(s); last fault: {type(fault).__name__}: {fault}"
+            ) from fault
+        assert self._snapshot is not None  # _ensure_snapshot ran first
+        t0 = time.perf_counter()
+        delay = self.backoff_s * (2 ** (self.restarts - 1))
+        replay = int(state.epoch) - self._snapshot_epoch
+        print(
+            f"[recovery] {type(fault).__name__} at epoch >= "
+            f"{int(state.epoch)}: restart {self.restarts}/"
+            f"{self.max_restarts}, backoff {delay:.2f}s, restoring epoch "
+            f"{self._snapshot_epoch}",
+            file=sys.stderr, flush=True,
+        )
+        if delay > 0:
+            time.sleep(delay)
+        snap, snap_epoch = self._snapshot, self._snapshot_epoch
+        eng._reopen()
+        handle = eng._handle_at(snap_epoch)
+        handle = eng.scatter_state(handle, snap)
+        # scatter_state drops the snapshot (it can't tell a user restore
+        # from ours) — reinstate it: the restored fleet IS the snapshot
+        self._snapshot, self._snapshot_epoch = snap, int(handle.epoch)
+        self._ext_dirty = False
+        self.recovered_epochs += max(0, replay)
+        self._last_recovery = {
+            "fault": type(fault).__name__,
+            "restored_epoch": self._snapshot_epoch,
+            "confirmed_epochs_replayed": max(0, replay),
+            "backoff_s": delay,
+            "restore_seconds": time.perf_counter() - t0,
+        }
+        return handle
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        return {
+            "policy": self.engine.on_fault,
+            "restarts": self.restarts,
+            "max_restarts": self.max_restarts,
+            "snapshot_every": self.snapshot_every,
+            "snapshots": self.snapshots,
+            "last_snapshot_epoch": self._snapshot_epoch,
+            "recovered_epochs": self.recovered_epochs,
+            "incarnation": self.engine._incarnation,
+            "last_recovery": (dict(self._last_recovery)
+                              if self._last_recovery else None),
+        }

@@ -35,22 +35,70 @@ Blocking helpers (``push_wait`` / ``pop_wait``) spin with a short sleep
 and honor a deadline plus an optional liveness ``check`` callback, so a
 dead peer surfaces as ``RingTimeout`` (→ ``WorkerDiedError`` in the
 launcher) instead of a hang.
+
+Integrity (ISSUE 8): a ring created with ``checked=True`` prefixes every
+record with a ``[u32 seq][u32 crc32]`` header.  The producer stamps a
+monotonically increasing sequence number and the crc32 of the payload;
+the consumer verifies BOTH before the payload is used, so a torn write,
+a stray memory scribble, or a protocol slip (skipped/duplicated record)
+raises ``RingCorruptionError`` — naming the channel and the
+expected/actual values — instead of silently corrupting simulator state.
+The two sequence counters live in the shm header (producer's next to
+``head``, consumer's next to ``tail``) so both sides agree across
+processes; slab and host-port packet rings are checked, the 4-byte
+credit rings are not (their payload IS the protocol invariant, asserted
+by ``gather_state``).
 """
 from __future__ import annotations
 
 import time
+import zlib
 from multiprocessing import shared_memory
 from typing import Callable
 
 import numpy as np
 
 _HEAD_OFF = 0
+_PROD_SEQ_OFF = 8    # producer cache line, next to head
 _TAIL_OFF = 64
+_CONS_SEQ_OFF = 72   # consumer cache line, next to tail
 _DATA_OFF = 128
+_HDR_BYTES = 8       # [u32 seq][u32 crc32] per checked record
 
 
 class RingTimeout(RuntimeError):
     """A blocking ring operation exceeded its deadline."""
+
+
+class RingCorruptionError(RuntimeError):
+    """A checked ring record failed its sequence or crc32 verification.
+
+    Carries the channel label, the mismatch kind (``"seq"`` | ``"crc"``),
+    and the expected/actual values so the failure names exactly which
+    boundary channel went bad — routed into the recovery path by the
+    launcher (``repro.runtime.recovery``)."""
+
+    def __init__(self, channel: str, kind: str, expected: int, actual: int,
+                 seq: int | None = None):
+        self.channel = channel
+        self.kind = kind
+        self.expected = int(expected)
+        self.actual = int(actual)
+        self.seq = None if seq is None else int(seq)
+        if kind == "seq":
+            msg = (f"ring corruption on {channel}: record sequence expected "
+                   f"{self.expected}, got {self.actual}")
+        else:
+            msg = (f"ring corruption on {channel}: crc32 mismatch at seq "
+                   f"{self.seq} (expected {self.expected:#010x}, got "
+                   f"{self.actual:#010x})")
+        super().__init__(msg)
+
+    def to_payload(self) -> dict:
+        """Picklable reconstruction args (worker → launcher fault reply)."""
+        return {"channel": self.channel, "kind": self.kind,
+                "expected": self.expected, "actual": self.actual,
+                "seq": self.seq}
 
 
 def attach_shared_memory(name: str) -> shared_memory.SharedMemory:
@@ -87,39 +135,53 @@ class ShmRing:
     """
 
     def __init__(self, shm: shared_memory.SharedMemory, capacity: int,
-                 slot_bytes: int, *, owner: bool):
+                 slot_bytes: int, *, owner: bool, checked: bool = False,
+                 label: str = ""):
         self._shm = shm
         self.name = shm.name
         self.capacity = int(capacity)
-        self.slot_bytes = int(slot_bytes)
+        self.slot_bytes = int(slot_bytes)          # payload bytes per record
+        self.checked = bool(checked)
+        self.label = label or shm.name
+        self.stride = self.slot_bytes + (_HDR_BYTES if checked else 0)
         self._owner = owner
+        self._corrupt_next = False                 # fault-injection hook
         buf = shm.buf
         self._head = np.frombuffer(buf, np.uint32, count=1, offset=_HEAD_OFF)
         self._tail = np.frombuffer(buf, np.uint32, count=1, offset=_TAIL_OFF)
+        self._pseq = np.frombuffer(buf, np.uint32, count=1,
+                                   offset=_PROD_SEQ_OFF)
+        self._cseq = np.frombuffer(buf, np.uint32, count=1,
+                                   offset=_CONS_SEQ_OFF)
         self._slots = np.frombuffer(
-            buf, np.uint8, count=self.capacity * self.slot_bytes,
+            buf, np.uint8, count=self.capacity * self.stride,
             offset=_DATA_OFF,
-        ).reshape(self.capacity, self.slot_bytes)
+        ).reshape(self.capacity, self.stride)
 
     # ------------------------------------------------------------- lifecycle
     @classmethod
-    def create(cls, name: str, capacity: int, slot_bytes: int) -> "ShmRing":
+    def create(cls, name: str, capacity: int, slot_bytes: int, *,
+               checked: bool = False, label: str = "") -> "ShmRing":
         if capacity < 2:
             raise ValueError(f"ring capacity must be >= 2, got {capacity}")
-        size = _DATA_OFF + capacity * slot_bytes
+        stride = slot_bytes + (_HDR_BYTES if checked else 0)
+        size = _DATA_OFF + capacity * stride
         shm = shared_memory.SharedMemory(name=name, create=True, size=size)
         shm.buf[:_DATA_OFF] = bytes(_DATA_OFF)
-        ring = cls(shm, capacity, slot_bytes, owner=True)
+        ring = cls(shm, capacity, slot_bytes, owner=True, checked=checked,
+                   label=label)
         return ring
 
     @classmethod
-    def attach(cls, name: str, capacity: int, slot_bytes: int) -> "ShmRing":
+    def attach(cls, name: str, capacity: int, slot_bytes: int, *,
+               checked: bool = False, label: str = "") -> "ShmRing":
         return cls(attach_shared_memory(name), capacity, slot_bytes,
-                   owner=False)
+                   owner=False, checked=checked, label=label)
 
     def close(self) -> None:
         # Release numpy views before closing the mmap (else BufferError).
         self._head = self._tail = self._slots = None
+        self._pseq = self._cseq = None
         try:
             self._shm.close()
         except Exception:
@@ -156,6 +218,45 @@ class ShmRing:
         while no worker is running)."""
         self._head[0] = 0
         self._tail[0] = 0
+        self._pseq[0] = 0
+        self._cseq[0] = 0
+
+    # ----------------------------------------------------- integrity (ISSUE 8)
+    def corrupt_next_push(self) -> None:
+        """Fault injection: flip a payload byte of the NEXT pushed record
+        AFTER its crc is stamped, so the consumer's verification trips."""
+        self._corrupt_next = True
+
+    def _write_slot(self, h: int, view: np.ndarray) -> None:
+        """Write one record into slot ``h`` (checked layout: seq+crc hdr)."""
+        slot = self._slots[h]
+        if not self.checked:
+            slot[: view.size] = view
+            return
+        slot[_HDR_BYTES: _HDR_BYTES + view.size] = view
+        if view.size < self.slot_bytes:
+            slot[_HDR_BYTES + view.size:] = 0
+        seq = int(self._pseq[0])
+        crc = zlib.crc32(slot[_HDR_BYTES:].tobytes())
+        slot[0:4] = np.frombuffer(np.uint32(seq).tobytes(), np.uint8)
+        slot[4:8] = np.frombuffer(np.uint32(crc).tobytes(), np.uint8)
+        if self._corrupt_next:
+            self._corrupt_next = False
+            slot[_HDR_BYTES] ^= 0xFF
+        self._pseq[0] = np.uint32(seq + 1)
+
+    def _verify_slot(self, idx: int, expect_seq: int) -> None:
+        # Verify a COPY: a raising frame must not pin a live view of the
+        # shm buffer in its traceback (the mmap could never close).
+        rec = self._slots[idx].tobytes()
+        seq = int.from_bytes(rec[0:4], "little")
+        if seq != expect_seq % (1 << 32):
+            raise RingCorruptionError(self.label, "seq", expect_seq, seq)
+        crc_stored = int.from_bytes(rec[4:8], "little")
+        crc_actual = zlib.crc32(rec[_HDR_BYTES:])
+        if crc_stored != crc_actual:
+            raise RingCorruptionError(self.label, "crc", crc_stored,
+                                      crc_actual, seq=seq)
 
     # ------------------------------------------------------------- raw slots
     def push_bytes(self, payload) -> bool:
@@ -164,16 +265,23 @@ class ShmRing:
         if (h + 1) % self.capacity == t:
             return False
         view = np.frombuffer(payload, np.uint8)
-        self._slots[h, : view.size] = view
+        self._write_slot(h, view)
         self._head[0] = (h + 1) % self.capacity  # publish AFTER the payload
         return True
 
     def pop_bytes(self) -> bytes | None:
-        """Read one record (a copy).  Returns None when empty."""
+        """Read one record's payload (a copy).  Returns None when empty.
+        On a checked ring the record is verified BEFORE the payload is
+        returned (raises ``RingCorruptionError`` on mismatch)."""
         h, t = self.head, self.tail
         if h == t:
             return None
-        out = self._slots[t].tobytes()
+        if self.checked:
+            self._verify_slot(t, int(self._cseq[0]))
+            out = self._slots[t, _HDR_BYTES:].tobytes()
+            self._cseq[0] = np.uint32(int(self._cseq[0]) + 1)
+        else:
+            out = self._slots[t].tobytes()
         self._tail[0] = (t + 1) % self.capacity
         return out
 
@@ -221,7 +329,7 @@ class ShmRing:
         n = min(len(raw), self.free())
         h = self.head
         for i in range(n):  # small k (<= capacity-1); clarity over vectorizing
-            self._slots[(h + i) % self.capacity] = raw[i]
+            self._write_slot((h + i) % self.capacity, raw[i])
         if n:
             self._head[0] = (h + n) % self.capacity
         return n
@@ -229,16 +337,25 @@ class ShmRing:
     def peek_packets(self, max_n: int, dtype, words: int) -> np.ndarray:
         """Read up to ``max_n`` packets WITHOUT consuming them — the caller
         commits with ``advance(n)`` after it knows how many landed
-        downstream (partial host-tier ingest)."""
+        downstream (partial host-tier ingest).  Checked rings verify every
+        peeked record (seq + crc) before returning payloads."""
         n = min(max_n, self.size())
         t = self.tail
         idx = (t + np.arange(n)) % self.capacity
-        raw = self._slots[idx]
+        if self.checked:
+            base = int(self._cseq[0])
+            for j in range(n):
+                self._verify_slot(int(idx[j]), base + j)
+            raw = np.ascontiguousarray(self._slots[idx][:, _HDR_BYTES:])
+        else:
+            raw = self._slots[idx]
         return raw.view(np.dtype(dtype)).reshape(n, words).copy()
 
     def advance(self, n: int) -> None:
         """Consume ``n`` records previously ``peek``ed."""
         if n:
+            if self.checked:
+                self._cseq[0] = np.uint32(int(self._cseq[0]) + n)
             self._tail[0] = (self.tail + n) % self.capacity
     def pop_packets(self, max_n: int, dtype, words: int) -> np.ndarray:
         out = self.peek_packets(max_n, dtype, words)
@@ -275,16 +392,29 @@ class ShmRing:
                                  np.uint32, count=1)[0])
 
     # --------------------------------------------- checkpoint gather-scatter
+    def seq_state(self) -> tuple[int, int]:
+        """(producer_seq, consumer_seq) — captured alongside ``snapshot()``
+        so a restore into a FRESH segment (fleet respawn) resumes the exact
+        sequence-number timeline and stays bit-identical to a fault-free
+        run."""
+        return int(self._pseq[0]), int(self._cseq[0])
+
     def snapshot(self) -> np.ndarray:
         """Resident records, oldest first, WITHOUT consuming them —
-        (size, slot_bytes) u8.  Single-threaded use only (session rest)."""
+        (size, stride) u8 (checked rings include the seq+crc headers).
+        Single-threaded use only (session rest)."""
         n = self.size()
         idx = (self.tail + np.arange(n)) % self.capacity
         return self._slots[idx].copy()
 
-    def restore(self, records: np.ndarray) -> None:
-        """Replace the ring contents with ``records`` ((k, slot_bytes) u8)."""
-        records = np.asarray(records, np.uint8).reshape(-1, self.slot_bytes)
+    def restore(self, records: np.ndarray,
+                seq: tuple[int, int] | None = None) -> None:
+        """Replace the ring contents with ``records`` ((k, stride) u8).
+
+        For a checked ring, ``seq`` restores the exact producer/consumer
+        sequence counters (from ``seq_state()``); without it they are
+        resynced from the resident records' headers (0 when empty)."""
+        records = np.asarray(records, np.uint8).reshape(-1, self.stride)
         if len(records) > self.capacity - 1:
             raise ValueError(
                 f"{len(records)} records > ring capacity-1={self.capacity - 1}"
@@ -292,10 +422,19 @@ class ShmRing:
         self.reset()
         self._slots[: len(records)] = records
         self._head[0] = len(records)
+        if self.checked:
+            if seq is not None:
+                self._pseq[0] = np.uint32(seq[0])
+                self._cseq[0] = np.uint32(seq[1])
+            elif len(records):
+                first = int.from_bytes(records[0, 0:4].tobytes(), "little")
+                self._cseq[0] = np.uint32(first)
+                self._pseq[0] = np.uint32(first + len(records))
 
     def __repr__(self):
-        return (f"ShmRing({self.name!r}, {self.size()}/{self.capacity - 1} "
-                f"x {self.slot_bytes}B)")
+        kind = "checked " if self.checked else ""
+        return (f"ShmRing({self.label!r}, {kind}{self.size()}/"
+                f"{self.capacity - 1} x {self.slot_bytes}B)")
 
 
 def slab_slot_bytes(E: int, W: int, itemsize: int) -> int:

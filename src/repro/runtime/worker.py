@@ -48,7 +48,10 @@ import numpy as np
 
 from ..core import queue as qmod
 from ..core.struct import pytree_dataclass
-from .shmem import ShmRing, slab_slot_bytes
+from .fault_tolerance import (
+    OP_CREDIT_POP, OP_CREDIT_PUSH, OP_SLAB_POP, OP_SLAB_PUSH, encode_blocked,
+)
+from .shmem import RingCorruptionError, RingTimeout, ShmRing, slab_slot_bytes
 
 PyTree = Any
 
@@ -594,16 +597,24 @@ class WorkerState:
 class Worker:
     """The free-running process: rings + compiled steppers + command loop."""
 
-    def __init__(self, spec: GranuleSpec, conn, hb: np.ndarray | None):
+    def __init__(self, spec: GranuleSpec, conn, hb: np.ndarray | None,
+                 faults=()):
         self.spec = spec
         self.conn = conn
-        self.hb = hb  # (2,) f64 view: [epochs_completed, wallclock]
+        # (4,) f64 view: [epochs_completed, wallclock, blocked-status, spare]
+        self.hb = hb
         self.sim = GranuleSim(spec)
         self.state = None
         self.epochs_done = 0
         self.timeout = spec.timeout
+        # Ring waits get twice the launcher's heartbeat timeout: when the
+        # whole fleet blocks (deadlock), the launcher's stall diagnoser
+        # fires FIRST and names the credit cycle; the worker-side
+        # RingTimeout is the backstop, not the headline diagnosis.
+        self.ring_timeout = spec.timeout * 2
         self.wait_s = 0.0  # time blocked on peer rings (credits/slabs)
         self.run_s = 0.0  # wallclock inside "run" commands
+        self._init_faults(faults)
         cap_b = spec.capacity
         itemsize = np.dtype(spec.dtype).itemsize
         self.rings: dict[tuple[str, int], ShmRing] = {}
@@ -612,6 +623,7 @@ class Worker:
                 self.rings[("d", c)] = ShmRing.attach(
                     data_ring_name(spec.ring_prefix, c),
                     spec.ring_depth + 1, slab_slot_bytes(ts.E, spec.payload_words, itemsize),
+                    checked=True, label=f"slab:c{c}",
                 )
                 self.rings[("c", c)] = ShmRing.attach(
                     credit_ring_name(spec.ring_prefix, c),
@@ -621,12 +633,38 @@ class Worker:
             self.rings[("x", chan)] = ShmRing.attach(
                 ext_ring_name(spec.ring_prefix, chan),
                 cap_b, spec.payload_words * itemsize,
+                checked=True, label=f"ext:{name}",
             )
 
+    def _init_faults(self, faults) -> None:
+        from .faultinject import WorkerFaultInjector
+
+        self.injector = WorkerFaultInjector(faults) if faults else None
+        self.slow_per_epoch = 0.0  # faultinject "slow" straggler knob
+        self.hb_muted = False      # faultinject "mute" (drop heartbeats)
+
+    def corruptible_ring(self, chan: int | None) -> ShmRing:
+        """The data ring a ``corrupt`` fault targets: the given channel, or
+        this worker's first egress channel when unspecified."""
+        if chan is None:
+            for ts in self.spec.tiers:
+                if ts.egress_chans:
+                    chan = ts.egress_chans[0]
+                    break
+        if chan is None or ("d", chan) not in self.rings:
+            raise ValueError(f"no corruptible data ring for channel {chan}")
+        return self.rings[("d", chan)]
+
     def beat(self) -> None:
-        if self.hb is not None:
+        if self.hb is not None and not self.hb_muted:
             self.hb[0] = float(self.epochs_done)
             self.hb[1] = time.time()
+
+    def _set_status(self, code: int) -> None:
+        """Publish "blocked on ring X" (0 = running) in the heartbeat shm —
+        the raw material of the launcher's credit wait-for graph."""
+        if self.hb is not None:
+            self.hb[2] = float(code)
 
     def _probe(self, gi: int, slot: int, row: int):
         import jax
@@ -681,16 +719,25 @@ class Worker:
                 landed = ring.push_packets(np.asarray(pays)[:cnt])
                 assert landed == cnt  # room was the drain limit
 
-    def _timed(self, fn, *args):
+    def _timed(self, fn, *args, status: int = 0):
         """Run one potentially-blocking ring op, accumulating its wallclock
         into ``wait_s`` (the procs blocking-wait metric; same accounting in
-        serial and overlapped schedules, so the fraction is comparable)."""
+        serial and overlapped schedules, so the fraction is comparable).
+        ``status`` publishes the blocked-on-ring word for the stall
+        diagnoser; deliberately left set when the op raises, so a timed-out
+        worker's last status word names the ring it died waiting on."""
+        if status:
+            self._set_status(status)
         t0 = time.perf_counter()
-        out = fn(*args)
-        self.wait_s += time.perf_counter() - t0
+        try:
+            out = fn(*args)
+        finally:
+            self.wait_s += time.perf_counter() - t0
+        if status:
+            self._set_status(0)
         return out
 
-    def _pop_order(self, rings):
+    def _pop_order(self, rings, codes=None):
         """Yield ring indices as each becomes non-empty (round-robin poll):
         the receive-late fill consumes whichever peer's slab lands first
         instead of serializing on channel order.  Poll time with no ring
@@ -698,7 +745,7 @@ class Worker:
         indices are yielded so the blocking pop raises ``RingTimeout``
         with its usual diagnostics."""
         pending = list(range(len(rings)))
-        deadline = time.monotonic() + self.timeout
+        deadline = time.monotonic() + self.ring_timeout
         delay = 20e-6
         while pending:
             progressed = False
@@ -712,10 +759,14 @@ class Worker:
                     while pending:
                         yield pending.pop(0)
                     return
+                if codes is not None:
+                    self._set_status(codes[pending[0]])
                 t0 = time.perf_counter()
                 time.sleep(delay)
                 delay = min(delay * 2, 1e-3)
                 self.wait_s += time.perf_counter() - t0
+        if codes is not None:
+            self._set_status(0)
 
     def _exchange_issue(self, t: int) -> None:
         """Window-end send: pop credits, drain egress queues, push slabs."""
@@ -726,7 +777,9 @@ class Worker:
         # pop one credit per egress channel: the receiver's post-fill
         # free space from the PREVIOUS exchange (seeded capacity-1)
         creds = np.array(
-            [self._timed(self.rings[("c", c)].pop_u32_wait, self.timeout)
+            [self._timed(self.rings[("c", c)].pop_u32_wait,
+                         self.ring_timeout,
+                         status=encode_blocked(OP_CREDIT_POP, c))
              for c in ts.egress_chans],
             np.int32,
         )
@@ -737,7 +790,8 @@ class Worker:
         cnt = np.asarray(cnt)
         for i, c in enumerate(ts.egress_chans):
             self._timed(self.rings[("d", c)].push_slab_wait,
-                        int(cnt[i]), slab[i], self.timeout)
+                        int(cnt[i]), slab[i], self.ring_timeout,
+                        status=encode_blocked(OP_SLAB_PUSH, c))
 
     def _exchange_commit(self, t: int) -> None:
         """Receive-late fill: pop slabs (first-ready order), fill ingress
@@ -750,13 +804,16 @@ class Worker:
         slab_in = np.zeros((n_in, ts.E, self.sim.W), self.sim.np_dtype)
         cnt_in = np.zeros((n_in,), np.int32)
         rings = [self.rings[("d", c)] for c in ts.ingress_chans]
+        codes = [encode_blocked(OP_SLAB_POP, c) for c in ts.ingress_chans]
         # receive-late is part of the overlap feature; the serial schedule
         # keeps strict channel-order blocking pops (the honest baseline)
-        order = self._pop_order(rings) if self.spec.overlap else range(n_in)
+        order = (self._pop_order(rings, codes) if self.spec.overlap
+                 else range(n_in))
         for i in order:
             cnt_in[i], slab_in[i] = self._timed(
                 rings[i].pop_slab_wait,
-                (ts.E, self.sim.W), self.sim.np_dtype, self.timeout,
+                (ts.E, self.sim.W), self.sim.np_dtype, self.ring_timeout,
+                status=codes[i],
             )
         self.state, free = self.sim._compiled[("F", t)](
             self.state, jnp.asarray(slab_in), jnp.asarray(cnt_in)
@@ -764,13 +821,20 @@ class Worker:
         free = np.asarray(free)
         for i, c in enumerate(ts.ingress_chans):
             self._timed(self.rings[("c", c)].push_u32,
-                        int(free[i]), self.timeout)
+                        int(free[i]), self.ring_timeout,
+                        status=encode_blocked(OP_CREDIT_PUSH, c))
 
     def _exchange(self, t: int) -> None:
         self._exchange_issue(t)
         self._exchange_commit(t)
 
     def one_epoch(self) -> None:
+        if self.injector is not None:
+            # plan-driven faults fire at deterministic LOCAL epoch numbers,
+            # before any of this epoch's effects — reproducible drills
+            self.injector.before_epoch(self)
+        if self.slow_per_epoch:
+            time.sleep(self.slow_per_epoch)
         self._ingest_ext()
         for op, arg in self.sim.program:
             if op == "C":
@@ -840,6 +904,19 @@ class Worker:
                     return
                 else:
                     self.conn.send(("err", f"unknown command {op!r}"))
+            except (RingCorruptionError, RingTimeout) as e:
+                # recoverable fleet faults travel as a typed "fault" reply
+                # (not a generic traceback) so the launcher can rebuild the
+                # exception and route it into the recovery path
+                sys.stderr.write(traceback.format_exc())
+                sys.stderr.flush()
+                payload = {"error": type(e).__name__, "message": str(e)}
+                if isinstance(e, RingCorruptionError):
+                    payload["args"] = e.to_payload()
+                try:
+                    self.conn.send(("fault", payload))
+                except Exception:
+                    return
             except Exception:  # noqa: BLE001 — reported to the launcher
                 sys.stderr.write(traceback.format_exc())
                 sys.stderr.flush()
@@ -880,7 +957,8 @@ class BatchedWorker(Worker):
     chain already admits), so traffic stays bit-identical to per-granule
     workers."""
 
-    def __init__(self, bspec: BatchSpec, conn, hb: np.ndarray | None):
+    def __init__(self, bspec: BatchSpec, conn, hb: np.ndarray | None,
+                 faults=()):
         self.bspec = bspec
         self.specs = bspec.specs
         self.spec = bspec.specs[0]  # shared scalars (capacity/W/rings/...)
@@ -890,8 +968,10 @@ class BatchedWorker(Worker):
         self.state = None
         self.epochs_done = 0
         self.timeout = self.spec.timeout
+        self.ring_timeout = self.spec.timeout * 2
         self.wait_s = 0.0
         self.run_s = 0.0
+        self._init_faults(faults)
         itemsize = np.dtype(self.spec.dtype).itemsize
         self.rings: dict[tuple[str, int], ShmRing] = {}
         for s in self.specs:
@@ -903,6 +983,7 @@ class BatchedWorker(Worker):
                         data_ring_name(s.ring_prefix, c),
                         s.ring_depth + 1,
                         slab_slot_bytes(ts.E, s.payload_words, itemsize),
+                        checked=True, label=f"slab:c{c}",
                     )
                     self.rings[("c", c)] = ShmRing.attach(
                         credit_ring_name(s.ring_prefix, c),
@@ -913,6 +994,7 @@ class BatchedWorker(Worker):
                     self.rings[("x", chan)] = ShmRing.attach(
                         ext_ring_name(s.ring_prefix, chan),
                         s.capacity, s.payload_words * itemsize,
+                        checked=True, label=f"ext:{name}",
                     )
 
     def _probe(self, gi: int, slot: int, row: int):
@@ -968,7 +1050,9 @@ class BatchedWorker(Worker):
         if not rows[0].egress_chans:
             return
         creds = np.array(
-            [[self._timed(self.rings[("c", c)].pop_u32_wait, self.timeout)
+            [[self._timed(self.rings[("c", c)].pop_u32_wait,
+                          self.ring_timeout,
+                          status=encode_blocked(OP_CREDIT_POP, c))
               for c in ts.egress_chans] for ts in rows],
             np.int32,
         )
@@ -980,7 +1064,8 @@ class BatchedWorker(Worker):
         for r, ts in enumerate(rows):
             for i, c in enumerate(ts.egress_chans):
                 self._timed(self.rings[("d", c)].push_slab_wait,
-                            int(cnt[r, i]), slab[r, i], self.timeout)
+                            int(cnt[r, i]), slab[r, i], self.ring_timeout,
+                            status=encode_blocked(OP_SLAB_PUSH, c))
 
     def _exchange_commit(self, t: int) -> None:
         jnp = self.sim.jnp
@@ -992,16 +1077,18 @@ class BatchedWorker(Worker):
         slab_in = np.zeros((nb, n_in, rows[0].E, self.sim.W),
                            self.sim.np_dtype)
         cnt_in = np.zeros((nb, n_in), np.int32)
-        flat = [(r, i, self.rings[("d", c)])
+        flat = [(r, i, c, self.rings[("d", c)])
                 for r, ts in enumerate(rows)
                 for i, c in enumerate(ts.ingress_chans)]
-        order = (self._pop_order([ring for _, _, ring in flat])
+        codes = [encode_blocked(OP_SLAB_POP, c) for _, _, c, _ in flat]
+        order = (self._pop_order([ring for _, _, _, ring in flat], codes)
                  if self.spec.overlap else range(len(flat)))
         for k in order:
-            r, i, ring = flat[k]
+            r, i, c, ring = flat[k]
             cnt_in[r, i], slab_in[r, i] = self._timed(
                 ring.pop_slab_wait,
-                (rows[r].E, self.sim.W), self.sim.np_dtype, self.timeout,
+                (rows[r].E, self.sim.W), self.sim.np_dtype,
+                self.ring_timeout, status=codes[k],
             )
         self.state, free = self.sim._compiled[("F", t)](
             self.state, jnp.asarray(slab_in), jnp.asarray(cnt_in)
@@ -1010,7 +1097,8 @@ class BatchedWorker(Worker):
         for r, ts in enumerate(rows):
             for i, c in enumerate(ts.ingress_chans):
                 self._timed(self.rings[("c", c)].push_u32,
-                            int(free[r, i]), self.timeout)
+                            int(free[r, i]), self.ring_timeout,
+                            status=encode_blocked(OP_CREDIT_PUSH, c))
 
     def _stats(self) -> list[dict]:
         import jax
@@ -1043,13 +1131,32 @@ class BatchedWorker(Worker):
         return out
 
 
+HB_RECORD_BYTES = 32  # per-worker heartbeat: [epochs, wallclock, status, _]
+HB_RECORD_F64 = HB_RECORD_BYTES // 8
+
+
 def worker_entry(conn, spec_pickle: bytes, worker_index: int,
                  log_path: str | None, cache_dir: str | None,
-                 hb_ring_name: str | None) -> None:
+                 hb_ring_name: str | None,
+                 faults_pickle: bytes | None = None) -> None:
     """Process entry point (spawn context).  Builds the granule simulator
     (hitting the persistent compilation cache warmed by the launcher's
-    prebuild pass), then serves the command loop until "exit"."""
+    prebuild pass), then serves the command loop until "exit".
+    ``faults_pickle`` carries this worker's armed ``FaultAction``s for the
+    current fleet incarnation (drills; empty in production)."""
     import pickle
+
+    # Pin the single-CPU-device env HERE, not only in the parent: under
+    # the forkserver context the child inherits the server's frozen env,
+    # and XLA reads these at backend init (first use), which is always
+    # after this point — no backend exists pre-fork.
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    _flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+              if "xla_force_host_platform_device_count" not in f]
+    if _flags:
+        os.environ["XLA_FLAGS"] = " ".join(_flags)
+    else:
+        os.environ.pop("XLA_FLAGS", None)
 
     if log_path:
         f = open(log_path, "w", buffering=1)
@@ -1060,6 +1167,7 @@ def worker_entry(conn, spec_pickle: bytes, worker_index: int,
     try:
         configure_compile_cache(cache_dir)
         spec = pickle.loads(spec_pickle)
+        faults = pickle.loads(faults_pickle) if faults_pickle else ()
         if isinstance(spec, BatchSpec):
             print(f"[worker {worker_index}] granules {spec.members} "
                   f"signature {spec.signature} starting (batched)",
@@ -1067,21 +1175,35 @@ def worker_entry(conn, spec_pickle: bytes, worker_index: int,
         else:
             print(f"[worker {worker_index}] granule {spec.granule} "
                   f"signature {spec.signature} starting", flush=True)
-        hb = None
+        if faults:
+            print(f"[worker {worker_index}] armed faults: {faults}",
+                  flush=True)
+        hb = hb_shm = None
         if hb_ring_name:
             from .shmem import attach_shared_memory
 
             hb_shm = attach_shared_memory(hb_ring_name)
             hb = np.frombuffer(
-                hb_shm.buf, np.float64, count=2, offset=worker_index * 16
+                hb_shm.buf, np.float64, count=HB_RECORD_F64,
+                offset=worker_index * HB_RECORD_BYTES,
             )
-        w = (BatchedWorker(spec, conn, hb) if isinstance(spec, BatchSpec)
-             else Worker(spec, conn, hb))
+        w = (BatchedWorker(spec, conn, hb, faults)
+             if isinstance(spec, BatchSpec)
+             else Worker(spec, conn, hb, faults))
         build = w.sim.prebuild()
         print(f"[worker {worker_index}] prebuilt {build['n_functions']} fns "
               f"in {build['seconds']:.2f}s", flush=True)
         conn.send(("ready", build))
         w.serve()
+        # release every live view of shm before interpreter exit, or the
+        # segments' __del__ dies with "cannot close: exported pointers
+        # exist" noise in the worker log
+        for ring in w.rings.values():
+            ring.close()
+        w.hb = None
+        hb = None
+        if hb_shm is not None:
+            hb_shm.close()
         print(f"[worker {worker_index}] clean exit", flush=True)
     except Exception:  # noqa: BLE001
         traceback.print_exc()

@@ -1,0 +1,321 @@
+"""Self-healing procs fleet (ISSUE 8; DESIGN.md §Fault tolerance).
+
+Covered here:
+
+  * the kill-drill property test: SIGKILL one worker at a random epoch
+    (3 seeds) under ``on_fault="recover"`` — the host-visible traffic AND
+    the final gathered state tree are bit-identical to a fault-free run
+    of the same script, and the stats report exactly one restart;
+  * the same bit-exactness for a ``corrupt`` drill (flipped byte on a
+    checked slab ring -> ``RingCorruptionError`` -> heal);
+  * fast detection of a CLEAN worker exit (exitcode 0) while replies are
+    pending — the ISSUE 8 ``ProcessMonitor`` satellite;
+  * ``RingCorruptionError`` surfaced (not hung) under the default
+    ``on_fault="raise"`` policy;
+  * deadlock diagnosis: a 2-worker credit ring with one credit stolen
+    stalls fleet-wide and raises ``FleetStallError`` naming the cycle;
+  * restart budget: a replay-time re-kill (``:r1``) with
+    ``max_restarts=1`` exhausts recovery into a RuntimeError chained to
+    the underlying fault;
+  * snapshot cadence accounting (``snapshot_every`` boundaries + run-
+    entry snapshots) via ``fault_stats()``;
+  * checked ``ShmRing`` units: stride/header layout, crc + seq mismatch
+    detection, and the ``seq_state()``/``restore(seq=...)`` roundtrip
+    into a fresh segment;
+  * fault-plan grammar and env-knob precedence units.
+"""
+import os
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.runtime import (
+    FleetStallError, ProcsEngine, RingCorruptionError, ShmRing,
+    WorkerDiedError, parse_fault_plan, resolve_on_fault,
+)
+from repro.runtime.faultinject import FaultAction, actions_for
+from repro.runtime.worker import credit_ring_name
+
+from test_session import Increment, build_chain, io_script
+
+_TIMEOUT = 60.0  # generous: 2-CPU CI boxes timeshare the workers
+
+
+def procs_build(net, **kw):
+    kw.setdefault("timeout", _TIMEOUT)
+    return net.build(engine="procs", **kw)
+
+
+@pytest.fixture
+def closing():
+    sims = []
+    yield sims.append
+    for sim in sims:
+        try:
+            sim.engine.close()
+        except Exception:
+            pass
+
+
+def _assert_trees_equal(ref, got):
+    ref_leaves, ref_def = jax.tree_util.tree_flatten(ref)
+    got_leaves, got_def = jax.tree_util.tree_flatten(got)
+    assert ref_def == got_def
+    for a, b in zip(ref_leaves, got_leaves):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _drill(closing, seed, fault_plan):
+    """Run the io_script on a fault-free fleet and on a self-healing
+    fleet with ``fault_plan`` injected; both must be bit-identical."""
+    ref = procs_build(build_chain(3, capacity=4),
+                      n_workers=2, partition=[0, 0, 1], K=1)
+    closing(ref)
+    ref.reset(0)
+    ref_trace = io_script(ref, n_steps=8, seed=seed)
+    ref_tree = ref.engine.gather_state(ref.state)
+    ref.engine.close()
+
+    sim = procs_build(build_chain(3, capacity=4),
+                      n_workers=2, partition=[0, 0, 1], K=1,
+                      on_fault="recover", snapshot_every=2, backoff_s=0.0,
+                      fault_plan=fault_plan)
+    closing(sim)
+    sim.reset(0)
+    trace = io_script(sim, n_steps=8, seed=seed)
+    tree = sim.engine.gather_state(sim.state)
+
+    assert len(ref_trace) == len(trace)
+    for step, (a, b) in enumerate(zip(ref_trace, trace)):
+        np.testing.assert_array_equal(a, b, err_msg=f"boundary {step}")
+    _assert_trees_equal(ref_tree, tree)
+    return sim
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_kill_recovery_bit_identical(closing, seed):
+    """SIGKILL one worker at a seed-dependent epoch: the fleet respawns,
+    restores the last coordinated snapshot, replays, and the host sees a
+    timeline bit-identical to the fault-free run."""
+    kill_epoch = 3 + 2 * seed
+    sim = _drill(closing, seed, f"kill:1@{kill_epoch}")
+    faults = sim.stats()["faults"]  # session wiring: stats()["faults"]
+    assert faults["policy"] == "recover"
+    assert faults["restarts"] == 1
+    assert faults["incarnation"] == 1
+    assert faults["last_recovery"]["fault"] == "WorkerDiedError"
+
+
+def test_corruption_recovery_bit_identical(closing):
+    """A flipped byte on a checked slab ring is detected by crc32, the
+    fleet is rebuilt, and the healed timeline is bit-identical."""
+    sim = _drill(closing, 1, "corrupt:0@3")
+    faults = sim.stats()["faults"]
+    assert faults["restarts"] == 1
+    assert faults["last_recovery"]["fault"] == "RingCorruptionError"
+
+
+def test_clean_exit_detected_fast(closing):
+    """exitcode 0 while replies are pending is a fault, detected by the
+    liveness poll (not the slow heartbeat timeout)."""
+    sim = procs_build(build_chain(3, capacity=4),
+                      n_workers=2, partition=[0, 0, 1], K=1,
+                      fault_plan="exit0:1@2")
+    closing(sim)
+    sim.reset(0)
+    t0 = time.monotonic()
+    with pytest.raises(WorkerDiedError, match="exited cleanly") as ei:
+        sim.run(cycles=8 * sim.period)
+    assert ei.value.worker == 1
+    assert time.monotonic() - t0 < _TIMEOUT / 2  # poll, not timeout
+    assert sim.engine._closed
+
+
+def test_corruption_raises_by_default(closing):
+    """Under on_fault="raise" a checked-ring mismatch surfaces as a typed
+    RingCorruptionError naming the channel — never a hang."""
+    sim = procs_build(build_chain(3, capacity=4),
+                      n_workers=2, partition=[0, 0, 1], K=1,
+                      fault_plan="corrupt:0@2")
+    closing(sim)
+    sim.reset(0)
+    with pytest.raises(RingCorruptionError, match="crc32 mismatch"):
+        sim.run(cycles=8 * sim.period)
+    assert sim.engine._closed
+
+
+def test_fleet_stall_diagnosed(closing):
+    """Two workers in a credit ring with one credit stolen deadlock; the
+    monitor decodes the per-worker status words into a wait-for cycle and
+    raises FleetStallError naming it (instead of blaming one worker)."""
+    from repro.core import Network
+    net = Network(payload_words=2, capacity=4)
+    blk = Increment()
+    a = net.instantiate(blk, name="a")
+    b = net.instantiate(blk, name="b")
+    net.connect(a["from_rtl"], b["to_rtl"])
+    net.connect(b["from_rtl"], a["to_rtl"])
+    sim = net.build(engine="procs", n_workers=2, partition=[0, 1], K=1,
+                    timeout=4.0)
+    closing(sim)
+    sim.reset(0)
+    eng = sim.engine
+    _, chans = sorted(eng.lowering.routes.items())[0]
+    eng._rings[credit_ring_name(eng._ring_prefix, chans[0])].pop_bytes()
+    t0 = time.monotonic()
+    with pytest.raises(FleetStallError, match="credit wait-for cycle") as ei:
+        eng.run_epochs(sim.state, 40)
+    assert time.monotonic() - t0 < _TIMEOUT
+    assert set(ei.value.cycle) == {0, 1}
+    assert any("credit-pop" in d or "slab-pop" in d for d in ei.value.details)
+    assert eng._closed
+
+
+def test_recovery_exhaustion(closing):
+    """A replay-time re-kill (incarnation 1) with max_restarts=1 must
+    exhaust the restart budget loudly, chaining the underlying fault."""
+    sim = procs_build(build_chain(3, capacity=4),
+                      n_workers=2, partition=[0, 0, 1], K=1,
+                      on_fault="recover", snapshot_every=2, backoff_s=0.0,
+                      max_restarts=1,
+                      fault_plan="kill:1@3, kill:1@3:r1")
+    closing(sim)
+    sim.reset(0)
+    with pytest.raises(RuntimeError, match="recovery exhausted") as ei:
+        sim.run(cycles=8 * sim.period)
+    assert isinstance(ei.value.__cause__, WorkerDiedError)
+    faults = sim.engine.fault_stats()
+    assert faults["restarts"] == 2  # the exhausting attempt is counted
+
+
+def test_snapshot_cadence(closing):
+    """Snapshots land on every multiple of snapshot_every plus one at
+    each run entry (the run-entry snapshot makes the first chunk
+    restorable)."""
+    sim = procs_build(build_chain(3, capacity=4),
+                      n_workers=2, partition=[0, 0, 1], K=1,
+                      on_fault="recover", snapshot_every=4)
+    closing(sim)
+    sim.reset(0)
+    eng = sim.engine
+    state = eng.run_epochs(sim.state, 10)  # entry@0 + boundaries 4, 8
+    faults = eng.fault_stats()
+    assert faults["snapshots"] == 3
+    assert faults["last_snapshot_epoch"] == 8
+    eng.run_epochs(state, 6)               # entry@10 + boundaries 12, 16
+    faults = eng.fault_stats()
+    assert faults["snapshots"] == 6
+    assert faults["last_snapshot_epoch"] == 16
+    assert faults["restarts"] == 0
+
+
+# --------------------------------------------------- checked ShmRing units
+def _checked_ring(tag, cap=4, slot=8):
+    return ShmRing.create(f"t_chk_{tag}_{os.getpid()}", cap, slot,
+                          checked=True, label=f"unit:{tag}")
+
+
+def test_checked_ring_roundtrip():
+    ring = _checked_ring("rt")
+    try:
+        assert ring.stride == ring.slot_bytes + 8  # [seq][crc] header
+        for i in range(10):  # wraps the 4-slot ring twice
+            assert ring.push_bytes(bytes([i]) * 8)
+            assert ring.pop_bytes() == bytes([i]) * 8
+        assert ring.seq_state() == (10, 10)
+    finally:
+        ring.close()
+
+
+def test_checked_ring_crc_detection():
+    ring = _checked_ring("crc")
+    try:
+        assert ring.push_bytes(b"\x01" * 8)
+        ring.corrupt_next_push()
+        assert ring.push_bytes(b"\x02" * 8)
+        assert ring.pop_bytes() == b"\x01" * 8
+        with pytest.raises(RingCorruptionError, match="unit:crc.*crc32") as ei:
+            ring.pop_bytes()
+        assert ei.value.kind == "crc"
+        assert ei.value.seq == 1
+    finally:
+        ring.close()
+
+
+def test_checked_ring_seq_detection():
+    ring = _checked_ring("seq")
+    try:
+        assert ring.push_bytes(b"\x03" * 8)
+        # Tamper with the stored sequence number (checked before the crc,
+        # so this models a replayed/reordered record, not a bit flip).
+        ring._slots[0, 0:4] = np.frombuffer(np.uint32(7).tobytes(), np.uint8)
+        with pytest.raises(RingCorruptionError, match="sequence") as ei:
+            ring.pop_bytes()
+        assert ei.value.kind == "seq"
+        assert ei.value.expected == 0 and ei.value.actual == 7
+    finally:
+        ring.close()
+
+
+def test_checked_ring_seq_restore_roundtrip():
+    """snapshot()+seq_state() restored into a FRESH segment resumes the
+    exact seq timeline — the property fleet respawn depends on."""
+    ring = _checked_ring("src")
+    try:
+        for i in range(5):
+            assert ring.push_bytes(bytes([i]) * 8)
+            if i < 3:
+                assert ring.pop_bytes() == bytes([i]) * 8
+        records, seq = ring.snapshot(), ring.seq_state()
+        assert seq == (5, 3) and len(records) == 2
+    finally:
+        ring.close()
+    fresh = _checked_ring("dst")
+    try:
+        fresh.restore(records, seq=seq)
+        assert fresh.seq_state() == (5, 3)
+        assert fresh.pop_bytes() == bytes([3]) * 8
+        assert fresh.push_bytes(bytes([5]) * 8)  # continues at seq 5
+        assert fresh.pop_bytes() == bytes([4]) * 8
+        assert fresh.pop_bytes() == bytes([5]) * 8
+        assert fresh.seq_state() == (6, 6)
+    finally:
+        fresh.close()
+
+
+# ------------------------------------------------- plan grammar + env knobs
+def test_fault_plan_grammar():
+    plan = parse_fault_plan("kill:1@5, corrupt:0@2:c7 slow:1@2:0.05:r1")
+    assert plan == (
+        FaultAction("kill", 1, 5),
+        FaultAction("corrupt", 0, 2, 7.0),
+        FaultAction("slow", 1, 2, 0.05, restart=1),
+    )
+    assert actions_for(plan, 1, 0) == (FaultAction("kill", 1, 5),)
+    assert actions_for(plan, 1, 1) == (FaultAction("slow", 1, 2, 0.05,
+                                                   restart=1),)
+    assert actions_for(plan, 2, 0) == ()
+    with pytest.raises(ValueError, match="bad fault-plan token"):
+        parse_fault_plan("kill:1")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        parse_fault_plan("melt:1@5")
+
+
+def test_on_fault_env_precedence(monkeypatch):
+    monkeypatch.delenv("REPRO_ON_FAULT", raising=False)
+    assert resolve_on_fault() == "raise"
+    monkeypatch.setenv("REPRO_ON_FAULT", "recover")
+    assert resolve_on_fault() == "recover"
+    assert resolve_on_fault("raise") == "raise"  # explicit arg wins
+    with pytest.raises(ValueError, match="on_fault"):
+        resolve_on_fault("retry")
+
+
+def test_fault_plan_validates_workers():
+    """A plan naming a worker outside the fleet is a build-time error."""
+    with pytest.raises(ValueError, match="fault plan"):
+        procs_build(build_chain(3, capacity=4),
+                    n_workers=2, partition=[0, 0, 1], K=1,
+                    fault_plan="kill:7@3")
