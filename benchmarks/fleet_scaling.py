@@ -1,0 +1,256 @@
+"""Multi-host fleet scaling (ISSUE 9; DESIGN.md §Multi-host fleet).
+
+Two scenarios, each at hosts=1 (plain procs runtime) and hosts=2 (two
+cooperating launcher processes joined only by loopback TCP ring bridges):
+
+  * the 4-stage pipeline chain under the host-I/O pump — per-packet wall
+    cost plus the bridge counters (bytes/slabs/credits each way, credit
+    RTT, blocking-wait fraction);
+  * the tiered many-core torus allreduce smoke — per-cycle wall cost with
+    the pod boundary carried over TCP.
+
+Bit-exactness is asserted IN the benchmark, not just reported: the
+hosts=2 drained packet trace and final gathered state tree must equal
+the single-host run's bit for bit, and the torus must converge to the
+global sum on both host counts with identical gathered trees.  The
+``fleet_slowdown_*`` ratio rows feed the ``benchmarks.schema`` fleet
+gate (hosts=2 must keep >= 0.5x the single-host throughput on the
+chain pump).
+
+Standalone mode writes the committed ``BENCH_PR9.json`` trajectory file
+(baseline: the committed ``BENCH_PR8.json`` rows, embedded):
+
+    PYTHONPATH=src python -m benchmarks.fleet_scaling [--smoke] [--json PATH]
+    python -m benchmarks.schema BENCH_PR9.json --gates fleet
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+
+from . import common, schema as schema_mod
+from .common import emit
+
+BENCH_JSON = "BENCH_PR9.json"
+BASELINE_JSON = "BENCH_PR8.json"  # the committed PR 8 trajectory rows
+BASELINE_SUITES = ("wafer_scale", "backend_speedup", "engine_speedup")
+
+
+def _assert_trees_equal(ref, got, what: str) -> None:
+    ref_leaves, ref_def = jax.tree_util.tree_flatten(ref)
+    got_leaves, got_def = jax.tree_util.tree_flatten(got)
+    assert ref_def == got_def, f"{what}: tree structure diverged"
+    for a, b in zip(ref_leaves, got_leaves):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=what)
+
+
+# ------------------------------------------------------- chain I/O pump
+def _run_chain(hosts, n_pkts: int):
+    """Pump ``n_pkts`` packets through the 4-stage chain; returns
+    (seconds, drained trace, gathered tree, bridge rows)."""
+    from repro.hw.pipestage import make_chain
+
+    net = make_chain(4, capacity=8)
+    kw = dict(engine="procs", n_workers=2, partition=[0, 0, 1, 1], K=2,
+              timeout=120.0)
+    if hosts:
+        kw["hosts"] = hosts
+    sim = net.build(**kw)
+    try:
+        sim.reset(0)
+        tx, rx = sim.tx("tx"), sim.rx("rx")
+        trace = []
+        got = queued = 0
+        t0 = time.perf_counter()
+        while got < n_pkts:
+            if queued < n_pkts:
+                batch = [[float(queued + j), 0.0]
+                         for j in range(min(4, n_pkts - queued))]
+                tx.send_many(batch)
+                queued += len(batch)
+            sim.run(cycles=8)
+            drained = np.asarray(rx.drain())
+            got += len(drained)
+            trace.append(drained)
+        dt = time.perf_counter() - t0
+        tree = sim.engine.gather_state(sim.state)
+        bridges = sim.stats().get("bridges", [])
+    finally:
+        sim.engine.close()
+    return dt, trace, tree, bridges
+
+
+def _bench_chain(smoke: bool) -> None:
+    n_pkts = 40 if smoke else 160
+    t1, trace1, tree1, _ = _run_chain(None, n_pkts)
+    t2, trace2, tree2, bridges = _run_chain(2, n_pkts)
+
+    assert len(trace1) == len(trace2), "fleet drained a different timeline"
+    for i, (a, b) in enumerate(zip(trace1, trace2)):
+        np.testing.assert_array_equal(a, b, err_msg=f"chain boundary {i}")
+    _assert_trees_equal(tree1, tree2, "chain gathered state")
+    assert bridges, "hosts=2 run reported no bridge rows"
+    slabs = sum(r["slabs_tx"] for r in bridges)
+    waits = max(r["wait_fraction"] for r in bridges)
+    assert slabs > 0, "no slabs crossed the TCP bridges"
+
+    emit("fleet_chain_hosts1", t1 / n_pkts * 1e6,
+         f"{n_pkts} pkts through the 4-stage chain, single-host procs "
+         f"fleet @ {n_pkts / t1:.0f} pkt/s")
+    emit("fleet_chain_hosts2", t2 / n_pkts * 1e6,
+         f"{n_pkts} pkts with the chain split over 2 launchers via "
+         f"loopback TCP @ {n_pkts / t2:.0f} pkt/s; "
+         f"{len(bridges)} bridge rows, {slabs} slabs forwarded, "
+         f"peak wait {waits:.2f}")
+    emit("fleet_slowdown_hosts2", t2 / t1,
+         f"hosts=2 wall / hosts=1 wall on the chain pump "
+         f"(gate <= 2.0: the bridged fleet keeps >= 0.5x throughput)")
+    emit("fleet_bit_exact", 1.0,
+         "hosts=2 drained trace + gathered state tree bit-identical to "
+         "single-host procs (asserted in-benchmark)")
+    for r in bridges:
+        emit(f"fleet_bridge_{r['host']}", r["wait_fraction"],
+             f"{r['label']} role={r['role']}: {r['bytes_tx']}B tx / "
+             f"{r['bytes_rx']}B rx, slabs {r['slabs_tx']}/{r['slabs_rx']}, "
+             f"credits {r['credits_tx']}/{r['credits_rx']}, "
+             f"credit RTT {r['credit_rtt_s'] * 1e6:.0f}us")
+
+
+# ------------------------------------------------- tiered torus allreduce
+def _run_wafer(hosts, R: int, C: int):
+    from repro.core import Simulation, tiered_grid_partition
+    from repro.core.graph import ChannelGraph, PartitionTree, Tier
+    from repro.hw.manycore import (
+        ManycoreCell, allreduce_done, expected_total, make_core_params,
+    )
+    from repro.runtime.launcher import ProcsEngine
+
+    values = (np.arange(R * C, dtype=np.int64) % 97 + 1).astype(np.float32)
+    graph = ChannelGraph.torus(
+        ManycoreCell(R, C), R, C,
+        params=make_core_params(values.reshape(R, C)), capacity=8,
+    )
+    part = tiered_grid_partition(R, C, [(2, 1), (2, 1)])
+    ptree = PartitionTree(
+        part, (Tier(axes=("pod",), K=4), Tier(axes=("g",), K=8)),
+        {"pod": 2, "g": 2},
+    )
+    eng = ProcsEngine(graph, ptree, timeout=120.0, hosts=hosts)
+    sim = Simulation(eng)
+    try:
+        t0 = time.perf_counter()
+        sim.reset(0)
+        done = lambda s: allreduce_done(  # noqa: E731
+            s.block_states[0], s.tables.active[0])
+        sim.run(until=done, max_epochs=5000, cache_key="allreduce")
+        dt = time.perf_counter() - t0
+        totals = np.asarray(eng.gather_group(sim.state, 0).total)
+        want = expected_total(values)
+        assert np.array_equal(totals, np.full_like(totals, want)), (
+            f"hosts={hosts}: allreduce diverged: {np.unique(totals)[:5]} "
+            f"!= {want}")
+        tree = eng.gather_state(sim.state)
+        cycles = sim.cycle
+    finally:
+        eng.close()
+    return dt, cycles, tree
+
+
+def _bench_wafer(smoke: bool) -> None:
+    R = C = 4 if smoke else 8
+    t1, cyc1, tree1 = _run_wafer(None, R, C)
+    t2, cyc2, tree2 = _run_wafer(2, R, C)
+    assert cyc1 == cyc2, f"fleet converged at {cyc2} cycles, not {cyc1}"
+    _assert_trees_equal(tree1, tree2, "wafer gathered state")
+    emit("fleet_wafer_hosts1", t1 / cyc1 * 1e6,
+         f"{R}x{C} tiered torus allreduce, single-host 4-worker fleet: "
+         f"{cyc1} cycles in {t1:.2f}s")
+    emit("fleet_wafer_hosts2", t2 / cyc2 * 1e6,
+         f"{R}x{C} tiered torus with the pod boundary over loopback TCP "
+         f"(2 launchers): {cyc2} cycles in {t2:.2f}s, gathered tree "
+         "bit-identical (asserted in-benchmark)")
+
+
+def bench(smoke: bool = False) -> None:
+    _bench_chain(smoke)
+    _bench_wafer(smoke)
+
+
+# -------------------------------------------------------- standalone mode
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def _baseline() -> dict:
+    """Embed the committed PR 8 reference rows (same idiom as
+    ``benchmarks.run``): the chain stays auditable from this file alone
+    even if ``BENCH_PR8.json`` disappears from the tree."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    try:
+        with open(os.path.join(root, BASELINE_JSON)) as f:
+            prev = json.load(f)
+    except (OSError, ValueError):
+        try:
+            with open(os.path.join(root, BENCH_JSON)) as f:
+                return json.load(f)["baseline"]
+        except (OSError, ValueError, KeyError):
+            return {"ref": BASELINE_JSON, "missing": True}
+    return {
+        "ref": BASELINE_JSON,
+        "git_rev": prev.get("git_rev", "unknown"),
+        "smoke": prev.get("smoke"),
+        "suites": {
+            name: prev.get("suites", {}).get(name, [])
+            for name in BASELINE_SUITES
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny packet/grid budgets; pass/fail only")
+    ap.add_argument("--json", default=BENCH_JSON, metavar="PATH")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    common.begin_suite("fleet_scaling")
+    failed = []
+    try:
+        bench(smoke=args.smoke)
+    except Exception:  # noqa: BLE001
+        failed.append("fleet_scaling")
+        import traceback
+        traceback.print_exc()
+    summary = {
+        "schema": schema_mod.SCHEMA,
+        "git_rev": _git_rev(),
+        "smoke": bool(args.smoke),
+        "argv": sys.argv[1:],
+        "failed": failed,
+        "baseline": _baseline(),
+        "suites": common.records(),
+    }
+    errs = schema_mod.validate(summary)
+    assert not errs, f"summary violates {schema_mod.SCHEMA}: {errs}"
+    with open(args.json, "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {args.json} (validated against {schema_mod.SCHEMA})")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

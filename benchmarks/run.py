@@ -21,6 +21,10 @@ paper-artifact mapping):
                        the self-healing fleet — detection latency, warm
                        vs cold respawn, snapshot overhead, healed-kill
                        end-to-end MTTR
+    fleet_scaling      §Multi-host fleet (ISSUE 9): 2-launcher TCP-bridged
+                       fleet vs single-host — chain pump + tiered torus,
+                       bit-exactness asserted in-benchmark, bridge
+                       counters (also standalone: writes BENCH_PR9.json)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only name] [--smoke|--full]
                                              [--json PATH]
@@ -55,8 +59,9 @@ import traceback
 
 from . import (
     accuracy_vs_rate, backend_speedup, build_time, common, engine_speedup,
-    fault_recovery, procs_runtime, queue_perf, schema as schema_mod,
-    sim_throughput, task_latency, timing_breakdown, wafer_scale,
+    fault_recovery, fleet_scaling, procs_runtime, queue_perf,
+    schema as schema_mod, sim_throughput, task_latency, timing_breakdown,
+    wafer_scale,
 )
 
 BENCH_JSON = "BENCH_PR8.json"
@@ -77,6 +82,7 @@ SUITES = [
     ("wafer_scale", wafer_scale.bench),
     ("procs_runtime", procs_runtime.bench),
     ("fault_recovery", fault_recovery.bench),
+    ("fleet_scaling", fleet_scaling.bench),
 ]
 
 

@@ -56,7 +56,7 @@ def _rows(summary: dict, suite: str) -> dict[str, dict]:
 
 
 _BASELINE_REFS = ("BENCH_PR2.json", "BENCH_PR3.json", "BENCH_PR5.json",
-                  "BENCH_PR6.json")
+                  "BENCH_PR6.json", "BENCH_PR8.json")
 
 # Committed trajectory files form a chain: each PR's summary must embed its
 # predecessor's reference rows as ``baseline`` so every speedup-vs-last-PR
@@ -70,6 +70,7 @@ _CHAIN = {
     "BENCH_PR6.json": "BENCH_PR5.json",
     "BENCH_PR7.json": "BENCH_PR6.json",
     "BENCH_PR8.json": "BENCH_PR6.json",
+    "BENCH_PR9.json": "BENCH_PR8.json",
 }
 
 #: Chain links legitimately absent from the working tree.  Anything else
@@ -313,7 +314,40 @@ def gate_trajectory(summary: dict) -> str:
     return msg
 
 
-GATES = {"smoke": gate_smoke, "trajectory": gate_trajectory, "none": None}
+def gate_fleet(summary: dict) -> str:
+    """The ISSUE 9 multi-host fleet gates (``BENCH_PR9.json``, written by
+    ``benchmarks.fleet_scaling``): the 2-launcher TCP-bridged fleet must
+    keep >= 0.5x the single-host chain throughput (slowdown ratio <=
+    2.0), the in-benchmark bit-exactness assertion must have passed (the
+    row only exists if it did), and the bridges must have actually
+    forwarded traffic (a silently-local 'fleet' scores a suspiciously
+    perfect ratio and fails here)."""
+    assert summary["baseline"].get("ref") == "BENCH_PR8.json", \
+        summary["baseline"]
+    rows = _rows(summary, "fleet_scaling")
+    assert rows, "no fleet_scaling rows recorded"
+    for need in ("fleet_chain_hosts1", "fleet_chain_hosts2",
+                 "fleet_wafer_hosts1", "fleet_wafer_hosts2"):
+        assert need in rows, (
+            f"fleet_scaling suite is missing the {need} row "
+            f"(recorded: {sorted(rows)})")
+    bit = rows.get("fleet_bit_exact")
+    assert bit is not None and bit["us_per_call"] == 1.0, (
+        "the fleet bit-exactness witness row is missing — the hosts=2 "
+        "run was not verified against single-host procs")
+    ratio = rows["fleet_slowdown_hosts2"]["us_per_call"]
+    assert ratio <= 2.0, (
+        f"2-launcher fleet throughput collapsed: hosts=2 costs {ratio:.2f}x "
+        "the single-host chain pump (gate <= 2.0, i.e. >= 0.5x throughput)")
+    bridge_rows = [r for n, r in rows.items() if n.startswith("fleet_bridge_")]
+    assert bridge_rows, "no per-bridge counter rows recorded"
+    assert any("slabs" in r["derived"] for r in bridge_rows)
+    return (f"hosts=2/hosts=1 chain {ratio:.2f}x (gate <= 2.0), "
+            f"{len(bridge_rows)} bridge rows, bit-exactness asserted")
+
+
+GATES = {"smoke": gate_smoke, "trajectory": gate_trajectory,
+         "fleet": gate_fleet, "none": None}
 
 
 def main(argv=None) -> int:

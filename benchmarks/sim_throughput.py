@@ -9,7 +9,9 @@ capable engine — ``single`` | ``graph`` | ``fused`` | ``procs`` — and
 reports each session's ``stats()`` rows: the per-port schema (sent/
 pending/occupancy/credit) is identical whether the port is an in-process
 device queue or a shm ring on the multiprocess fleet, which is what lets
-this suite emit one row shape across engines.
+this suite emit one row shape across engines.  A final pass re-runs the
+scenario on a 2-launcher TCP-bridged fleet (ISSUE 9) and emits the
+``stats()["bridges"]`` counter rows.
 """
 import time
 
@@ -74,6 +76,52 @@ def bench_stats_schema(smoke: bool = False):
     emit("sim_io_schema_uniform", 1.0,
          f"one ports schema across {len(schemas)} engines "
          "(in-process queues and shm rings alike)")
+    bench_bridge_stats(n_pkts)
+
+
+def bench_bridge_stats(n_pkts: int) -> None:
+    """The same host-I/O scenario on a 2-launcher TCP-bridged fleet
+    (ISSUE 9): ``stats()`` grows a ``bridges`` list — one row per bridge
+    proxy with bytes/slabs/credits each way, credit RTT, and the pump's
+    blocking-wait fraction — while the ports schema stays identical."""
+    net = make_chain(4, capacity=8)
+    sim = net.build(engine="procs", n_workers=2, partition=[0, 0, 1, 1],
+                    K=2, timeout=120.0, hosts=2)
+    try:
+        sim.reset(0)
+        tx, rx = sim.tx("tx"), sim.rx("rx")
+        got = queued = 0
+        t0 = time.perf_counter()
+        while got < n_pkts:
+            if queued < n_pkts:
+                batch = [[float(queued + j), 0.0]
+                         for j in range(min(4, n_pkts - queued))]
+                tx.send_many(batch)
+                queued += len(batch)
+            sim.run(cycles=8)
+            got += len(rx.drain())
+        dt = time.perf_counter() - t0
+        st = sim.stats()
+        schema = {d: frozenset(next(iter(st["ports"][d].values())))
+                  for d in ("tx", "rx")}
+        assert set(schema["tx"]) == PORT_SCHEMA["tx"], schema
+        rows = st["bridges"]
+        assert rows, "bridged fleet reported no bridge rows"
+        slabs = sum(r["slabs_tx"] for r in rows)
+        emit("sim_io_procs_2hosts", dt / max(got, 1) * 1e6,
+             f"{got} pkts with the chain split over 2 launchers via "
+             f"loopback TCP @ {got / dt:.0f} pkt/s; {len(rows)} bridge "
+             f"rows, {slabs} slabs forwarded, peak wait "
+             f"{max(r['wait_fraction'] for r in rows):.2f}")
+        for r in rows:
+            emit(f"sim_io_bridge_{r['host']}", r["wait_fraction"],
+                 f"{r['label']} role={r['role']}: {r['bytes_tx']}B tx / "
+                 f"{r['bytes_rx']}B rx, slabs {r['slabs_tx']}/"
+                 f"{r['slabs_rx']}, credits {r['credits_tx']}/"
+                 f"{r['credits_rx']}, "
+                 f"credit RTT {r['credit_rtt_s'] * 1e6:.0f}us")
+    finally:
+        sim.engine.close()
 
 
 def bench(smoke: bool = False):

@@ -60,7 +60,7 @@ from repro.hw.manycore import (  # noqa: E402
 def build_engine(R: int, C: int, k_inner: int, k_outer: int,
                  capacity: int = WAFER.queue_capacity,
                  engine: str = "graph", batch_signatures: bool = False,
-                 overlap="auto") -> tuple[GraphEngine, np.ndarray]:
+                 overlap="auto", hosts=None) -> tuple[GraphEngine, np.ndarray]:
     """Torus fabric on a (2 pods) x (2x2 granules/pod) tiered mesh — or,
     with ``engine="procs"``, on a (2 pods) x (2 workers/pod) fleet of
     free-running OS processes over shared-memory queues (no mesh at all:
@@ -68,7 +68,10 @@ def build_engine(R: int, C: int, k_inner: int, k_outer: int,
     ``batch_signatures`` stacks same-signature procs workers into one
     vmapped dispatch per epoch; ``overlap=True`` splits every exchange
     into issue/commit halves (send-early/receive-late, DESIGN.md §Perf) —
-    bit-identical results either way."""
+    bit-identical results either way.  ``hosts`` (procs only) shards the
+    fleet over N cooperating launcher processes joined by loopback TCP
+    ring bridges — the paper's fast-shm-inside / slow-TCP-between tiered
+    transport, end to end (DESIGN.md §Multi-host fleet)."""
     values = (np.arange(R * C, dtype=np.int64) % 97 + 1).astype(np.float32)
     cell = ManycoreCell(R, C)
     graph = ChannelGraph.torus(
@@ -87,7 +90,7 @@ def build_engine(R: int, C: int, k_inner: int, k_outer: int,
         )
         return ProcsEngine(graph, ptree, timeout=120.0,
                            batch_signatures=batch_signatures,
-                           overlap=overlap), values
+                           overlap=overlap, hosts=hosts), values
     mesh = make_mesh((2, 2, 2), ("pod", "gr", "gc"))
     part = tiered_grid_partition(R, C, [(2, 1), (2, 2)])
     if engine == "fused":
@@ -120,7 +123,13 @@ def main() -> None:
                     help="split every tier exchange into issue/commit halves "
                          "(send-early/receive-late; bit-identical results, "
                          "transfers hidden under the next window's compute)")
+    ap.add_argument("--hosts", type=int, default=None,
+                    help="procs only: shard the fleet over N cooperating "
+                         "launcher processes joined by loopback TCP ring "
+                         "bridges (ISSUE 9; bit-identical results)")
     args = ap.parse_args()
+    if args.hosts and args.engine != "procs":
+        ap.error("--hosts requires --engine procs")
     R, C = args.rows, args.cols
 
     print(f"wafer-scale fabric: {R}x{C} torus = {R * C} cores, "
@@ -128,8 +137,14 @@ def main() -> None:
     eng, values = build_engine(R, C, args.k_inner, args.k_outer,
                                engine=args.engine,
                                batch_signatures=args.batch_signatures,
-                               overlap=True if args.overlap else "auto")
+                               overlap=True if args.overlap else "auto",
+                               hosts=args.hosts)
     periods = eng.periods
+    plan = getattr(eng, "host_plan", None)
+    if plan is not None:
+        print(f"  host mesh: {plan.n_hosts} launcher processes "
+              f"{plan.hosts}, {len(eng._links)} TCP ring bridge link(s), "
+              f"granules {dict((h, plan.granules_of(h)) for h in plan.hosts)}")
     print(f"  partition: {eng.ptree.summary()}")
     if hasattr(eng, "classes"):
         print(f"  exchange classes/tier: "

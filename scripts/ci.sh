@@ -5,6 +5,7 @@
 #   scripts/ci.sh tests      # tier-1 tests only
 #   scripts/ci.sh smoke      # smoke benchmarks only
 #   scripts/ci.sh procs      # multiprocess-runtime smoke (hard timeout)
+#   scripts/ci.sh fleet      # 2-launcher TCP-bridged fleet smoke (ISSUE 9)
 #   scripts/ci.sh examples   # all examples, smoke-sized, via the session API
 #
 # The smoke benchmarks run every suite (all four engines, the batched
@@ -31,7 +32,12 @@
 #     procs stage additionally runs the fault drills themselves (kill ->
 #     bit-identical recovery, stall -> FleetStallError) under a hard
 #     timeout, plus an env-knob drill (REPRO_ON_FAULT/REPRO_FAULT_PLAN)
-#     through a real example.
+#     through a real example;
+#   * the multi-host fleet stays honest (ISSUE 9): the 2-launcher
+#     TCP-bridged chain keeps >= 0.5x single-host throughput with
+#     bit-exactness asserted in-benchmark (gated on the committed
+#     BENCH_PR9.json), and the fleet stage drills the bridge framing,
+#     loopback bit-exactness, and link-kill recovery under hard timeouts.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -63,6 +69,7 @@ if [[ "$stage" == "all" || "$stage" == "smoke" ]]; then
     echo "=== BENCH json schema + perf gates (benchmarks.schema) ==="
     python -m benchmarks.schema BENCH_SMOKE.json --gates smoke
     python -m benchmarks.schema BENCH_PR8.json --gates trajectory
+    python -m benchmarks.schema BENCH_PR9.json --gates fleet
     # every committed trajectory file must validate AND embed its
     # predecessor's rows as baseline (the PR-over-PR audit chain)
     for f in BENCH_PR*.json; do
@@ -99,6 +106,28 @@ if [[ "$stage" == "all" || "$stage" == "procs" ]]; then
     REPRO_ON_FAULT=recover REPRO_FAULT_PLAN="kill:2@3" \
         timeout 300 python examples/wafer_scale.py --rows 8 --cols 8 \
         --k-inner 4 --engine procs
+fi
+
+if [[ "$stage" == "all" || "$stage" == "fleet" ]]; then
+    # ISSUE 9: two cooperating launcher processes joined only by loopback
+    # TCP ring bridges.  Same deadlock philosophy as the procs stage: a
+    # bridge-protocol bug stalls the fleet, so every step runs under a
+    # hard timeout and the in-process watchdog (which now covers bridges
+    # as first-class members) fires first with a typed error.
+    echo "=== bridged fleet: framing + plan/link units ==="
+    timeout 300 python -m pytest -q tests/test_bridge.py -x \
+        -k "not fleet_"
+    echo "=== bridged fleet: 2-launcher loopback bit-exactness ==="
+    timeout 300 python -m pytest -q tests/test_bridge.py -x \
+        -k "fleet_bit_exact or fleet_io_parity"
+    echo "=== bridged fleet: link-kill recovery drill ==="
+    timeout 300 python -m pytest -q tests/test_bridge.py -x \
+        -k "fleet_linkkill"
+    echo "=== bridged fleet: 2-pod tiered wafer across 2 launchers ==="
+    # the acceptance scenario: the pod boundary rides the TCP bridge, the
+    # allreduce invariant still witnesses every packet crossing it
+    timeout 300 python examples/wafer_scale.py --rows 8 --cols 8 \
+        --k-inner 4 --engine procs --hosts 2
 fi
 
 if [[ "$stage" == "all" || "$stage" == "examples" ]]; then

@@ -175,7 +175,12 @@ class Network:
                               ("raise"|"recover" self-healing policy,
                               REPRO_ON_FAULT env override), snapshot_every,
                               max_restarts, backoff_s, fault_plan
-                              (deterministic drills, REPRO_FAULT_PLAN).
+                              (deterministic drills, REPRO_FAULT_PLAN),
+                              hosts (multi-host fleet: granule->host
+                              placement, DESIGN.md §Multi-host fleet;
+                              REPRO_HOSTS env), host (which host this
+                              launcher serves), base_port
+                              (REPRO_BRIDGE_PORT; 0 = ephemeral).
 
         (The uniform-grid presets ``distributed.GridEngine`` and
         ``fused.FusedEngine.grid`` are constructed directly — they build

@@ -408,6 +408,13 @@ class Simulation:
             # the procs runtime's self-healing surface (ISSUE 8): policy,
             # restart count, snapshot cadence/epoch, replayed epochs
             d["faults"] = fs()
+        bs = getattr(self.engine, "bridge_stats", None)
+        if bs is not None:
+            # multi-host fleets (ISSUE 9): one row per TCP ring bridge —
+            # bytes/slabs/credits each way, credit RTT, wait fraction
+            rows = bs()
+            if rows:
+                d["bridges"] = rows
         return d
 
     def add_monitor(self, fn: Callable[["Simulation"], None],

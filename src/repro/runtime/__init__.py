@@ -19,16 +19,23 @@ instances" and build time stays flat in instance count.
   recovery         coordinated snapshots + respawn/restore/replay — the
                    self-healing policy behind ProcsEngine(on_fault=
                    "recover") / REPRO_ON_FAULT (ISSUE 8)
+  bridge           TCP ring bridge proxy: pairs local shm rings with a
+                   remote host's over length-prefixed framing, verbatim
+                   checked records (end-to-end corruption detection)
+  fleet            multi-host fleet runtime (ISSUE 9): HostPlan placement,
+                   leader/follower rendezvous, control links, cross-host
+                   recovery — ProcsEngine(hosts=...) / REPRO_HOSTS
 """
-from .fault_tolerance import FleetStallError, WorkerDiedError
+from .fault_tolerance import FleetStallError, LinkDownError, WorkerDiedError
 from .faultinject import FaultAction, parse_fault_plan
+from .fleet import HostPlan, resolve_host_plan
 from .launcher import ProcsEngine, ProcsState
 from .recovery import RECOVERABLE, RecoveryController, resolve_on_fault
 from .shmem import RingCorruptionError, RingTimeout, ShmRing
 
 __all__ = [
-    "FaultAction", "FleetStallError", "ProcsEngine", "ProcsState",
-    "RECOVERABLE", "RecoveryController", "RingCorruptionError",
-    "RingTimeout", "ShmRing", "WorkerDiedError", "parse_fault_plan",
-    "resolve_on_fault",
+    "FaultAction", "FleetStallError", "HostPlan", "LinkDownError",
+    "ProcsEngine", "ProcsState", "RECOVERABLE", "RecoveryController",
+    "RingCorruptionError", "RingTimeout", "ShmRing", "WorkerDiedError",
+    "parse_fault_plan", "resolve_host_plan", "resolve_on_fault",
 ]

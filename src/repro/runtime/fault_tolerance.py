@@ -74,14 +74,26 @@ class WorkerDiedError(RuntimeError):
     worker id, its exit status, and the tail of its captured log so the
     failure is diagnosable from the exception alone."""
 
-    def __init__(self, worker: int, reason: str, log_tail: str = ""):
+    def __init__(self, worker: int, reason: str, log_tail: str = "",
+                 label: str | None = None):
         self.worker = worker
         self.reason = reason
         self.log_tail = log_tail
-        msg = f"worker {worker} {reason}"
+        self.label = label or f"worker {worker}"
+        msg = f"{self.label} {reason}"
         if log_tail:
-            msg += f"\n--- worker {worker} log tail ---\n{log_tail}"
+            msg += f"\n--- {self.label} log tail ---\n{log_tail}"
         super().__init__(msg)
+
+
+class LinkDownError(WorkerDiedError):
+    """A TCP ring bridge (``runtime.bridge``) died or its link dropped.
+
+    Subclasses ``WorkerDiedError`` so the recovery controller's
+    RECOVERABLE surface covers it unchanged: a dead bridge is healed the
+    same way as a dead worker — teardown, re-rendezvous, restore, replay
+    (``runtime.fleet``).  ``worker`` is the bridge's monitor id
+    (``NW + local bridge index``); ``label`` names the link."""
 
 
 class FleetStallError(RuntimeError):
@@ -107,8 +119,13 @@ class FleetStallError(RuntimeError):
 # those words into a wait-for graph over workers when the whole fleet goes
 # quiet: pop-waits point at the ring's producer, push-waits at its consumer.
 OP_CREDIT_POP, OP_SLAB_POP, OP_SLAB_PUSH, OP_CREDIT_PUSH = 1, 2, 3, 4
+# A bridge proxy waiting on its TCP peer: nothing LOCAL holds it up, so
+# it contributes no wait-for edge — if workers point at it, the bridge is
+# the stall's root and gets named directly (never an innocent worker).
+OP_LINK_WAIT = 5
 STALL_OPS = {OP_CREDIT_POP: "credit-pop", OP_SLAB_POP: "slab-pop",
-             OP_SLAB_PUSH: "slab-push", OP_CREDIT_PUSH: "credit-push"}
+             OP_SLAB_PUSH: "slab-push", OP_CREDIT_PUSH: "credit-push",
+             OP_LINK_WAIT: "link-wait"}
 _STALL_BASE = 1_000_000
 
 
@@ -129,14 +146,22 @@ def stall_wait_edges(blocked: dict[int, int],
 
     ``blocked`` maps worker -> status word (0 = not blocked);
     ``chan_workers`` maps channel id -> (producer_worker, consumer_worker)
-    of the channel's slab direction.  Self-edges (both ends of a channel
-    batched into one worker) are dropped.  Returns (edges, details)."""
+    of the channel's slab direction.  On a bridged fleet the remote end
+    of a cross-host channel is its local bridge proxy's monitor id, so
+    the graph stays host-local and blames the bridge, not a worker.
+    Self-edges (both ends of a channel batched into one worker) are
+    dropped; ``OP_LINK_WAIT`` (a bridge waiting on its TCP peer)
+    contributes no edge — nothing local holds it up.  Returns
+    (edges, details)."""
     edges: dict[int, int] = {}
     details: dict[int, str] = {}
     for w, code in blocked.items():
         if code <= 0:
             continue
         op, chan = decode_blocked(code)
+        if op == OP_LINK_WAIT:
+            details[w] = f"member {w} blocked on its TCP link (c{chan})"
+            continue
         if op not in STALL_OPS or chan not in chan_workers:
             continue
         sw, dw = chan_workers[chan]
@@ -194,14 +219,28 @@ class ProcessMonitor:
                  heartbeat: Callable[[int], float] | None = None,
                  hang_timeout_s: float = 120.0,
                  diagnose: Callable[[tuple[int, ...]], Exception | None]
-                 | None = None):
+                 | None = None,
+                 labels: dict[int, str] | None = None,
+                 link_ids: frozenset | set | None = None):
         self.procs = procs
         self.log_paths = log_paths
         self.heartbeat = heartbeat  # worker -> last-beat wallclock
         self.hang_timeout_s = hang_timeout_s
         self.diagnose = diagnose    # fleet-wide stall -> richer exception
+        # Bridge proxies are first-class fleet members: ``labels`` names
+        # them in diagnoses, ``link_ids`` routes their deaths to
+        # ``LinkDownError`` so a dropped TCP link is distinguishable from
+        # a dead granule worker (and both stay RECOVERABLE).
+        self.labels = labels or {}
+        self.link_ids = frozenset(link_ids or ())
         self._last_progress = {w: time.time() for w in procs}
         self._last_beat = {w: -1.0 for w in procs}
+
+    def died(self, w: int, reason: str) -> WorkerDiedError:
+        """The member-appropriate death exception (bridge -> LinkDownError)."""
+        cls = LinkDownError if w in self.link_ids else WorkerDiedError
+        return cls(w, reason, read_log_tail(self.log_paths.get(w)),
+                   label=self.labels.get(w))
 
     def check(self, waiting_on: tuple[int, ...] | None = None) -> None:
         now = time.time()
@@ -214,9 +253,7 @@ class ProcessMonitor:
                 how = (f"died with exitcode {p.exitcode}" if p.exitcode
                        else "exited cleanly (exitcode 0) while replies "
                             "were still pending")
-                raise WorkerDiedError(
-                    w, how, read_log_tail(self.log_paths.get(w)),
-                )
+                raise self.died(w, how)
         if self.heartbeat is None or not waiting_on:
             return
         hung, quiet = [], []
@@ -242,11 +279,10 @@ class ProcessMonitor:
             if exc is not None:
                 raise exc
         w = hung[0]
-        raise WorkerDiedError(
+        raise self.died(
             w,
             f"made no progress for {self.hang_timeout_s:.0f}s "
             "(hung or deadlocked)",
-            read_log_tail(self.log_paths.get(w)),
         )
 
 

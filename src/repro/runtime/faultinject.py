@@ -16,6 +16,9 @@ separated list of actions, each ``kind:worker@epoch`` with optional
                                            #   fleet incarnation 1 (post-
                                            #   recovery), so drills can
                                            #   fault the REPLAY too
+    REPRO_FAULT_PLAN="linkkill:0@3"        # kill bridge LINK 0's proxy at
+                                           #   the epoch-3 boundary (multi-
+                                           #   host fleets; see LINK_KINDS)
 
 Modifiers: ``r<N>`` — the fleet incarnation (restart count) the action
 arms in, default 0, so a fired kill does not re-fire during the recovery
@@ -39,7 +42,16 @@ from typing import Sequence
 
 from .fault_tolerance import FailureInjector
 
-KINDS = ("kill", "exit0", "hang", "slow", "mute", "corrupt")
+#: Link (bridge-proxy) fault kinds: the action's target index is a
+#: BRIDGE LINK index (``runtime.fleet`` link map order), not a worker —
+#: ``linkkill:0@3`` kills link 0's bridge proxy at the epoch-3 command
+#: boundary, ``linkslow:0@3:0.05`` stalls its pump 50ms, ``linkcorrupt``
+#: flips a byte in its next forwarded slab frame ON THE WIRE (the far
+#: consumer's seq+crc verification trips — end-to-end detection).  The
+#: launcher executes these at run boundaries; workers never see them.
+LINK_KINDS = ("linkkill", "linkslow", "linkcorrupt")
+
+KINDS = ("kill", "exit0", "hang", "slow", "mute", "corrupt") + LINK_KINDS
 
 _TOKEN = re.compile(r"^(?P<kind>[a-z0-9]+):(?P<worker>\d+)@(?P<epoch>\d+)"
                     r"(?P<mods>(?::[^:,\s]+)*)$")
@@ -103,9 +115,20 @@ def resolve_fault_plan(plan) -> tuple[FaultAction, ...]:
 
 def actions_for(plan: Sequence[FaultAction], worker: int,
                 incarnation: int) -> tuple[FaultAction, ...]:
-    """The subset of a plan armed for one worker in one fleet incarnation."""
+    """The subset of a plan armed for one worker in one fleet incarnation
+    (link actions are launcher-executed and never ship to workers)."""
     return tuple(a for a in plan
-                 if a.worker == worker and a.restart == incarnation)
+                 if a.worker == worker and a.restart == incarnation
+                 and a.kind not in LINK_KINDS)
+
+
+def split_plan(plan: Sequence[FaultAction],
+               ) -> tuple[tuple[FaultAction, ...], tuple[FaultAction, ...]]:
+    """(worker actions, link actions) — link faults target bridge links
+    and are executed by the launcher at run boundaries, everything else
+    ships to the targeted worker at spawn time."""
+    return (tuple(a for a in plan if a.kind not in LINK_KINDS),
+            tuple(a for a in plan if a.kind in LINK_KINDS))
 
 
 class WorkerFaultInjector:

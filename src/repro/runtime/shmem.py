@@ -285,6 +285,43 @@ class ShmRing:
         self._tail[0] = (t + 1) % self.capacity
         return out
 
+    # -------------------------------------------- verbatim records (bridges)
+    # The TCP bridge (``runtime.bridge``) forwards records BETWEEN rings
+    # without interpreting them: a checked record travels with its
+    # [seq][crc32] header intact, so the far-side consumer's verification
+    # covers the wire too (end-to-end integrity, no re-framing).  The
+    # local seq counters still advance so native push/pop interoperate
+    # with forwarded records on the same ring.
+    def pop_record(self) -> bytes | None:
+        """Pop one record VERBATIM (checked rings include the seq+crc
+        header), without verification.  Returns None when empty."""
+        h, t = self.head, self.tail
+        if h == t:
+            return None
+        out = self._slots[t].tobytes()
+        if self.checked:
+            self._cseq[0] = np.uint32(int(self._cseq[0]) + 1)
+        self._tail[0] = (t + 1) % self.capacity
+        return out
+
+    def push_record(self, record: bytes) -> bool:
+        """Push one VERBATIM record (stride bytes, headers preserved —
+        the producer seq is NOT re-stamped).  Returns False when full."""
+        view = np.frombuffer(record, np.uint8)
+        if view.size != self.stride:
+            raise ValueError(
+                f"verbatim record is {view.size}B, ring stride is "
+                f"{self.stride}B ({self.label})"
+            )
+        h, t = self.head, self.tail
+        if (h + 1) % self.capacity == t:
+            return False
+        self._slots[h, :] = view
+        if self.checked:
+            self._pseq[0] = np.uint32(int(self._pseq[0]) + 1)
+        self._head[0] = (h + 1) % self.capacity
+        return True
+
     def _wait(self, ready: Callable[[], bool], timeout: float,
               check: Callable[[], None] | None, what: str) -> None:
         deadline = time.monotonic() + timeout

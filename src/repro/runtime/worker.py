@@ -1135,6 +1135,21 @@ HB_RECORD_BYTES = 32  # per-worker heartbeat: [epochs, wallclock, status, _]
 HB_RECORD_F64 = HB_RECORD_BYTES // 8
 
 
+def attach_heartbeat(hb_ring_name: str, index: int):
+    """Attach one member's heartbeat record (4 f64: [progress counter,
+    wallclock, blocked-status word, spare]) in the fleet heartbeat shm.
+    Shared by granule workers (index = worker id) and bridge proxies
+    (index = NW + local bridge index) — both are first-class members of
+    the ProcessMonitor's liveness/stall surface.  Returns (shm, view);
+    the caller keeps ``shm`` alive for the view's lifetime."""
+    from .shmem import attach_shared_memory
+
+    hb_shm = attach_shared_memory(hb_ring_name)
+    hb = np.frombuffer(hb_shm.buf, np.float64, count=HB_RECORD_F64,
+                       offset=index * HB_RECORD_BYTES)
+    return hb_shm, hb
+
+
 def worker_entry(conn, spec_pickle: bytes, worker_index: int,
                  log_path: str | None, cache_dir: str | None,
                  hb_ring_name: str | None,
@@ -1180,13 +1195,7 @@ def worker_entry(conn, spec_pickle: bytes, worker_index: int,
                   flush=True)
         hb = hb_shm = None
         if hb_ring_name:
-            from .shmem import attach_shared_memory
-
-            hb_shm = attach_shared_memory(hb_ring_name)
-            hb = np.frombuffer(
-                hb_shm.buf, np.float64, count=HB_RECORD_F64,
-                offset=worker_index * HB_RECORD_BYTES,
-            )
+            hb_shm, hb = attach_heartbeat(hb_ring_name, worker_index)
         w = (BatchedWorker(spec, conn, hb, faults)
              if isinstance(spec, BatchSpec)
              else Worker(spec, conn, hb, faults))

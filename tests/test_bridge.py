@@ -1,0 +1,384 @@
+"""Multi-host fleet runtime (ISSUE 9; DESIGN.md §Multi-host fleet).
+
+Covered here:
+
+  * wire framing units: length-prefixed frame round-trips over a real
+    socket, the incremental ``FrameReader`` under adversarially split
+    feeds, the oversized-frame guard, and pickled control messages;
+  * verbatim record transport: a checked-ring record popped with
+    ``pop_record`` and re-pushed with ``push_record`` into a second ring
+    (the bridge's data path) verifies cleanly at the far consumer — and
+    a byte flipped "on the wire" between the two rings trips the far
+    pop's crc32 check, so corruption detection is END-TO-END;
+  * host plans and links: ``resolve_host_plan`` input forms and env
+    precedence, ``HostPlan.auto`` splits, the deterministic link map,
+    and the ``linkkill``/``linkslow``/``linkcorrupt`` fault grammar with
+    its build-time validation;
+  * 2-launcher loopback fleets (real TCP bridges between two cooperating
+    launcher processes): host-visible traffic and the gathered state
+    tree bit-identical to the single-host procs runtime, K=1/capacity-2
+    cycle accuracy vs the single netlist, bridge stats surfaced through
+    ``Simulation.stats()["bridges"]``, systolic save/resume ACROSS the
+    bridge, and a link-kill recovery drill that heals bit-identically.
+"""
+import os
+import socket
+
+import jax
+import numpy as np
+import pytest
+
+from repro.runtime import RingCorruptionError, ShmRing, parse_fault_plan
+from repro.runtime.bridge import (
+    FLAVOR_CREDIT, FLAVOR_CTL, FLAVOR_SLAB, FrameReader, _FRAME, _MAX_FRAME,
+    recv_frame, recv_msg, send_frame, send_msg,
+)
+from repro.runtime.faultinject import LINK_KINDS, actions_for, split_plan
+from repro.runtime.fleet import HostPlan, build_links, resolve_host_plan
+
+from test_session import build_chain, io_script
+
+_TIMEOUT = 60.0  # generous: 2-CPU CI boxes timeshare workers AND bridges
+
+
+def procs_build(net, **kw):
+    kw.setdefault("timeout", _TIMEOUT)
+    return net.build(engine="procs", **kw)
+
+
+@pytest.fixture
+def closing():
+    sims = []
+    yield sims.append
+    for sim in sims:
+        try:
+            sim.engine.close()
+        except Exception:
+            pass
+
+
+def _assert_trees_equal(ref, got):
+    ref_leaves, ref_def = jax.tree_util.tree_flatten(ref)
+    got_leaves, got_def = jax.tree_util.tree_flatten(got)
+    assert ref_def == got_def
+    for a, b in zip(ref_leaves, got_leaves):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------- wire framing
+def test_frame_roundtrip_over_socket():
+    """Frames of every shape — empty, odd-sized, gen-wrapped — cross a
+    real socket byte-exact."""
+    a, b = socket.socketpair()
+    reader = FrameReader()
+    try:
+        cases = [
+            (FLAVOR_SLAB, 0, 0, b""),
+            (FLAVOR_SLAB, 7, 3, b"\x00" * 41),
+            (FLAVOR_CREDIT, 255, 2**32 - 1, np.uint32(5).tobytes()),
+            (FLAVOR_CTL, 300, 9, bytes(range(256)) * 3),  # gen wraps & 0xFF
+        ]
+        for flavor, gen, chan, payload in cases:
+            n = send_frame(a, flavor, gen, chan, payload)
+            assert n == _FRAME.size + len(payload)
+            got = recv_frame(b, reader, 5.0)
+            assert got == (flavor, gen & 0xFF, chan, payload)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_frame_reader_split_feeds():
+    """The incremental parser reassembles frames from arbitrary chunk
+    boundaries — single bytes, mid-header splits, coalesced frames."""
+    rng = np.random.RandomState(0)
+    frames = [(FLAVOR_SLAB, i & 0xFF, i, rng.bytes(int(rng.randint(0, 100))))
+              for i in range(40)]
+    stream = b"".join(_FRAME.pack(f, g, c, len(p)) + p
+                      for f, g, c, p in frames)
+    for chunk in (1, 3, 7, len(stream)):
+        reader = FrameReader()
+        got = []
+        for off in range(0, len(stream), chunk):
+            reader.feed(stream[off:off + chunk])
+            while True:
+                f = reader.next_frame()
+                if f is None:
+                    break
+                got.append(f)
+        assert got == frames, f"chunk={chunk}"
+
+
+def test_frame_oversize_rejected():
+    reader = FrameReader()
+    reader.feed(_FRAME.pack(FLAVOR_SLAB, 0, 0, _MAX_FRAME + 1))
+    with pytest.raises(ValueError, match="oversized frame"):
+        reader.next_frame()
+
+
+def test_ctl_msg_roundtrip_and_flavor_check():
+    a, b = socket.socketpair()
+    reader = FrameReader()
+    try:
+        obj = ("run", 4, {"nested": np.arange(3)})
+        send_msg(a, obj)
+        got = recv_msg(b, reader, 5.0)
+        assert got[0] == "run" and got[1] == 4
+        np.testing.assert_array_equal(got[2]["nested"], np.arange(3))
+        send_frame(a, FLAVOR_SLAB, 0, 0, b"xx")
+        with pytest.raises(ValueError, match="flavor"):
+            recv_msg(b, reader, 5.0)
+    finally:
+        a.close()
+        b.close()
+
+
+# ------------------------------------------------ verbatim record bridging
+def _ring_pair(tag, cap=4, slot=16):
+    pid = os.getpid()
+    tx = ShmRing.create(f"t_br_{tag}_tx_{pid}", cap, slot,
+                        checked=True, label=f"bridge:{tag}:tx")
+    rx = ShmRing.create(f"t_br_{tag}_rx_{pid}", cap, slot,
+                        checked=True, label=f"bridge:{tag}:rx")
+    return tx, rx
+
+
+def test_verbatim_record_survives_bridging():
+    """The bridge's data path — pop_record verbatim, frame, push_record
+    verbatim — keeps the producer's seq+crc header intact, so the far
+    consumer's checked pop verifies the ORIGINAL record."""
+    tx, rx = _ring_pair("ok")
+    try:
+        for i in range(10):  # wraps both rings
+            assert tx.push_bytes(bytes([i]) * 16)
+            rec = tx.pop_record()
+            assert rec is not None and len(rec) == tx.stride
+            # model the TCP hop: bytes cross the wire verbatim
+            assert rx.push_record(bytes(rec))
+            assert rx.pop_bytes() == bytes([i]) * 16
+        assert rx.seq_state() == (10, 10)  # seq timeline carried over
+    finally:
+        tx.close()
+        rx.close()
+
+
+def test_wire_corruption_detected_at_far_pop():
+    """A byte flipped BETWEEN the rings (i.e. on the wire) trips the far
+    consumer's crc32 — end-to-end detection, not hop-by-hop."""
+    tx, rx = _ring_pair("bad")
+    try:
+        assert tx.push_bytes(b"\x05" * 16)
+        rec = bytearray(tx.pop_record())
+        rec[8] ^= 0xFF  # first payload byte (after the 8B seq+crc header)
+        assert rx.push_record(bytes(rec))
+        with pytest.raises(RingCorruptionError, match="crc32") as ei:
+            rx.pop_bytes()
+        assert ei.value.kind == "crc"
+    finally:
+        tx.close()
+        rx.close()
+
+
+# --------------------------------------------------- host plans and links
+def test_resolve_host_plan_forms(monkeypatch):
+    monkeypatch.delenv("REPRO_HOSTS", raising=False)
+    assert resolve_host_plan(None, 4) is None
+    assert resolve_host_plan(1, 4) is None          # count 1 == single-host
+    plan = resolve_host_plan(2, 4)
+    assert plan.hosts == ("h0", "h1")
+    assert plan.assignment == ("h0", "h0", "h1", "h1")
+    assert resolve_host_plan("2", 4) == plan        # digit string
+    named = resolve_host_plan("alpha, beta", 4)     # comma list
+    assert named.hosts == ("alpha", "beta") and named.leader == "alpha"
+    by_dict = resolve_host_plan({"a": [0, 2], "b": [1, 3]}, 4)
+    assert by_dict.assignment == ("a", "b", "a", "b")
+    assert by_dict.granules_of("a") == (0, 2)
+    monkeypatch.setenv("REPRO_HOSTS", "3")
+    assert resolve_host_plan(None, 6).n_hosts == 3  # env fallback
+    assert resolve_host_plan(2, 6).n_hosts == 2     # explicit arg wins
+    with pytest.raises(ValueError, match="not assigned"):
+        resolve_host_plan({"a": [0]}, 2)
+    with pytest.raises(ValueError, match="hosts but the partition"):
+        resolve_host_plan(5, 3)
+
+
+def test_build_links_deterministic():
+    plan = HostPlan(("a", "b", "c"), ("a", "a", "b", "c"))
+    chan_hosts = {
+        0: ("a", "a"),   # local — no link
+        1: ("a", "b"),
+        2: ("b", "a"),   # same pair, opposite direction: SAME link
+        3: ("b", "c"),
+        4: ("c", "a"),
+    }
+    links = build_links(plan, chan_hosts)
+    assert [(lk.accept, lk.dial) for lk in links] == [
+        ("a", "b"), ("a", "c"), ("b", "c")]
+    assert links[0].chans == ((1, "a"), (2, "b"))
+    assert links[0].label == "link0:a<->b"
+    assert links[0].peer_of("a") == "b" and links[0].peer_of("b") == "a"
+    # deterministic: every host derives the identical map independently
+    assert build_links(plan, dict(reversed(chan_hosts.items()))) == links
+
+
+def test_link_fault_grammar():
+    plan = parse_fault_plan("linkkill:0@3, linkslow:1@2:0.05 "
+                            "linkcorrupt:0@4:r1 kill:1@5")
+    worker_faults, link_faults = split_plan(plan)
+    assert [a.kind for a in worker_faults] == ["kill"]
+    assert [(a.kind, a.worker, a.epoch) for a in link_faults] == [
+        ("linkkill", 0, 3), ("linkslow", 1, 2), ("linkcorrupt", 0, 4)]
+    assert link_faults[1].arg == 0.05
+    assert link_faults[2].restart == 1
+    # link faults are leader-driven: never delivered to worker plans
+    for w in range(3):
+        assert all(a.kind not in LINK_KINDS for a in actions_for(plan, w, 0))
+
+
+def test_link_faults_validated_at_build(closing):
+    with pytest.raises(ValueError, match="no bridged links"):
+        procs_build(build_chain(3, capacity=4),
+                    n_workers=2, partition=[0, 0, 1], K=1,
+                    fault_plan="linkkill:0@3")
+    with pytest.raises(ValueError, match="bridged link"):
+        procs_build(build_chain(3, capacity=4),
+                    n_workers=2, partition=[0, 0, 1], K=1, hosts=2,
+                    fault_plan="linkkill:7@3")
+
+
+# ------------------------------------- 2-launcher loopback fleet sessions
+def test_fleet_bit_exact_vs_single_host(closing):
+    """The acceptance property: a chain sharded across TWO cooperating
+    launcher processes connected only by loopback TCP produces host
+    traffic AND a gathered state tree bit-identical to single-host procs
+    — and the bridges report live counters through the session."""
+    ref = procs_build(build_chain(3, capacity=4),
+                      n_workers=2, partition=[0, 0, 1], K=1)
+    closing(ref)
+    ref.reset(0)
+    ref_trace = io_script(ref, n_steps=8, seed=0)
+    ref_tree = ref.engine.gather_state(ref.state)
+    ref.engine.close()
+
+    sim = procs_build(build_chain(3, capacity=4),
+                      n_workers=2, partition=[0, 0, 1], K=1, hosts=2)
+    closing(sim)
+    assert sim.engine.host_plan.n_hosts == 2
+    sim.reset(0)
+    trace = io_script(sim, n_steps=8, seed=0)
+    tree = sim.engine.gather_state(sim.state)
+
+    assert len(ref_trace) == len(trace)
+    for step, (a, b) in enumerate(zip(ref_trace, trace)):
+        np.testing.assert_array_equal(a, b, err_msg=f"boundary {step}")
+    _assert_trees_equal(ref_tree, tree)
+
+    rows = sim.stats()["bridges"]  # session wiring: stats()["bridges"]
+    assert len(rows) == 2          # one row per SIDE of the single link
+    by_host = {r["host"]: r for r in rows}
+    assert set(by_host) == {"h0", "h1"}
+    for r in rows:
+        assert r["label"] == "link0:h0<->h1"
+        assert r["bytes_tx"] > 0 and r["bytes_rx"] > 0
+        assert 0.0 <= r["wait_fraction"] <= 1.0
+    # slabs flow h0 -> h1 on this chain; the far side receives them all
+    assert by_host["h0"]["slabs_tx"] == by_host["h1"]["slabs_rx"] > 0
+    assert by_host["h0"]["credits_rx"] == by_host["h1"]["credits_tx"] > 0
+
+
+def test_fleet_io_parity_cycle_accurate(closing):
+    """K=1 / capacity=2: the bridged fleet keeps per-boundary traffic
+    bit-identical to the single netlist — the strongest (cycle-accurate)
+    parity contract, now with a TCP hop in the middle."""
+    ref_sim = build_chain(capacity=2).build()
+    ref_sim.reset(0)
+    ref = io_script(ref_sim, n_steps=12)
+
+    sim = procs_build(build_chain(capacity=2), n_workers=2,
+                      partition=[0, 0, 1], K=1, hosts=2)
+    closing(sim)
+    sim.reset(0)
+    tr = io_script(sim, n_steps=12)
+    assert len(tr) == len(ref)
+    for i, (a, b) in enumerate(zip(ref, tr)):
+        np.testing.assert_array_equal(a, b, err_msg=f"boundary {i}")
+    assert sum(len(t) for t in ref) > 3  # something actually flowed
+
+
+def test_fleet_systolic_save_resume(closing, tmp_path):
+    """The systolic scenario across a bridge: save mid-run, load into a
+    FRESH 2-host fleet (scatter_state over TCP), finish — bit-identical
+    to the single netlist."""
+    from repro.hw.systolic import make_systolic_network
+
+    rng = np.random.RandomState(3)
+    M, K, N = 6, 4, 4
+    A = rng.randn(M, K).astype(np.float32)
+    B = rng.randn(K, N).astype(np.float32)
+
+    def result_of(sim):
+        cols = [sim.probe((K - 1) * N + c) for c in range(N)]
+        return np.stack([np.asarray(c.y_buf) for c in cols], axis=1)
+
+    done = lambda s: ((~s.block_states[0].is_south)  # noqa: E731
+                      | (s.block_states[0].y_idx >= M)).all()
+
+    ref = make_systolic_network(A, B)[0].build()
+    ref.reset(0)
+    ref.run(until=done, max_epochs=100_000, cache_key="d")
+    want = result_of(ref)
+
+    # contiguous worker blocks so each worker's granules share a host
+    part = (np.arange(K * N) // 4).tolist()
+    fleet_kw = dict(n_workers=4, partition=part, K=4, hosts=2)
+    sim = procs_build(make_systolic_network(A, B)[0], **fleet_kw)
+    closing(sim)
+    sim.reset(0)
+    sim.run(cycles=12)
+    ck = str(tmp_path / "sys")
+    sim.save(ck)
+    sim.run(until=done, max_epochs=100_000, cache_key="d")
+    np.testing.assert_array_equal(want, result_of(sim))
+    sim.engine.close()
+
+    sim2 = procs_build(make_systolic_network(A, B)[0], **fleet_kw)
+    closing(sim2)
+    sim2.reset(0)
+    sim2.load(ck)  # scatter_state fans out over the control + data links
+    assert sim2.cycle == 12
+    sim2.run(until=done, max_epochs=100_000, cache_key="d")
+    np.testing.assert_array_equal(want, result_of(sim2))
+    np.testing.assert_allclose(result_of(sim2), A @ B, rtol=1e-4)
+
+
+def test_fleet_linkkill_recovery_bit_identical(closing):
+    """Kill the TCP bridge mid-run: the leader diagnoses LinkDownError
+    (not an innocent worker), tears the WHOLE fleet down, re-rendezvouses
+    under a fresh incarnation token, restores the last coordinated
+    snapshot, and replays — bit-identical to the fault-free timeline."""
+    ref = procs_build(build_chain(3, capacity=4),
+                      n_workers=2, partition=[0, 0, 1], K=1)
+    closing(ref)
+    ref.reset(0)
+    ref_trace = io_script(ref, n_steps=8, seed=1)
+    ref_tree = ref.engine.gather_state(ref.state)
+    ref.engine.close()
+
+    sim = procs_build(build_chain(3, capacity=4),
+                      n_workers=2, partition=[0, 0, 1], K=1, hosts=2,
+                      on_fault="recover", snapshot_every=2, backoff_s=0.0,
+                      fault_plan="linkkill:0@3")
+    closing(sim)
+    sim.reset(0)
+    trace = io_script(sim, n_steps=8, seed=1)
+    tree = sim.engine.gather_state(sim.state)
+
+    for step, (a, b) in enumerate(zip(ref_trace, trace)):
+        np.testing.assert_array_equal(a, b, err_msg=f"boundary {step}")
+    _assert_trees_equal(ref_tree, tree)
+
+    faults = sim.stats()["faults"]
+    assert faults["policy"] == "recover"
+    assert faults["restarts"] == 1
+    assert faults["incarnation"] == 1
+    assert faults["last_recovery"]["fault"] == "LinkDownError"

@@ -19,6 +19,10 @@ Covered here:
     the underlying fault;
   * snapshot cadence accounting (``snapshot_every`` boundaries + run-
     entry snapshots) via ``fault_stats()``;
+  * the host-I/O journal: a recoverable fault inside the run-entry
+    gather itself rewinds past host pushes/pops the snapshot never
+    captured — journaled discards + re-injections keep the io_script
+    trace bit-identical (ISSUE 9 hardening);
   * checked ``ShmRing`` units: stride/header layout, crc + seq mismatch
     detection, and the ``seq_state()``/``restore(seq=...)`` roundtrip
     into a fresh segment;
@@ -32,7 +36,7 @@ import numpy as np
 import pytest
 
 from repro.runtime import (
-    FleetStallError, ProcsEngine, RingCorruptionError, ShmRing,
+    FleetStallError, ProcsEngine, RingCorruptionError, RingTimeout, ShmRing,
     WorkerDiedError, parse_fault_plan, resolve_on_fault,
 )
 from repro.runtime.faultinject import FaultAction, actions_for
@@ -209,6 +213,54 @@ def test_snapshot_cadence(closing):
     assert faults["snapshots"] == 6
     assert faults["last_snapshot_epoch"] == 16
     assert faults["restarts"] == 0
+
+
+def test_entry_gather_fault_replays_host_io(closing):
+    """A recoverable fault inside the RUN-ENTRY gather (the snapshot
+    repair itself — e.g. a bridge link dying between runs, noticed when
+    the leader next touches it) rewinds to a snapshot whose ext capture
+    predates the host I/O performed at the current boundary.  The
+    controller's host-I/O journal makes that rewind exact: packets the
+    host already popped are not re-delivered by the replay, and pushes
+    the gather never captured re-enter their rings at the original
+    boundary — the io_script trace stays bit-identical."""
+    ref = procs_build(build_chain(3, capacity=4),
+                      n_workers=2, partition=[0, 0, 1], K=1)
+    closing(ref)
+    ref.reset(0)
+    ref_trace = io_script(ref, n_steps=8, seed=1)
+    ref_tree = ref.engine.gather_state(ref.state)
+    ref.engine.close()
+
+    sim = procs_build(build_chain(3, capacity=4),
+                      n_workers=2, partition=[0, 0, 1], K=1,
+                      on_fault="recover", snapshot_every=2, backoff_s=0.0)
+    closing(sim)
+    sim.reset(0)
+    eng = sim.engine
+    real_gather, calls = eng.gather_state, [0]
+
+    # gathers land at run entries 0, 1, 3 and the boundary 2 — call #4 is
+    # the step-3 ENTRY repair, after the host drained boundary 2 and
+    # pushed the step-3 input, with the last snapshot back at epoch 2
+    def racing_gather(state):
+        calls[0] += 1
+        if calls[0] == 4:
+            raise RingTimeout("injected: gather raced a dying link")
+        return real_gather(state)
+
+    eng.gather_state = racing_gather
+    trace = io_script(sim, n_steps=8, seed=1)
+    eng.gather_state = real_gather
+    tree = eng.gather_state(sim.state)
+
+    for step, (a, b) in enumerate(zip(ref_trace, trace)):
+        np.testing.assert_array_equal(a, b, err_msg=f"boundary {step}")
+    _assert_trees_equal(ref_tree, tree)
+    faults = eng.fault_stats()
+    assert faults["restarts"] == 1
+    assert faults["last_recovery"]["fault"] == "RingTimeout"
+    assert faults["last_recovery"]["restored_epoch"] == 2
 
 
 # --------------------------------------------------- checked ShmRing units
