@@ -1,0 +1,181 @@
+"""ISSUE 10 observability overhead: the flight recorder must be ~free.
+
+Two ratios, both gated by ``benchmarks.schema --gates obs``:
+
+  * ``obs_off_ratio`` (gate <= 1.02) — the registry's cost on the
+    in-process dispatch hot path, computed as ``1 + publishes_per_
+    dispatch * per-op_cost / per-dispatch_time``: the publish count is
+    counted live (the hot verbs are wrapped for one loop), the per-op
+    cost is the measured enabled ``REGISTRY.inc``, the dispatch time is
+    min-of-rounds.  A direct enabled-vs-disabled wall-clock A/B cannot
+    resolve the ~0.05% true delta on a timeshared container (it reads
+    ±4% noise), so the gated ratio is this measured-components bound;
+    the raw A/B still runs as the ungated ``obs_off_ab_ratio`` row.
+  * ``obs_trace_ratio`` (gate <= 1.10) — full tracing on a live 4-worker
+    procs fleet: per-phase telemetry records (48-byte non-blocking shm
+    pushes from every worker, drained by the launcher) plus recorder
+    spans, vs the identical untraced fleet.
+
+Plus two microbenchmark rows (``obs_registry_inc_enabled`` /
+``_disabled``) recording the absolute per-op publish cost, for the
+trajectory file.
+
+Min-of-rounds everywhere: on a timeshared 2-CPU container the *minimum*
+wall time is the only stable estimator, and the gates compare minima of
+interleaved rounds so CFS throttling hits both modes alike.
+"""
+import time
+
+import jax
+import numpy as np
+
+from .common import emit
+from repro.core import Simulation
+from repro.core.compat import make_mesh
+from repro.core.distributed import GraphEngine
+from repro.obs import trace as otrace
+from repro.obs.registry import REGISTRY
+
+from .procs_runtime import _wafer_scenario
+
+
+def _min_of(fn, rounds: int) -> float:
+    best = float("inf")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _registry_micro(n: int = 200_000) -> float:
+    """Per-op publish cost; returns the *enabled* seconds/op."""
+    per_op = {}
+    for enabled, tag in ((True, "enabled"), (False, "disabled")):
+        prev = REGISTRY.enabled
+        REGISTRY.enabled = enabled
+        try:
+            t0 = time.perf_counter()
+            for _ in range(n):
+                REGISTRY.inc("obs_bench.micro.count")
+            dt = time.perf_counter() - t0
+        finally:
+            REGISTRY.enabled = prev
+        per_op[tag] = dt / n
+        emit(f"obs_registry_inc_{tag}", dt / n * 1e6,
+             f"{dt / n * 1e9:.1f} ns per REGISTRY.inc ({tag})")
+    return per_op["enabled"]
+
+
+def _off_ratio(smoke: bool, inc_s: float) -> None:
+    """Registry cost on the in-process dispatch hot path."""
+    R = C = 4
+    graph, part, _ = _wafer_scenario(R, C, K=4, capacity=6)
+    mesh = make_mesh((1,), ("gx",))
+    sim = Simulation(GraphEngine(graph, np.zeros_like(part), mesh, K=4))
+    sim.reset(jax.random.key(0))
+    dispatches = 30 if smoke else 60
+    rounds = 7 if smoke else 9
+
+    def loop():
+        for _ in range(dispatches):
+            sim.run(epochs=1)
+        sim.block_until_ready()
+
+    loop()  # compile + warm
+
+    # count the actual registry publishes per dispatch by wrapping the
+    # hot verbs for one loop (REGISTRY is shared module-global state, so
+    # instance attributes shadow the methods for every call site)
+    calls = [0]
+    orig = (REGISTRY.inc, REGISTRY.set, REGISTRY.observe)
+
+    def _count(fn):
+        def wrapped(*a, **kw):
+            calls[0] += 1
+            return fn(*a, **kw)
+        return wrapped
+
+    REGISTRY.inc, REGISTRY.set, REGISTRY.observe = map(_count, orig)
+    try:
+        loop()
+    finally:
+        del REGISTRY.inc, REGISTRY.set, REGISTRY.observe
+    ops = calls[0] / dispatches
+
+    best = {}
+    prev = REGISTRY.enabled
+    try:
+        for _ in range(rounds):  # interleaved: throttling hits both modes
+            for enabled in (True, False):
+                REGISTRY.enabled = enabled
+                t0 = time.perf_counter()
+                loop()
+                dt = time.perf_counter() - t0
+                best[enabled] = min(best.get(enabled, dt), dt)
+    finally:
+        REGISTRY.enabled = prev
+
+    dispatch_s = best[False] / dispatches
+    ratio = 1.0 + ops * inc_s / dispatch_s
+    emit("obs_off_ratio", ratio,
+         f"{ops:.1f} registry publishes x {inc_s * 1e9:.0f} ns on a "
+         f"{dispatch_s * 1e6:.0f} us GraphEngine dispatch -> "
+         f"{(ratio - 1) * 100:.3f}% (measured components; gate <= 1.02)")
+    ab = best[True] / best[False]
+    emit("obs_off_ab_ratio", ab,
+         f"raw enabled/disabled wall-clock A/B {ab:.4f}x (min of {rounds} "
+         "interleaved rounds; ungated — the true delta sits below this "
+         "container's timer noise)")
+
+
+def _trace_ratio(smoke: bool) -> None:
+    """4-worker procs fleet, full tracing vs untraced — same fleet."""
+    from repro.runtime.launcher import ProcsEngine
+
+    R = C = 8
+    K = 8
+    epochs = 6 if smoke else 16
+    rounds = 3 if smoke else 5
+    graph, part, _ = _wafer_scenario(R, C, K)
+    eng = ProcsEngine(graph, part, n_workers=4, K=K, timeout=120.0)
+    sim = Simulation(eng)
+    sim.reset(jax.random.key(0))
+    sim.run(epochs=epochs)  # warm: same scan length as the timed calls
+
+    def run():
+        sim.run(epochs=epochs)
+        sim.block_until_ready()
+
+    rec = otrace.recorder()
+    prev_enabled = rec.enabled
+    best = {}
+    try:
+        for _ in range(rounds):  # interleaved untraced/traced rounds
+            for traced in (False, True):
+                rec.enabled = traced
+                eng.set_tracing(traced)
+                t0 = time.perf_counter()
+                run()
+                dt = time.perf_counter() - t0
+                best[traced] = min(best.get(traced, dt), dt)
+    finally:
+        eng.set_tracing(False)
+        rec.enabled = prev_enabled
+        eng.flush_telemetry()
+        eng.close()
+    ratio = best[True] / best[False]
+    emit("obs_trace_ratio", ratio,
+         f"fully-traced 4-worker fleet is {ratio:.3f}x the untraced fleet "
+         f"({R}x{C} torus, K={K}, {epochs}-epoch runs, min of {rounds} "
+         "interleaved rounds; gate <= 1.10)")
+
+
+def bench(smoke: bool = False) -> None:
+    inc_s = _registry_micro(20_000 if smoke else 200_000)
+    _off_ratio(smoke, inc_s)
+    _trace_ratio(smoke)
+
+
+if __name__ == "__main__":
+    bench()

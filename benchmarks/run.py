@@ -25,6 +25,9 @@ paper-artifact mapping):
                        fleet vs single-host — chain pump + tiered torus,
                        bit-exactness asserted in-benchmark, bridge
                        counters (also standalone: writes BENCH_PR9.json)
+    obs_overhead       §Observability (ISSUE 10): the flight recorder's
+                       cost — registry-disabled fast path <= 1.02x, fully
+                       traced 4-worker procs fleet <= 1.10x
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only name] [--smoke|--full]
                                              [--json PATH]
@@ -37,17 +40,17 @@ ISSUE 3 perf-trajectory numbers: sim-clock Hz for every engine on the
 wafer scenario at equal (K_inner, K_outer)).
 
 Every run also writes a machine-readable summary (default
-``BENCH_PR8.json``): ``{"schema", "git_rev", "smoke", "full", "argv",
+``BENCH_PR10.json``): ``{"schema", "git_rev", "smoke", "full", "argv",
 "failed", "baseline", "suites": {suite: [{"name", "us_per_call",
 "derived"}, ...]}}`` — the same schema in every mode, so the perf
 trajectory can be tracked and diffed PR over PR.  ``baseline`` embeds the
-PR 6 reference rows (git rev + the wafer/backend/engine suites of the
-committed ``BENCH_PR6.json``) so numbers-vs-last-PR stay auditable even
-if the old file disappears (``benchmarks.schema`` enforces this chain on
-every committed ``BENCH_PR{n}.json``; PR 7 committed no json, so PR 8
-re-chains its baseline to PR 6) — in particular the
-``wafer_engine_fused_*`` rows the ISSUE 7 overlapped-exchange speedups
-are measured against.
+previous PR's reference rows (git rev + the wafer/backend/engine/fleet
+suites of the committed ``BENCH_PR9.json``) so numbers-vs-last-PR stay
+auditable even if the old file disappears (``benchmarks.schema`` enforces
+this chain on every committed ``BENCH_PR{n}.json``).  BENCH_PR9.json only
+recorded the fleet_scaling suite, so for the other reference suites the
+rows are recovered from the baseline it itself embeds (the PR 8 wafer/
+backend/engine rows) — the per-suite fallback in ``_baseline``.
 """
 import argparse
 import inspect
@@ -59,15 +62,16 @@ import traceback
 
 from . import (
     accuracy_vs_rate, backend_speedup, build_time, common, engine_speedup,
-    fault_recovery, fleet_scaling, procs_runtime, queue_perf,
+    fault_recovery, fleet_scaling, obs_overhead, procs_runtime, queue_perf,
     schema as schema_mod, sim_throughput, task_latency, timing_breakdown,
     wafer_scale,
 )
 
-BENCH_JSON = "BENCH_PR8.json"
+BENCH_JSON = "BENCH_PR10.json"
 SMOKE_JSON = "BENCH_SMOKE.json"
-BASELINE_JSON = "BENCH_PR6.json"  # the committed PR 6 trajectory rows
-BASELINE_SUITES = ("wafer_scale", "backend_speedup", "engine_speedup")
+BASELINE_JSON = "BENCH_PR9.json"  # the committed PR 9 trajectory rows
+BASELINE_SUITES = ("wafer_scale", "backend_speedup", "engine_speedup",
+                   "fleet_scaling")
 SCHEMA = schema_mod.SCHEMA
 
 SUITES = [
@@ -83,6 +87,7 @@ SUITES = [
     ("procs_runtime", procs_runtime.bench),
     ("fault_recovery", fault_recovery.bench),
     ("fleet_scaling", fleet_scaling.bench),
+    ("obs_overhead", obs_overhead.bench),
 ]
 
 
@@ -100,11 +105,13 @@ def _baseline() -> dict:
     """The previous PR's reference rows this PR's numbers are measured
     against.
 
-    ``BENCH_PR6.json`` is committed (the PR 6 full-tier trajectory); its
-    wafer/backend/engine suites are embedded here so the speedups stay
-    auditable even if the old file disappears.  On a clone where it is
-    gone, the baseline is recovered from the copy already embedded in the
-    committed ``BENCH_PR7.json``.
+    ``BENCH_PR9.json`` is committed (the PR 9 fleet trajectory); its
+    reference suites are embedded here so the speedups stay auditable
+    even if the old file disappears.  PR 9 only *ran* the fleet_scaling
+    suite, so each reference suite falls back to the copy PR 9 itself
+    embeds (the PR 8 wafer/backend/engine rows) when PR 9 recorded no
+    rows of its own.  On a clone where the file is gone entirely, the
+    baseline is recovered from the committed ``BENCH_PR10.json``.
     """
     root = os.path.join(os.path.dirname(__file__), "..")
     try:
@@ -116,12 +123,14 @@ def _baseline() -> dict:
                 return json.load(f)["baseline"]
         except (OSError, ValueError, KeyError):
             return {"ref": BASELINE_JSON, "missing": True}
+    prev_suites = prev.get("suites", {})
+    embedded = prev.get("baseline", {}).get("suites", {})
     return {
         "ref": BASELINE_JSON,
         "git_rev": prev.get("git_rev", "unknown"),
         "smoke": prev.get("smoke"),
         "suites": {
-            name: prev.get("suites", {}).get(name, [])
+            name: prev_suites.get(name) or embedded.get(name, [])
             for name in BASELINE_SUITES
         },
     }

@@ -56,7 +56,7 @@ def _rows(summary: dict, suite: str) -> dict[str, dict]:
 
 
 _BASELINE_REFS = ("BENCH_PR2.json", "BENCH_PR3.json", "BENCH_PR5.json",
-                  "BENCH_PR6.json", "BENCH_PR8.json")
+                  "BENCH_PR6.json", "BENCH_PR8.json", "BENCH_PR9.json")
 
 # Committed trajectory files form a chain: each PR's summary must embed its
 # predecessor's reference rows as ``baseline`` so every speedup-vs-last-PR
@@ -71,6 +71,7 @@ _CHAIN = {
     "BENCH_PR7.json": "BENCH_PR6.json",
     "BENCH_PR8.json": "BENCH_PR6.json",
     "BENCH_PR9.json": "BENCH_PR8.json",
+    "BENCH_PR10.json": "BENCH_PR9.json",
 }
 
 #: Chain links legitimately absent from the working tree.  Anything else
@@ -346,8 +347,33 @@ def gate_fleet(summary: dict) -> str:
             f"{len(bridge_rows)} bridge rows, bit-exactness asserted")
 
 
+def gate_obs(summary: dict) -> str:
+    """The ISSUE 10 flight-recorder overhead gates: the registry's
+    disabled fast path must keep the in-process dispatch loop within
+    timer noise (<= 1.02x), and a fully-traced 4-worker procs fleet —
+    per-phase shm telemetry records from every worker plus recorder
+    spans — must stay within 1.10x of the untraced fleet."""
+    rows = _rows(summary, "obs_overhead")
+    assert rows, "no obs_overhead rows recorded"
+    for need in ("obs_off_ratio", "obs_trace_ratio",
+                 "obs_registry_inc_enabled", "obs_registry_inc_disabled"):
+        assert need in rows, (
+            f"obs_overhead suite is missing the {need} row "
+            f"(recorded: {sorted(rows)})")
+    off = rows["obs_off_ratio"]["us_per_call"]
+    assert off <= 1.02, (
+        f"registry-enabled dispatch loop is {off:.4f}x the disabled loop "
+        "(gate <= 1.02: the tracing-off path stopped being free)")
+    traced = rows["obs_trace_ratio"]["us_per_call"]
+    assert traced <= 1.10, (
+        f"fully-traced procs fleet is {traced:.3f}x the untraced fleet "
+        "(gate <= 1.10: telemetry is slowing the simulation)")
+    return f"registry off {off:.4f}x (<=1.02), traced fleet {traced:.3f}x " \
+           f"(<=1.10)"
+
+
 GATES = {"smoke": gate_smoke, "trajectory": gate_trajectory,
-         "fleet": gate_fleet, "none": None}
+         "fleet": gate_fleet, "obs": gate_obs, "none": None}
 
 
 def main(argv=None) -> int:

@@ -35,6 +35,16 @@ each worker fleet's mean blocking-wait fraction (time stuck in shm-ring
 pops/pushes over total run time, measured inside the workers): the
 receive-late win is structural, so the fraction, unlike wall time on a
 throttled container, is stable enough to gate on.
+
+The **procs measurement rows** (ISSUE 10) come from the flight
+recorder instead of differencing: each worker's per-phase wall times
+(ingest / step / exchange_issue / exchange_commit / flush / epoch) ride
+the shm telemetry ring to the launcher, fold into the
+``procs.phase.*.s`` histograms, and ``repro.obs.drift`` closes the loop
+against ``core/perfmodel`` — the ``breakdown_procs_drift_*`` rows are
+the relative error between the measured epoch time and the model's
+prediction from the measured phase means (the ``perfmodel.model_drift``
+gauge).
 """
 import time
 
@@ -162,6 +172,9 @@ from repro.runtime import ProcsEngine
 R = C = 8
 EPOCHS = {epochs}
 
+from repro.obs import drift
+from repro.obs.registry import REGISTRY
+
 def run_one(overlap):
     values = (np.arange(R * C) % 7 + 1).astype(np.float32)
     graph = ChannelGraph.torus(
@@ -178,11 +191,29 @@ def run_one(overlap):
     sim.run(epochs=EPOCHS)
     frac = float(np.mean(
         [w['wait_fraction'] for w in eng.worker_stats(sim.state)]))
+    # ISSUE 10: direct per-phase measurement through the shm telemetry
+    # rings (replaces compiled-variant differencing for the procs engine)
+    REGISTRY.clear()
+    eng.set_tracing(True)
+    sim.run(epochs=EPOCHS)
+    eng.set_tracing(False)
+    eng.flush_telemetry()
+    snap = REGISTRY.snapshot()
+    means = drift.phase_means(snap)
+    fit = drift.compute_drift(snap, overlap=overlap)
     eng.close()
-    return frac
+    return frac, means, fit
 
 for mode, overlap in (('serial', False), ('overlap', True)):
-    print(f'PWAIT {mode} {run_one(overlap):.4f}')
+    frac, means, fit = run_one(overlap)
+    print(f'PWAIT {mode} {frac:.4f}')
+    print(f"PMEAS {mode} " + " ".join(
+        f"{p}={means.get(p, 0.0):.6f}"
+        for p in ('step', 'exchange_issue', 'exchange_commit', 'ingest',
+                  'flush', 'epoch')))
+    if fit:
+        print(f"PDRIFT {mode} {fit['model_drift']:.4f} "
+              f"{fit['predicted_s']:.6f} {fit['measured_s']:.6f}")
 """
 
 
@@ -262,6 +293,29 @@ def bench(smoke: bool = False):
         if line.startswith("PWAIT"):
             _, mode, frac = line.split()
             waits[mode] = float(frac)
+        elif line.startswith("PMEAS"):
+            # ISSUE 10: telemetry-measured per-epoch phase seconds (direct
+            # worker-side timing via the shm telemetry ring, NOT inferred
+            # by differencing compiled variants)
+            parts = line.split()
+            mode = parts[1]
+            means = dict(p.split("=") for p in parts[2:])
+            epoch_s = float(means.get("epoch", 0.0)) or 1.0
+            for phase, s in means.items():
+                if phase == "epoch":
+                    continue
+                us = float(s) * 1e6
+                emit(f"breakdown_procs_meas_{phase}_{mode}", us,
+                     f"{float(s) / epoch_s * 100:.0f}% of the "
+                     f"{epoch_s * 1e6:.0f} us/epoch {mode} procs epoch "
+                     "(telemetry-ring measurement, per-worker mean)")
+        elif line.startswith("PDRIFT"):
+            _, mode, d, pred, meas = line.split()
+            emit(f"breakdown_procs_drift_{mode}", float(d) * 100.0,
+                 f"perfmodel drift {float(d) * 100:.1f}%: measured "
+                 f"{float(meas) * 1e6:.0f} us/epoch vs "
+                 f"{float(pred) * 1e6:.0f} us predicted from the "
+                 f"telemetry phase means ({mode} schedule)")
     for mode, frac in sorted(waits.items()):
         other = waits.get("serial" if mode == "overlap" else "overlap", 0.0)
         emit(f"breakdown_procs_wait_{mode}", frac * 100.0,

@@ -6,6 +6,7 @@
 #   scripts/ci.sh smoke      # smoke benchmarks only
 #   scripts/ci.sh procs      # multiprocess-runtime smoke (hard timeout)
 #   scripts/ci.sh fleet      # 2-launcher TCP-bridged fleet smoke (ISSUE 9)
+#   scripts/ci.sh obs        # flight-recorder smoke + overhead gates (ISSUE 10)
 #   scripts/ci.sh examples   # all examples, smoke-sized, via the session API
 #
 # The smoke benchmarks run every suite (all four engines, the batched
@@ -37,7 +38,11 @@
 #     TCP-bridged chain keeps >= 0.5x single-host throughput with
 #     bit-exactness asserted in-benchmark (gated on the committed
 #     BENCH_PR9.json), and the fleet stage drills the bridge framing,
-#     loopback bit-exactness, and link-kill recovery under hard timeouts.
+#     loopback bit-exactness, and link-kill recovery under hard timeouts;
+#   * the flight recorder stays ~free (ISSUE 10): registry-disabled
+#     dispatch <= 1.02x, fully-traced 4-worker fleet <= 1.10x, and the
+#     obs stage additionally runs a REPRO_TRACE smoke wafer, validates
+#     the exported Perfetto trace, and renders the text report.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -70,6 +75,7 @@ if [[ "$stage" == "all" || "$stage" == "smoke" ]]; then
     python -m benchmarks.schema BENCH_SMOKE.json --gates smoke
     python -m benchmarks.schema BENCH_PR8.json --gates trajectory
     python -m benchmarks.schema BENCH_PR9.json --gates fleet
+    python -m benchmarks.schema BENCH_PR10.json --gates obs
     # every committed trajectory file must validate AND embed its
     # predecessor's rows as baseline (the PR-over-PR audit chain)
     for f in BENCH_PR*.json; do
@@ -128,6 +134,28 @@ if [[ "$stage" == "all" || "$stage" == "fleet" ]]; then
     # allreduce invariant still witnesses every packet crossing it
     timeout 300 python examples/wafer_scale.py --rows 8 --cols 8 \
         --k-inner 4 --engine procs --hosts 2
+fi
+
+if [[ "$stage" == "all" || "$stage" == "obs" ]]; then
+    # ISSUE 10: the flight recorder end to end — a procs smoke wafer run
+    # traced via the REPRO_TRACE env knob must export a Perfetto-loadable
+    # timeline (validated by repro.obs.schema, rendered by
+    # repro.obs.report), the obs test suite must pass (bit-identical
+    # traced-vs-untraced traffic on every engine, recovery incidents in
+    # the timeline), and the overhead ratios must hold their gates.
+    OBS_TRACE="${TMPDIR:-/tmp}/repro_ci_trace.json"
+    OBS_BENCH="${TMPDIR:-/tmp}/BENCH_OBS_SMOKE.json"
+    echo "=== flight recorder: traced smoke wafer (REPRO_TRACE) ==="
+    REPRO_TRACE="$OBS_TRACE" timeout 300 python examples/wafer_scale.py \
+        --rows 8 --cols 8 --k-inner 4 --engine procs
+    echo "=== flight recorder: validate + report the exported trace ==="
+    python -m repro.obs.schema "$OBS_TRACE"
+    python -m repro.obs.report "$OBS_TRACE" --top 5
+    echo "=== flight recorder: obs test suite (hard 600s timeout) ==="
+    timeout 600 python -m pytest -q tests/test_obs.py -x
+    echo "=== flight recorder: overhead gates (<=1.02x off, <=1.10x on) ==="
+    python -m benchmarks.run --only obs_overhead --smoke --json "$OBS_BENCH"
+    python -m benchmarks.schema "$OBS_BENCH" --gates obs
 fi
 
 if [[ "$stage" == "all" || "$stage" == "examples" ]]; then

@@ -85,6 +85,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import queue as qmod
+from ..obs.registry import REGISTRY
 from .block import Block
 from .compat import shard_map
 from .graph import (
@@ -1089,6 +1090,7 @@ class GraphEngine:
         """
         key = ("run", n_epochs, donate)
         if key not in self._jit_cache:
+            REGISTRY.inc(f"{self.engine_kind}.compile.count")
 
             def run(state):
                 local = self._local_view(state)
@@ -1103,6 +1105,8 @@ class GraphEngine:
             )
         if donate:
             state = _dealias_for_donation(state)
+        REGISTRY.inc(f"{self.engine_kind}.dispatch.count")
+        REGISTRY.inc(f"{self.engine_kind}.epochs", float(n_epochs))
         return self._jit_cache[key](state)
 
     def run_cycles(self, state: GraphState, n_cycles: int) -> GraphState:

@@ -37,6 +37,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..kernels import ops as kops
+from ..obs.registry import REGISTRY
 from .compat import shard_map
 from .graph import ChannelGraph
 from .struct import pytree_dataclass
@@ -303,6 +304,7 @@ class RegisterGridEngine:
         """
         key = ("epochs", n_epochs, donate)
         if key not in self._cache:
+            REGISTRY.inc("register.compile.count")
 
             def run(state):
                 local = _sq(state)
@@ -321,6 +323,8 @@ class RegisterGridEngine:
             from .distributed import _dealias_for_donation
 
             state = _dealias_for_donation(state)
+        REGISTRY.inc("register.dispatch.count")
+        REGISTRY.inc("register.epochs", float(n_epochs))
         return self._cache[key](state)
 
     def run_until(

@@ -48,6 +48,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from . import queue as qmod
+from ..obs.registry import REGISTRY
 from .block import Block
 from .distributed import GraphEngine, _dealias_for_donation, _rank_within
 from .graph import ChannelGraph, grid_partition
@@ -937,6 +938,7 @@ class FusedEngine(GraphEngine):
             return super().run_epochs(state, n_epochs, donate=donate)
         key = ("run_rows", n_epochs, donate)
         if key not in self._jit_cache:
+            REGISTRY.inc("fused.compile.count")
 
             def run(state):
                 local = self._local_view(state)
@@ -959,6 +961,8 @@ class FusedEngine(GraphEngine):
             )
         if donate:
             state = _dealias_for_donation(state)
+        REGISTRY.inc("fused.dispatch.count")
+        REGISTRY.inc("fused.epochs", float(n_epochs))
         return self._jit_cache[key](state)
 
     def _tier_round(self, st: FusedState, t: int) -> FusedState:

@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 
 from . import queue as qmod
+from ..obs.registry import REGISTRY
 from .block import Block
 from .graph import ChannelGraph
 from .struct import pytree_dataclass, static_field
@@ -359,6 +360,7 @@ class NetworkSim:
         """
         key = (n_cycles, donate)
         if key not in self._jit_cache:
+            REGISTRY.inc("single.compile.count")
 
             def impl(st):
                 return jax.lax.scan(
@@ -372,6 +374,8 @@ class NetworkSim:
             from .distributed import _dealias_for_donation
 
             state = _dealias_for_donation(state)
+        REGISTRY.inc("single.dispatch.count")
+        REGISTRY.inc("single.cycles", float(n_cycles))
         return self._jit_cache[key](state)
 
     def run_until(

@@ -57,7 +57,9 @@ host callback at epoch boundaries during ``run``.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
+import time
 import warnings
 from typing import Any, Callable
 
@@ -66,6 +68,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import queue as qmod
+from ..obs import trace as _trace
+from ..obs.registry import REGISTRY
+from ..obs.schema import STATS_SCHEMA
 
 PyTree = Any
 
@@ -231,6 +236,13 @@ class Simulation:
         graph = getattr(engine, "graph", None)
         self._ext_in = dict(graph.ext_in) if graph is not None else {}
         self._ext_out = dict(graph.ext_out) if graph is not None else {}
+        # flight recorder: REPRO_TRACE=<path> arms the process-global
+        # recorder (exported at interpreter exit); engines that carry
+        # worker telemetry switch it on too
+        if _trace.maybe_enable_from_env():
+            st = getattr(engine, "set_tracing", None)
+            if st is not None:
+                st(True)
 
     # ------------------------------------------------------------- lifecycle
     @property
@@ -371,14 +383,16 @@ class Simulation:
         return self.engine.group_state(self._require_state(), inst)
 
     def stats(self) -> dict:
-        """Cycle/epoch counters plus per-port state, ONE schema on every
-        engine: each tx/rx entry nests the session counters (sent/pending
-        resp. received) AND the port's live queue occupancy/credit —
-        device-queue occupancy on the in-process engines, shm-ring +
-        owning-worker occupancy on the ``procs`` runtime — so
-        ``benchmarks/sim_throughput.py`` can report one schema across
-        engines.  The single engine additionally reports its per-channel
-        push/pop handshake counts."""
+        """Cycle/epoch counters plus per-port state, behind the ONE
+        validated schema on every engine (``repro-stats-v1``; see
+        ``repro.obs.schema.validate_stats``): each tx/rx entry nests the
+        session counters (sent/pending resp. received) AND the port's
+        live queue occupancy/credit — device-queue occupancy on the
+        in-process engines, shm-ring + owning-worker occupancy on the
+        ``procs`` runtime.  Engine-specific extras (e.g. the single
+        engine's per-channel push/pop handshake counts) live under
+        ``"detail"`` — the only key allowed to diverge per engine — and
+        ``"metrics"`` is a snapshot of the process-global registry."""
         st = self._require_state()
         ps = getattr(self.engine, "port_stats", None)
         occ = ps(st) if ps is not None else {}
@@ -389,6 +403,7 @@ class Simulation:
                     "credit": int(rec.get("credit", 0))}
 
         d: dict[str, Any] = {
+            "schema": STATS_SCHEMA,
             "engine": self.kind,
             "cycle": self.cycle,
             "epoch": self.epoch,
@@ -400,9 +415,15 @@ class Simulation:
                        for n, p in self._rx_ports.items()},
             },
         }
+        REGISTRY.set("session.tx.sent",
+                     float(sum(p.sent for p in self._tx_ports.values())))
+        REGISTRY.set("session.rx.received",
+                     float(sum(p.received for p in self._rx_ports.values())))
         if self.kind == "single":
-            d["push_count"] = np.asarray(jax.device_get(st.push_count))
-            d["pop_count"] = np.asarray(jax.device_get(st.pop_count))
+            d["detail"] = {
+                "push_count": np.asarray(jax.device_get(st.push_count)),
+                "pop_count": np.asarray(jax.device_get(st.pop_count)),
+            }
         fs = getattr(self.engine, "fault_stats", None)
         if fs is not None:
             # the procs runtime's self-healing surface (ISSUE 8): policy,
@@ -412,10 +433,44 @@ class Simulation:
         if bs is not None:
             # multi-host fleets (ISSUE 9): one row per TCP ring bridge —
             # bytes/slabs/credits each way, credit RTT, wait fraction
+            # (steady-state pump only; cold-start under "connect_s")
             rows = bs()
             if rows:
                 d["bridges"] = rows
+        d["metrics"] = REGISTRY.snapshot()
         return d
+
+    @contextlib.contextmanager
+    def trace(self, path: str):
+        """Flight-recorder window: record span/instant events (and, on the
+        procs engine, per-worker phase telemetry) for the body, then
+        export a Perfetto/Chrome-loadable ``trace.json`` to ``path``::
+
+            with sim.trace("/tmp/trace.json"):
+                sim.run(epochs=200)
+
+        Tracing changes no simulated behavior — final state and host Rx
+        traffic stay bit-identical to an untraced run (tested in
+        ``tests/test_obs.py``).  The ``REPRO_TRACE=<path>`` env knob is
+        the non-contextual variant (exports at interpreter exit)."""
+        rec = _trace.recorder()
+        prev = rec.enabled
+        rec.enabled = True
+        st = getattr(self.engine, "set_tracing", None)
+        if st is not None:
+            st(True)
+        try:
+            yield self
+        finally:
+            try:
+                flush = getattr(self.engine, "flush_telemetry", None)
+                if flush is not None:
+                    flush()
+                if st is not None:
+                    st(False)
+            finally:
+                rec.export(path)
+                rec.enabled = prev
 
     def add_monitor(self, fn: Callable[["Simulation"], None],
                     every: int = 1) -> Monitor:
@@ -433,6 +488,8 @@ class Simulation:
         if n_epochs <= 0:
             return
         st = self._require_state()
+        rec = _trace.recorder()
+        t0 = time.monotonic() if rec.enabled else 0.0
         if self.kind == "single":
             self._state = self.engine.run(st, n_epochs * self.period,
                                           donate=True)
@@ -440,11 +497,21 @@ class Simulation:
             per = self.period // int(self.engine.cycles_per_epoch)
             self._state = self.engine.run_epochs(st, n_epochs * per,
                                                  donate=True)
+        REGISTRY.inc("session.epochs", float(n_epochs))
+        if rec.enabled:
+            rec.span("epoch_window", t0, time.monotonic() - t0,
+                     cat="session", args={"epochs": int(n_epochs)})
 
     def _advance_cycles_single(self, n_cycles: int) -> None:
         if n_cycles > 0:
+            rec = _trace.recorder()
+            t0 = time.monotonic() if rec.enabled else 0.0
             self._state = self.engine.run(self._require_state(), n_cycles,
                                           donate=True)
+            REGISTRY.inc("session.cycles", float(n_cycles))
+            if rec.enabled:
+                rec.span("epoch_window", t0, time.monotonic() - t0,
+                         cat="session", args={"cycles": int(n_cycles)})
 
     def _host_done(self, done_fn, cache_key=None) -> bool:
         """Evaluate an engine-view predicate on the host (between chunks).
@@ -586,6 +653,7 @@ class Simulation:
             if b and b % mon.every == 0 and b != mon._last:
                 mon._last = b
                 mon._fire()
+                REGISTRY.inc("session.monitor.fired")
 
     def _run_until(self, done_fn, max_cycles, max_epochs, cache_key):
         per = self.period

@@ -229,6 +229,10 @@ class BridgeProxy:
         self._slab_sent_t: dict[int, float] = {}
         self._t0 = time.monotonic()
         self._wait_s = 0.0
+        # rendezvous wall time, kept OUT of the steady-state pump window:
+        # counting cold-start (peer spawn, TCP dial retries) in the
+        # wait_fraction denominator used to dilute the stall metric
+        self._connect_s = 0.0
 
     # ------------------------------------------------------------ heartbeat
     def _beat(self, status: int = 0) -> None:
@@ -292,6 +296,11 @@ class BridgeProxy:
                 f"got {peer}, want token={spec.token} link={spec.link}"
             )
         self.sock.settimeout(max(spec.timeout, 60.0))
+        # link is up: close the connect window and restart the steady-
+        # state clock, so wait_fraction measures pump stalls only
+        self._connect_s = time.monotonic() - self._t0
+        self._t0 = time.monotonic()
+        self._wait_s = 0.0
         self.conn.send(("up", peer.get("host")))
         self._log(f"link up ({spec.role}, peer {peer.get('host')})")
 
@@ -490,6 +499,7 @@ class BridgeProxy:
             "credits_rx": int(self.credits_rx),
             "credit_rtt_s": float(self._rtt_mean),
             "wait_fraction": float(self._wait_s / total),
+            "connect_s": float(self._connect_s),
         }
 
     def close(self) -> None:

@@ -66,6 +66,10 @@ import numpy as np
 
 from ..core import queue as qmod
 from ..kernels import granule_step
+from ..obs import telemetry as _telem
+from ..obs import trace as _trace
+from ..obs.registry import REGISTRY
+from ..obs.telemetry import telemetry_ring_name
 from ..core.graph import (
     ChannelGraph, PartitionLowering, PartitionTree, Tier, lower_partition,
     normalize_partition, normalize_tiers,
@@ -492,6 +496,11 @@ class ProcsEngine:
         # rewind: the replay regenerates them, the host-facing pop drops
         # them (exactly-once delivery; owned by the RecoveryController)
         self._ext_discard: dict[str, int] = {}
+        # flight recorder (repro.obs): per-worker telemetry ring names,
+        # tracing toggle, and the (pid, tid) tracks already named
+        self._telem_on = False
+        self._telem_names: dict[int, str] = {}
+        self._telem_tracked: set[tuple[int, int]] = set()
         self._recovery = RecoveryController(
             self, snapshot_every=snapshot_every, max_restarts=max_restarts,
             backoff_s=backoff_s,
@@ -615,11 +624,19 @@ class ProcsEngine:
                 parent, child = self._ctx.Pipe()
                 log_path = os.path.join(self._log_dir, f"worker{g}.log")
                 faults = actions_for(self.fault_plan, g, self._incarnation)
+                # flight-recorder ring: always created (a few hundred KB),
+                # records only flow once tracing is switched on
+                tname = telemetry_ring_name(self._ring_prefix, g)
+                self._rings[tname] = ShmRing.create(
+                    tname, _telem.TELEM_RING_RECORDS,
+                    _telem.TELEM_RECORD_BYTES,
+                )
+                self._telem_names[g] = tname
                 p = self._ctx.Process(
                     target=worker_entry,
                     args=(child, pickle.dumps(spec), g, log_path,
                           self.cache_dir, hb_name,
-                          pickle.dumps(faults) if faults else None),
+                          pickle.dumps(faults) if faults else None, tname),
                     daemon=True,
                     name=f"repro-granule-{g}",
                 )
@@ -679,6 +696,17 @@ class ProcsEngine:
             self.launch_stats["ready_seconds"][g] = time.perf_counter() - t0
         if self.host_plan is not None and self.is_leader:
             self._rendezvous_fleet()
+        REGISTRY.set("procs.workers", float(self.NW))
+        REGISTRY.set("procs.incarnation", float(self._incarnation))
+        if self.build_stats.get("prebuild_seconds"):
+            REGISTRY.set("procs.prebuild.s",
+                         float(self.build_stats["prebuild_seconds"]))
+            REGISTRY.set("procs.compile.count",
+                         float(len(self.build_stats.get("compiled", {}))))
+        if self._telem_on:
+            # a respawn (recovery _reopen) keeps tracing on across
+            # incarnations; a pre-launch set_tracing lands here too
+            self._apply_tracing()
         # a follower returns here with its bridges still un-dialed:
         # ``fleet.follower_entry`` sends the hello (with _accept_ports)
         # and calls _finish_rendezvous once the leader broadcasts the map
@@ -846,6 +874,11 @@ class ProcsEngine:
         if self._closed:
             return
         self._closed = True
+        if self._telem_on:
+            try:  # last drain before the rings unlink (best-effort)
+                self._drain_telemetry_once()
+            except Exception:
+                pass
         # exits go out to everyone first (followers tear their own fleets
         # down concurrently with our local joins)
         for ctl in list(self._follower_ctls.values()):
@@ -937,6 +970,7 @@ class ProcsEngine:
         self._follower_mid = {}
         self._ctl_listener = None
         self._rings = {}
+        self._telem_names = {}
         self._hb_shm = None
         self._hb = None
         self._monitor = None
@@ -1249,6 +1283,11 @@ class ProcsEngine:
                     deadline = time.monotonic() + self.timeout
                 continue
             self._check_workers(waiting_on=tuple(sorted(pending)))
+            if self._telem_on:
+                # free-running coverage: keep the telemetry rings drained
+                # while the fleet runs, so a bounded ring never forces the
+                # workers to drop records on long epochs-per-command runs
+                self._drain_telemetry_once()
             if deadline is not None and time.monotonic() > deadline:
                 g = min(pending)
                 tail = read_log_tail(self._monitor.log_paths[g])
@@ -1414,6 +1453,9 @@ class ProcsEngine:
         epochs = self._broadcast(("run", int(n_epochs)), progress=True)
         for h in self._follower_hosts:
             epochs.update(self._ctl_wait(h, progress=True))
+        if self._telem_on:
+            self._drain_telemetry_once()
+            self._drain_followers()
         done = next(iter(epochs.values()))
         assert all(e == done for e in epochs.values()), epochs
         return state.replace(
@@ -1434,6 +1476,10 @@ class ProcsEngine:
         ``linkcorrupt``, to a side that actually SENDS slabs, since the
         corruption flips a byte in the next outbound slab frame)."""
         self._fired_links.add((a.kind, a.worker, a.epoch, a.restart))
+        REGISTRY.inc("faults.injected")
+        _trace.instant("fault_injected", cat="fault",
+                       args={"kind": a.kind, "link": int(a.worker),
+                             "incarnation": int(self._incarnation)})
         lk = self._links[int(a.worker)]
         mid = self._bridge_ids.get(lk.link)
         local = mid is not None and mid in self._bridge_conns
@@ -1586,7 +1632,101 @@ class ProcsEngine:
                 out.extend(payload)
             else:
                 out.append(payload)
+        if self._telem_on:
+            self._drain_telemetry_once()
         return out
+
+    # ------------------------------------------------------ flight recorder
+    def set_tracing(self, on: bool) -> bool:
+        """Toggle per-worker phase telemetry fleet-wide (``repro.obs``).
+        Pre-launch calls are remembered and applied by ``launch()``; a
+        recovery respawn re-applies the setting to the new incarnation."""
+        self._telem_on = bool(on)
+        if self._launched:
+            self._apply_tracing()
+            if not self._telem_on:
+                self._drain_telemetry_once(force=True)
+        return self._telem_on
+
+    def _apply_tracing(self) -> None:
+        on = self._telem_on
+        for h in self._follower_hosts:
+            try:
+                self._ctl_cmd(h, "telemetry", on)
+            except WorkerDiedError:
+                raise
+            except Exception:
+                pass
+        self._broadcast(("telemetry", on))
+
+    def _is_telem_sink(self) -> bool:
+        """Only the leader (or a single-host engine) folds records into
+        the process-global recorder/registry — a follower ships its raw
+        records to the leader via the ``obs_drain`` control op instead."""
+        return self.host_plan is None or self.is_leader
+
+    def _drain_telemetry_once(self, force: bool = False) -> None:
+        """Pop every pending local telemetry record into the trace
+        recorder and metrics registry (cheap no-op when nothing pends)."""
+        if not (self._is_telem_sink() or force):
+            return
+        for g, name in sorted(self._telem_names.items()):
+            ring = self._rings.get(name)
+            if ring is None:
+                continue
+            self._fold_records(g, _telem.drain(ring), pid=0,
+                               host=self.host or "local")
+
+    def _fold_records(self, g: int, records, *, pid: int,
+                      host: str) -> None:
+        if records.shape[0] == 0:
+            return
+        rec = _trace.recorder()
+        key = (int(pid), int(g))
+        if key not in self._telem_tracked:
+            self._telem_tracked.add(key)
+            rec.set_process(pid, f"procs:{host}")
+            rec.set_track(pid, int(g), f"worker {g}")
+        _telem.records_to_events(records, worker=int(g), pid=pid,
+                                 recorder=rec, registry=REGISTRY)
+
+    def _drain_followers(self) -> None:
+        """Pull follower hosts' raw telemetry records over the control
+        links and fold them in under their host's trace pid."""
+        if self.host_plan is None or not self.is_leader:
+            return
+        for i, h in enumerate(self._follower_hosts):
+            try:
+                got = self._ctl_cmd(h, "obs_drain")
+            except Exception:
+                continue
+            for g in sorted(got):
+                rows = np.asarray(got[g], np.float64).reshape(
+                    -1, _telem.TELEM_RECORD_F64)
+                self._fold_records(g, rows, pid=1 + i, host=h)
+
+    def flush_telemetry(self) -> None:
+        """Drain every host's telemetry rings into the recorder/registry —
+        the trace-export path (``Simulation.trace`` exit, ``REPRO_TRACE``
+        atexit).  Also folds bridge counters in as one track per proxy."""
+        if not self._launched or self._closed:
+            return
+        self._drain_telemetry_once()
+        self._drain_followers()
+        rec = _trace.recorder()
+        for i, row in enumerate(self.bridge_stats()):
+            link = int(row.get("link", i))
+            REGISTRY.set(f"bridge.l{link}.{row.get('role', 'x')}.bytes_tx",
+                         float(row.get("bytes_tx", 0)))
+            REGISTRY.set(f"bridge.l{link}.{row.get('role', 'x')}.bytes_rx",
+                         float(row.get("bytes_rx", 0)))
+            if rec.enabled:
+                tid = self.NW + i
+                rec.set_track(0, tid,
+                              f"bridge {link} ({row.get('host', '?')})")
+                rec.instant("bridge_counters", pid=0, tid=tid, cat="bridge",
+                            args={k: v for k, v in row.items()
+                                  if isinstance(v, (int, float, str))})
 
     def port_stats(self, state: ProcsState) -> dict[str, dict]:
         """Per external port: shm-ring occupancy (packets the host can pop /
@@ -2037,6 +2177,22 @@ class ProcsEngine:
                 int(n), self.dtype, self.W)
         if op == "bridge_stats":
             return self._local_bridge_stats()
+        if op == "telemetry":
+            (on,) = args
+            self._telem_on = bool(on)
+            self._broadcast(("telemetry", bool(on)))
+            return True
+        if op == "obs_drain":
+            # ship raw per-worker records to the leader (the only sink)
+            out = {}
+            for g, name in sorted(self._telem_names.items()):
+                ring = self._rings.get(name)
+                if ring is None:
+                    continue
+                rows = _telem.drain(ring)
+                if rows.shape[0]:
+                    out[g] = rows
+            return out
         if op == "linkfault":
             kind, link, arg = args
             mid = self._bridge_ids[int(link)]

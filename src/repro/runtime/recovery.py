@@ -70,6 +70,8 @@ from typing import Any
 
 import numpy as np
 
+from ..obs import trace as _trace
+from ..obs.registry import REGISTRY
 from .fault_tolerance import FleetStallError, WorkerDiedError
 from .shmem import RingCorruptionError, RingTimeout
 
@@ -229,10 +231,16 @@ class RecoveryController:
                            list(self._inject))
 
     def _take_snapshot(self, state) -> None:
+        t0 = time.monotonic()
         self._snapshot = self.engine.gather_state(state)
         self._snapshot_epoch = int(state.epoch)
         self._absorb_host_io()
         self.snapshots += 1
+        dur = time.monotonic() - t0
+        REGISTRY.observe("recovery.snapshot.s", dur)
+        _trace.span("snapshot", t0, dur, cat="recovery",
+                    args={"epoch": self._snapshot_epoch,
+                          "incarnation": int(self.engine._incarnation)})
 
     def _ensure_snapshot(self, state) -> None:
         """Entering a run: make the snapshot describe the CURRENT quiesced
@@ -306,6 +314,12 @@ class RecoveryController:
             "backoff_s": delay,
             "restore_seconds": time.perf_counter() - t0,
         }
+        REGISTRY.inc("recovery.restarts")
+        REGISTRY.observe("recovery.restore.s",
+                         self._last_recovery["restore_seconds"])
+        _trace.instant("recovery_incident", cat="recovery",
+                       args={**self._last_recovery,
+                             "incarnation": int(eng._incarnation)})
         return handle
 
     # ---------------------------------------------------------------- stats

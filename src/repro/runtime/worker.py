@@ -48,6 +48,7 @@ import numpy as np
 
 from ..core import queue as qmod
 from ..core.struct import pytree_dataclass
+from ..obs import telemetry as _telem
 from .fault_tolerance import (
     OP_CREDIT_POP, OP_CREDIT_PUSH, OP_SLAB_POP, OP_SLAB_PUSH, encode_blocked,
 )
@@ -614,6 +615,7 @@ class Worker:
         self.ring_timeout = spec.timeout * 2
         self.wait_s = 0.0  # time blocked on peer rings (credits/slabs)
         self.run_s = 0.0  # wallclock inside "run" commands
+        self.telem = None  # TelemetryWriter once the entry attaches a ring
         self._init_faults(faults)
         cap_b = spec.capacity
         itemsize = np.dtype(spec.dtype).itemsize
@@ -829,6 +831,9 @@ class Worker:
         self._exchange_commit(t)
 
     def one_epoch(self) -> None:
+        tl = self.telem
+        if tl is not None and tl.enabled:
+            return self._traced_epoch(tl)
         if self.injector is not None:
             # plan-driven faults fire at deterministic LOCAL epoch numbers,
             # before any of this epoch's effects — reproducible drills
@@ -848,6 +853,52 @@ class Worker:
         self._flush_ext()
         self.state = self.sim._compiled["tick"](self.state)
         self.epochs_done += 1
+        self.beat()
+
+    def _traced_epoch(self, tl) -> None:
+        """``one_epoch`` with per-phase telemetry records.  Mirrors the
+        untraced walk exactly (same ring ops, same op order — traffic
+        stays bit-identical); each phase costs one monotonic read and one
+        non-blocking 48-byte ring push."""
+        if self.injector is not None:
+            self.injector.before_epoch(self)
+        if self.slow_per_epoch:
+            time.sleep(self.slow_per_epoch)
+        wait0 = self.wait_s
+        e0 = t0 = time.monotonic()
+        self._ingest_ext()
+        tl.phase(_telem.TEV_INGEST, 0.0, t0)
+        for op, arg in self.sim.program:
+            t0 = time.monotonic()
+            if op == "C":
+                self.state = self.sim._compiled[("C", arg)](self.state)
+                tl.phase(_telem.TEV_STEP, float(arg), t0)
+            elif op == "XI":
+                self._exchange_issue(arg)
+                tl.phase(_telem.TEV_ISSUE, float(arg), t0)
+            elif op == "XC":
+                self._exchange_commit(arg)
+                tl.phase(_telem.TEV_COMMIT, float(arg), t0)
+            else:
+                self._exchange_issue(arg)
+                tl.phase(_telem.TEV_ISSUE, float(arg), t0)
+                t0 = time.monotonic()
+                self._exchange_commit(arg)
+                tl.phase(_telem.TEV_COMMIT, float(arg), t0)
+        t0 = time.monotonic()
+        self._flush_ext()
+        tl.phase(_telem.TEV_FLUSH, 0.0, t0)
+        self.state = self.sim._compiled["tick"](self.state)
+        self.epochs_done += 1
+        occ = n_d = 0
+        for (kind, _c), ring in self.rings.items():
+            if kind == "d":
+                occ += ring.size()
+                n_d += 1
+        tl.emit(_telem.TEV_OCC, 0.0, time.monotonic(), 0.0,
+                float(occ), float(n_d))
+        tl.phase(_telem.TEV_EPOCH, float(self.epochs_done - 1), e0,
+                 v0=self.wait_s - wait0)
         self.beat()
 
     # --------------------------------------------------------- command loop
@@ -899,6 +950,11 @@ class Worker:
                     self.conn.send(("ok", self.epochs_done))
                 elif op == "stats":
                     self.conn.send(("ok", self._stats()))
+                elif op == "telemetry":
+                    on = bool(cmd[1])
+                    if self.telem is not None:
+                        self.telem.enabled = on
+                    self.conn.send(("ok", on and self.telem is not None))
                 elif op == "exit":
                     self.conn.send(("ok", None))
                     return
@@ -946,6 +1002,7 @@ class Worker:
             "wait_s": self.wait_s,
             "run_s": self.run_s,
             "wait_fraction": (self.wait_s / self.run_s) if self.run_s else 0.0,
+            "telem_dropped": self.telem.dropped if self.telem else 0,
         }
 
 
@@ -971,6 +1028,7 @@ class BatchedWorker(Worker):
         self.ring_timeout = self.spec.timeout * 2
         self.wait_s = 0.0
         self.run_s = 0.0
+        self.telem = None
         self._init_faults(faults)
         itemsize = np.dtype(self.spec.dtype).itemsize
         self.rings: dict[tuple[str, int], ShmRing] = {}
@@ -1127,6 +1185,7 @@ class BatchedWorker(Worker):
                 "run_s": self.run_s,
                 "wait_fraction": (self.wait_s / self.run_s)
                 if self.run_s else 0.0,
+                "telem_dropped": self.telem.dropped if self.telem else 0,
             })
         return out
 
@@ -1153,7 +1212,8 @@ def attach_heartbeat(hb_ring_name: str, index: int):
 def worker_entry(conn, spec_pickle: bytes, worker_index: int,
                  log_path: str | None, cache_dir: str | None,
                  hb_ring_name: str | None,
-                 faults_pickle: bytes | None = None) -> None:
+                 faults_pickle: bytes | None = None,
+                 telem_ring_name: str | None = None) -> None:
     """Process entry point (spawn context).  Builds the granule simulator
     (hitting the persistent compilation cache warmed by the launcher's
     prebuild pass), then serves the command loop until "exit".
@@ -1199,6 +1259,14 @@ def worker_entry(conn, spec_pickle: bytes, worker_index: int,
         w = (BatchedWorker(spec, conn, hb, faults)
              if isinstance(spec, BatchSpec)
              else Worker(spec, conn, hb, faults))
+        if telem_ring_name:
+            # flight-recorder ring (repro.obs): worker is sole producer;
+            # stored under ("t", 0) so the exit sweep below closes it
+            tring = ShmRing.attach(telem_ring_name,
+                                   _telem.TELEM_RING_RECORDS,
+                                   _telem.TELEM_RECORD_BYTES)
+            w.rings[("t", 0)] = tring
+            w.telem = _telem.TelemetryWriter(tring)
         build = w.sim.prebuild()
         print(f"[worker {worker_index}] prebuilt {build['n_functions']} fns "
               f"in {build['seconds']:.2f}s", flush=True)

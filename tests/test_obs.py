@@ -1,0 +1,464 @@
+"""Flight recorder (ISSUE 10; DESIGN.md §Observability).
+
+Covered here:
+
+  * metrics registry units: dotted-name validation, kind collisions,
+    the disabled fast path, histogram summaries, snapshot ordering;
+  * the shm telemetry ring property test: random emit/drain
+    interleavings against ``core/queue.py``'s QueueArray — both accept
+    and refuse pushes identically, and the ring's record payloads come
+    back FIFO;
+  * ``TelemetryWriter`` drop accounting (non-blocking emit into a full
+    ring drops + counts, never waits);
+  * ``records_to_events`` folding drained records into recorder spans
+    and registry histograms;
+  * trace recorder units: span/instant/track metadata, the bounded
+    buffer, Chrome-format export validated by ``obs.schema``;
+  * ``validate_stats``/``validate_trace`` accept the real thing and
+    reject malformed layouts;
+  * every engine family's ``stats()`` passes the ONE schema;
+  * tracing is observation-only: traced vs untraced host traffic is
+    bit-identical on the in-process engines AND a 4-worker procs fleet
+    (whose trace carries per-worker ingest/step/exchange/flush spans);
+  * a kill drill under ``sim.trace`` leaves a ``recovery_incident``
+    instant (with incarnation tag) in the exported timeline;
+  * a 2-host bridged fleet reports ``connect_s`` separately from the
+    steady-state ``wait_fraction`` (the cold-start dilution bugfix);
+  * perfmodel drift arithmetic on a hand-built registry snapshot;
+  * ``obs.report`` renders phase breakdown / stragglers / incidents.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import queue as qmod
+from repro.obs import drift, report as oreport, schema as oschema, telemetry
+from repro.obs.registry import REGISTRY, MetricsRegistry
+from repro.obs.trace import TID_SESSION, TraceRecorder
+from repro.runtime import ShmRing
+
+from test_session import Increment, build_chain, io_script, _sessions_k1
+
+_TIMEOUT = 60.0  # generous: 2-CPU CI boxes timeshare the workers
+
+
+def procs_build(net, **kw):
+    kw.setdefault("timeout", _TIMEOUT)
+    return net.build(engine="procs", **kw)
+
+
+@pytest.fixture
+def closing():
+    sims = []
+    yield sims.append
+    for sim in sims:
+        try:
+            sim.engine.close()
+        except Exception:
+            pass
+
+
+# ------------------------------------------------------- metrics registry
+def test_registry_kinds_and_snapshot():
+    reg = MetricsRegistry()
+    reg.inc("a.b.count")
+    reg.inc("a.b.count", 2.0)
+    reg.set("a.b.gauge", 7.5)
+    for v in (1.0, 3.0, 2.0):
+        reg.observe("a.b.hist", v)
+    snap = reg.snapshot()
+    assert list(snap) == sorted(snap)  # stable, sorted export
+    assert snap["a.b.count"] == 3.0
+    assert snap["a.b.gauge"] == 7.5
+    h = snap["a.b.hist"]
+    assert h == {"count": 3, "sum": 6.0, "mean": 2.0, "min": 1.0, "max": 3.0}
+    reg.clear()
+    assert reg.snapshot() == {}
+
+
+def test_registry_name_and_kind_errors():
+    reg = MetricsRegistry()
+    for bad in ("nodots", "Upper.case", "trailing.", ".leading", "a b.c"):
+        with pytest.raises(ValueError):
+            reg.inc(bad)
+    reg.inc("x.count")
+    with pytest.raises(TypeError):
+        reg.set("x.count", 1.0)  # counter already, not a gauge
+    with pytest.raises(TypeError):
+        reg.observe("x.count", 1.0)
+
+
+def test_registry_disabled_fast_path():
+    """Disabled publishing must not even *create* metrics — the ≤1.02x
+    tracing-off budget rides on this early return."""
+    reg = MetricsRegistry(enabled=False)
+    reg.inc("a.b")
+    reg.set("a.c", 1.0)
+    reg.observe("a.d", 1.0)
+    assert reg.snapshot() == {}
+    reg.inc("NOT A VALID NAME")  # not validated either: never reached
+
+
+# ------------------------------------- telemetry ring vs queue.py semantics
+def _ring(cap, tag):
+    return ShmRing.create(f"t_obs_{os.getpid()}_{tag}", cap,
+                          telemetry.TELEM_RECORD_BYTES)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_telemetry_ring_matches_queue_semantics(seed):
+    """Random emit/drain interleavings: the telemetry ring accepts and
+    refuses 48-byte records exactly like the paper's credit-free queue
+    at the same capacity, and drained payloads come back FIFO."""
+    cap = 4
+    rng = np.random.RandomState(seed)
+    ring = _ring(cap, f"prop{seed}")
+    try:
+        q = qmod.make_queues(1, 6, cap)
+        expect = []  # FIFO model of what the ring holds
+        for i in range(60):
+            do_push, do_pop = bool(rng.randint(2)), bool(rng.randint(2))
+            assert ring.size() == int(qmod.size(q)[0])
+            assert ring.free() == int(qmod.free(q)[0])
+            assert ring.empty() == bool(qmod.empty(q)[0])
+            assert ring.full() == bool(qmod.full(q)[0])
+            if do_pop:
+                rec = ring.pop_record()
+                front, tail, valid = qmod.pop_single(
+                    q.buf[0], q.head[0], q.tail[0], cap)
+                q = q.replace(tail=q.tail.at[0].set(tail))
+                assert (rec is not None) == bool(valid)
+                if rec is not None:
+                    row = telemetry._PACK.unpack(rec)
+                    assert row == expect.pop(0)
+            if do_push:
+                row = (telemetry.TEV_STEP, float(i), 0.5 * i, 0.001, 0.0, 0.0)
+                ok_ring = ring.push_record(telemetry._PACK.pack(*row))
+                buf, head, ok = qmod.push_single(
+                    q.buf[0], q.head[0], q.tail[0], cap,
+                    np.full((6,), float(i), np.float32))
+                q = q.replace(buf=q.buf.at[0].set(buf),
+                              head=q.head.at[0].set(head))
+                assert ok_ring == bool(ok)
+                if ok_ring:
+                    expect.append(row)
+        drained = telemetry.drain(ring)
+        np.testing.assert_array_equal(
+            drained, np.asarray(expect, np.float64).reshape(-1, 6))
+    finally:
+        ring.close()
+
+
+def test_telemetry_writer_drops_when_full():
+    cap = 8  # SPSC ring holds cap-1 records
+    ring = _ring(cap, "drop")
+    try:
+        w = telemetry.TelemetryWriter(ring)
+        for i in range(cap + 3):
+            w.emit(telemetry.TEV_EPOCH, float(i), 0.0, 0.0)
+        assert w.emitted == cap - 1
+        assert w.dropped == 4
+        assert telemetry.drain(ring).shape == (cap - 1, 6)
+        assert telemetry.drain(ring).shape == (0, 6)  # drained dry
+    finally:
+        ring.close()
+
+
+def test_records_to_events_folds_spans_and_histograms():
+    rec = TraceRecorder()
+    rec.enabled = True
+    reg = MetricsRegistry()
+    rows = np.asarray([
+        [telemetry.TEV_STEP, 32.0, 1.0, 0.010, 0.0, 0.0],
+        [telemetry.TEV_ISSUE, 2.0, 1.011, 0.002, 0.0, 0.0],
+        [telemetry.TEV_EPOCH, 5.0, 1.0, 0.015, 0.004, 0.0],
+        [telemetry.TEV_OCC, 0.0, 1.016, 0.0, 3.0, 2.0],
+    ], np.float64)
+    n = telemetry.records_to_events(rows, worker=3, pid=0,
+                                    recorder=rec, registry=reg)
+    assert n == 4
+    names = [(e["name"], e["tid"]) for e in rec.events]
+    assert names == [("step", 3), ("exchange_issue", 3), ("epoch", 3)]
+    assert rec.events[0]["args"] == {"cycles": 32}
+    assert rec.events[1]["args"] == {"tier": 2}
+    assert rec.events[2]["args"] == {"epoch": 5, "wait_s": 0.004}
+    snap = reg.snapshot()
+    assert snap["procs.phase.step.s"]["count"] == 1
+    assert snap["procs.worker.3.epoch.s"]["sum"] == pytest.approx(0.015)
+    assert snap["procs.worker.3.wait.s"]["sum"] == pytest.approx(0.004)
+    assert snap["procs.ring.occupancy"]["max"] == 3.0
+
+
+# --------------------------------------------------------- trace recorder
+def test_trace_recorder_export_is_valid_perfetto(tmp_path):
+    rec = TraceRecorder()
+    rec.span("ignored", 0.0, 1.0)  # disabled: no-op
+    assert rec.events == []
+    rec.enabled = True
+    rec.set_process(0, "procs:local")
+    rec.set_track(0, 0, "worker 0")
+    rec.set_track(0, TID_SESSION, "session")
+    rec.span("step", 1.0, 0.5, pid=0, tid=0, cat="worker")
+    with rec.span_ctx("epoch_window", args={"epochs": 2}):
+        pass
+    rec.instant("recovery_incident", cat="recovery", args={"incarnation": 1})
+    path = str(tmp_path / "t.json")
+    rec.export(path)
+    doc = oschema.validate_trace_file(path)
+    evs = doc["traceEvents"]
+    metas = [e for e in evs if e["ph"] == "M"]
+    assert {(m["name"], m["args"]["name"]) for m in metas} == {
+        ("process_name", "procs:local"), ("thread_name", "worker 0"),
+        ("thread_name", "session")}
+    span = next(e for e in evs if e["name"] == "step")
+    assert span["ts"] == 1e6 and span["dur"] == 0.5e6  # seconds -> µs
+    assert any(e["ph"] == "i" and e["name"] == "recovery_incident"
+               for e in evs)
+    assert doc["otherData"]["dropped"] == 0
+
+
+def test_trace_recorder_bounded_buffer():
+    rec = TraceRecorder(max_events=5)
+    rec.enabled = True
+    for i in range(9):
+        rec.span(f"s{i}", float(i), 0.1)
+    assert len(rec.events) == 5
+    assert rec.dropped == 4
+    rec.clear()
+    assert rec.events == [] and rec.dropped == 0
+
+
+def test_validate_trace_rejects_malformed():
+    ok = {"traceEvents": [{"name": "a", "ph": "X", "ts": 0, "dur": 1,
+                           "pid": 0, "tid": 0}]}
+    oschema.validate_trace(ok)
+    for bad in (
+        {"traceEvents": [{"name": "a", "ph": "Z", "ts": 0,
+                          "pid": 0, "tid": 0}]},      # unknown phase
+        {"traceEvents": [{"name": "a", "ph": "X", "ts": 0,
+                          "pid": 0, "tid": 0}]},      # span without dur
+        {"traceEvents": [{"ph": "i", "ts": 0, "pid": 0, "tid": 0}]},
+        {"notTraceEvents": []},
+    ):
+        with pytest.raises(ValueError):
+            oschema.validate_trace(bad)
+
+
+# ----------------------------------------------------------- stats schema
+def test_validate_stats_rejects_malformed():
+    good = {"schema": oschema.STATS_SCHEMA, "engine": "single",
+            "cycle": 0, "epoch": 0,
+            "ports": {"tx": {"tx": {"sent": 0, "pending": 0,
+                                    "occupancy": 0, "credit": 0}},
+                      "rx": {"rx": {"received": 0, "occupancy": 0,
+                                    "credit": 0}}}}
+    oschema.validate_stats(good)
+    bad_engine = dict(good, engine="warp")
+    with pytest.raises(ValueError):
+        oschema.validate_stats(bad_engine)
+    with pytest.raises(ValueError):
+        oschema.validate_stats(dict(good, bogus=1))
+    with pytest.raises(ValueError):
+        oschema.validate_stats({k: v for k, v in good.items()
+                                if k != "ports"})
+    broken_tx = json.loads(json.dumps(good))
+    del broken_tx["ports"]["tx"]["tx"]["credit"]
+    with pytest.raises(ValueError):
+        oschema.validate_stats(broken_tx)
+    with pytest.raises(ValueError):
+        oschema.validate_stats(dict(good, bridges=[{"link": 0}]))
+
+
+def test_stats_schema_every_engine(closing):
+    """The ONE stats layout, engine-independent: single/graph/fused via
+    the K=1 chain sessions, procs via a 2-worker fleet."""
+    sims = dict(_sessions_k1())
+    sims["procs"] = procs_build(build_chain(capacity=2), n_workers=2,
+                                partition=[0, 1, 1], K=1)
+    closing(sims["procs"])
+    for name, sim in sims.items():
+        sim.reset(0)
+        sim.tx("tx").send_many([[1.0, 0.0], [2.0, 0.0]])
+        sim.run(cycles=3)
+        sim.rx("rx")
+        st = oschema.validate_stats(sim.stats())
+        assert st["engine"] == name
+        assert "metrics" in st, name
+        if name == "single":
+            assert set(st["detail"]) == {"push_count", "pop_count"}
+
+
+# ---------------------------------------- tracing is observation-only
+def test_traced_bit_identical_in_process(tmp_path):
+    """single/graph/fused: the io_script traffic is bit-identical with
+    the flight recorder on vs off."""
+    ref = {}
+    for name, sim in _sessions_k1().items():
+        sim.reset(0)
+        ref[name] = io_script(sim, n_steps=12)
+    for name, sim in _sessions_k1().items():
+        sim.reset(0)
+        with sim.trace(str(tmp_path / f"{name}.json")):
+            got = io_script(sim, n_steps=12)
+        for step, (a, b) in enumerate(zip(ref[name], got)):
+            np.testing.assert_array_equal(a, b,
+                                          err_msg=f"{name} boundary {step}")
+        doc = oschema.validate_trace_file(str(tmp_path / f"{name}.json"))
+        assert any(e["name"] == "epoch_window" for e in doc["traceEvents"])
+
+
+def test_procs_trace_per_worker_spans_bit_identical(closing, tmp_path):
+    """4-worker fleet: sim.trace() yields a Perfetto-valid timeline with
+    one track per worker carrying the full phase taxonomy, while the
+    host-visible traffic stays bit-identical to an untraced run."""
+    path = str(tmp_path / "procs.json")
+    sim = procs_build(build_chain(4, capacity=2), n_workers=4,
+                      partition=[0, 1, 2, 3], K=2)
+    closing(sim)
+    sim.reset(0)
+    with sim.trace(path):
+        got = io_script(sim, n_steps=12)
+    st = oschema.validate_stats(sim.stats())
+    assert st["metrics"]["procs.phase.epoch.s"]["count"] > 0
+    sim.engine.close()
+
+    doc = oschema.validate_trace_file(path)
+    spans = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    worker_tids = {e["tid"] for e in spans if e.get("cat") == "worker"}
+    assert worker_tids == {0, 1, 2, 3}
+    names = {e["name"] for e in spans if e.get("cat") == "worker"}
+    assert {"ingest", "step", "exchange_issue", "exchange_commit",
+            "flush", "epoch"} <= names
+    text = oreport.summarize(doc)
+    assert "phase breakdown" in text and "straggler" in text
+
+    sim2 = procs_build(build_chain(4, capacity=2), n_workers=4,
+                       partition=[0, 1, 2, 3], K=2)
+    closing(sim2)
+    sim2.reset(0)
+    got2 = io_script(sim2, n_steps=12)
+    assert len(got) == len(got2)
+    for step, (a, b) in enumerate(zip(got, got2)):
+        np.testing.assert_array_equal(a, b, err_msg=f"boundary {step}")
+
+
+def test_recovery_incident_lands_in_trace(closing, tmp_path):
+    """Kill drill under the recorder: the healed fleet's timeline holds
+    the recovery_incident instant tagged with the new incarnation."""
+    path = str(tmp_path / "drill.json")
+    sim = procs_build(build_chain(3, capacity=4), n_workers=2,
+                      partition=[0, 0, 1], K=1, on_fault="recover",
+                      snapshot_every=2, backoff_s=0.0, fault_plan="kill:1@3")
+    closing(sim)
+    sim.reset(0)
+    with sim.trace(path):
+        io_script(sim, n_steps=8, seed=1)
+    st = sim.stats()
+    assert st["faults"]["restarts"] == 1
+    assert st["metrics"]["recovery.restarts"] >= 1.0
+
+    doc = oschema.validate_trace_file(path)
+    incidents = [e for e in doc["traceEvents"]
+                 if e.get("ph") == "i" and e["name"] == "recovery_incident"]
+    assert len(incidents) == 1
+    assert incidents[0]["args"]["incarnation"] == 1
+    assert incidents[0]["args"]["fault"] == "WorkerDiedError"
+    assert any(e["name"] == "snapshot" for e in doc["traceEvents"]
+               if e.get("ph") == "X")
+    text = oreport.summarize(doc)
+    assert "recovery_incident" in text
+
+
+def test_bridged_fleet_connect_vs_wait(closing, tmp_path):
+    """2-host fleet: stats separate the one-time rendezvous cost
+    (connect_s) from the steady-state pump wait_fraction, and traced
+    traffic stays bit-identical."""
+    ref = procs_build(build_chain(3, capacity=4), n_workers=2,
+                      partition=[0, 0, 1], K=1)
+    closing(ref)
+    ref.reset(0)
+    want = io_script(ref, n_steps=8)
+    ref.engine.close()
+
+    path = str(tmp_path / "fleet.json")
+    sim = procs_build(build_chain(3, capacity=4), n_workers=2,
+                      partition=[0, 0, 1], K=1, hosts=2)
+    closing(sim)
+    sim.reset(0)
+    with sim.trace(path):
+        got = io_script(sim, n_steps=8)
+    st = oschema.validate_stats(sim.stats())
+    assert st["bridges"], "2-host fleet must report bridge rows"
+    for row in st["bridges"]:
+        assert row["connect_s"] >= 0.0
+        assert 0.0 <= row["wait_fraction"] <= 1.0
+    doc = oschema.validate_trace_file(path)
+    assert any(e["name"] == "bridge_counters" for e in doc["traceEvents"])
+    for step, (a, b) in enumerate(zip(want, got)):
+        np.testing.assert_array_equal(a, b, err_msg=f"boundary {step}")
+
+
+# -------------------------------------------------------- perfmodel drift
+def _phase_snapshot(step, issue_sum, commit_sum, ingest, flush, epoch,
+                    n_epochs=4, n_tiers=2):
+    reg = MetricsRegistry()
+    for _ in range(n_epochs):
+        reg.observe("procs.phase.step.s", step)
+        reg.observe("procs.phase.ingest.s", ingest)
+        reg.observe("procs.phase.flush.s", flush)
+        reg.observe("procs.phase.epoch.s", epoch)
+        for _ in range(n_tiers):
+            reg.observe("procs.phase.exchange_issue.s",
+                        issue_sum / (n_epochs * n_tiers))
+            reg.observe("procs.phase.exchange_commit.s",
+                        commit_sum / (n_epochs * n_tiers))
+    return reg.snapshot()
+
+
+def test_compute_drift_serial_arithmetic():
+    snap = _phase_snapshot(step=0.010, issue_sum=0.008, commit_sum=0.004,
+                           ingest=0.001, flush=0.0005, epoch=0.016)
+    reg = MetricsRegistry()
+    out = drift.compute_drift(snap, overlap=False, registry=reg)
+    assert out["t_step"] == pytest.approx(0.010)
+    # comm phases divide their sample SUM by epochs (one sample per
+    # tier*epoch), so 8 issue + 8 commit samples fold to per-epoch cost
+    assert out["t_comm"] == pytest.approx((0.008 + 0.004) / 4)
+    assert out["t_residual"] == pytest.approx(0.0015)
+    assert out["predicted_s"] == pytest.approx(0.010 + 0.003 + 0.0015)
+    assert out["model_drift"] == pytest.approx(
+        abs(0.016 - 0.0145) / 0.016)
+    assert reg.snapshot()["perfmodel.model_drift"] == \
+        pytest.approx(out["model_drift"])
+
+
+def test_compute_drift_overlap_and_empty():
+    assert drift.compute_drift({}) == {}
+    snap = _phase_snapshot(step=0.010, issue_sum=0.008, commit_sum=0.004,
+                           ingest=0.0, flush=0.0, epoch=0.012)
+    out = drift.compute_drift(snap, overlap=True)
+    assert out["predicted_s"] == pytest.approx(max(0.010, 0.003))
+
+
+# ---------------------------------------------------------------- report
+def test_report_summarize_synthetic():
+    doc = {"traceEvents": [
+        {"name": "step", "cat": "worker", "ph": "X", "ts": 0.0,
+         "dur": 2e4, "pid": 0, "tid": 0},
+        {"name": "exchange_commit", "cat": "worker", "ph": "X",
+         "ts": 2e4, "dur": 6e4, "pid": 0, "tid": 0},
+        {"name": "step", "cat": "worker", "ph": "X", "ts": 0.0,
+         "dur": 1e4, "pid": 0, "tid": 1},
+        {"name": "recovery_incident", "cat": "recovery", "ph": "i",
+         "s": "p", "ts": 5e4, "pid": 0, "tid": TID_SESSION,
+         "args": {"incarnation": 2}},
+        {"name": "thread_name", "ph": "M", "pid": 0, "tid": 0,
+         "args": {"name": "worker 0"}},
+    ]}
+    text = oreport.summarize(oschema.validate_trace(doc), top=2)
+    assert "exchange_commit" in text
+    assert "worker 0" in text           # straggler named via metadata
+    assert "recovery_incident" in text
+    assert "incarnation" in text

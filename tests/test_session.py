@@ -429,7 +429,7 @@ def test_monitors_and_stats():
     s1 = build_chain().build().reset(0)
     s1.tx("tx").send([1.0, 0.0])
     s1.run(cycles=10)
-    assert int(s1.stats()["push_count"].sum()) >= 3
+    assert int(s1.stats()["detail"]["push_count"].sum()) >= 3
 
 
 def test_session_basics_and_errors():
